@@ -1,0 +1,75 @@
+"""Paper Table 1 / Figure 7: AtacWorks end-to-end training throughput.
+
+Trains the paper's 25-layer 1D dilated-conv ResNet on synthetic ATAC-seq
+tracks (the real dataset is dbGaP-gated; DESIGN.md §8) and reports
+sec/step and samples/sec for:
+
+  * our BRGEMM-formulated layer ('ref' decomposition — structurally the
+    Pallas kernel's computation) vs the vendor-library conv ('xla'),
+  * FP32 vs BF16 (the paper's Cooper Lake comparison, C=K 15→16).
+
+Defaults are container-scaled (batch 2, width 6000, 3 steps); ``--full``
+uses the paper's 60 000-wide segments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro import configs
+from repro.data.synthetic import make_batch
+from repro.models import get_model
+from repro.train.train_step import init_state, make_train_step
+
+
+def run(full: bool = False, iters: int = 2):
+    width = 60_000 if full else 3_000
+    batch = 8 if full else 1
+    rows = []
+    for arch in ("atacworks", "atacworks-bf16"):
+        cfg = configs.get(arch)
+        for backend in ("ref", "xla"):
+            import os
+            os.environ["REPRO_CONV_BACKEND"] = backend
+            model = get_model(cfg)
+            params = model.init_params(jax.random.key(0), cfg)
+            state = init_state(params)
+            step = jax.jit(make_train_step(cfg, accum_steps=1, total_steps=100))
+            data = jax.tree.map(jnp.asarray, make_batch(cfg, batch, width))
+
+            def one(state_and_batch):
+                s, b = state_and_batch
+                return step(s, b)
+
+            # time full train steps (fwd+bwd+optimizer)
+            t = time_fn(lambda s=state, b=data: step(s, b)[1]["loss"],
+                        iters=iters, warmup=1)
+            rows.append(dict(arch=arch, backend=backend, width=width,
+                             batch=batch, sec_per_step=t,
+                             samples_per_sec=batch / t))
+            os.environ.pop("REPRO_CONV_BACKEND", None)
+    for r in rows:
+        base = next(x for x in rows if x["arch"] == r["arch"]
+                    and x["backend"] == "xla")
+        r["speedup_vs_library"] = base["sec_per_step"] / r["sec_per_step"]
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(full=full)
+    cols = ["arch", "backend", "width", "batch", "sec_per_step",
+            "samples_per_sec", "speedup_vs_library"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(full="--full" in sys.argv)

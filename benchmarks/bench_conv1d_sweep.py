@@ -1,0 +1,103 @@
+"""Paper Figures 4/5/6: efficiency & generality sweep of the 1D dilated
+convolution layer across output width, filter width, channels, filters,
+dilation, and precision.
+
+The paper compares LIBXSMM-BRGEMM against oneDNN on a CPU; the TPU-target
+analogue here compares the BRGEMM *formulation* (the paper's S-GEMM
+decomposition, ``backend='ref'``, which is what the Pallas kernel computes
+tap-by-tap) against the vendor-library general convolution
+(``backend='xla'`` → ``lax.conv_general_dilated``), both jitted, measured
+on the host CPU.  Wall-clock on this 1-core container is a *relative*
+signal; the TPU-side efficiency story is §Roofline's job.
+
+Emits CSV: fig,mode,dtype,N,C,K,S,d,Q,sec,gflops,speedup_vs_library
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import conv1d_flops, time_fn
+from repro.kernels import ops as kops
+
+# (figure, dtype, C, K, d) — the paper's three plotted parameter sets
+FIGSETS = [
+    ("fig4", jnp.float32, 15, 15, 8),
+    ("fig5", jnp.float32, 64, 64, 1),
+    ("fig6", jnp.bfloat16, 32, 32, 4),
+]
+Q_SET = [1000, 5000, 20000]
+Q_SET_FULL = [1000, 2000, 5000, 10000, 20000, 60000]
+S_SET = [5, 25, 51]
+S_SET_FULL = [1, 5, 9, 15, 21, 25, 31, 49, 51]
+N = 4  # batch (paper used 56/64; scaled to the 1-core container)
+
+
+def _fwd(backend, w, dilation):
+    @jax.jit
+    def f(x):
+        return kops.conv1d(x, w, dilation=dilation, padding="SAME",
+                           backend=backend)
+    return f
+
+
+def _fwd_bwd(backend, dilation):
+    @jax.jit
+    def f(x, w):
+        def loss(x, w):
+            return kops.conv1d(x, w, dilation=dilation, padding="SAME",
+                               backend=backend).astype(jnp.float32).sum()
+        return jax.grad(loss, argnums=(0, 1))(x, w)
+    return f
+
+
+def run(full: bool = False, iters: int = 3):
+    rows = []
+    qs = Q_SET_FULL if full else Q_SET
+    ss = S_SET_FULL if full else S_SET
+    for fig, dtype, C, K, d in FIGSETS:
+        for S in ss:
+            key = jax.random.key(0)
+            w = (jax.random.normal(key, (S, K, C), jnp.float32) * 0.05).astype(dtype)
+            for Q in qs:
+                x = jax.random.normal(jax.random.key(1), (N, C, Q), jnp.float32).astype(dtype)
+                flops = conv1d_flops(N, C, K, S, Q)
+                res = {}
+                for mode in ("ref", "xla"):
+                    t = time_fn(_fwd(mode, w, d), x, iters=iters, warmup=1)
+                    res[mode] = t
+                    rows.append(dict(fig=fig, mode=f"fwd-{mode}",
+                                     dtype=str(jnp.dtype(dtype)), N=N, C=C,
+                                     K=K, S=S, d=d, Q=Q, sec=t,
+                                     gflops=flops / t / 1e9))
+                for r in rows[-2:]:
+                    r["speedup_vs_library"] = res["xla"] / r["sec"]
+                tb = {}
+                for mode in ("ref", "xla"):
+                    t = time_fn(_fwd_bwd(mode, d), x, w, iters=iters, warmup=1)
+                    tb[mode] = t
+                    rows.append(dict(fig=fig, mode=f"fwdbwd-{mode}",
+                                     dtype=str(jnp.dtype(dtype)), N=N, C=C,
+                                     K=K, S=S, d=d, Q=Q, sec=t,
+                                     gflops=3 * flops / t / 1e9))
+                for r in rows[-2:]:
+                    r["speedup_vs_library"] = tb["xla"] / r["sec"]
+    return rows
+
+
+def main(full: bool = False):
+    rows = run(full=full)
+    cols = ["fig", "mode", "dtype", "N", "C", "K", "S", "d", "Q", "sec",
+            "gflops", "speedup_vs_library"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r.get(c, '')}" if not isinstance(r.get(c), float)
+                       else f"{r[c]:.4g}" for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(full="--full" in sys.argv)

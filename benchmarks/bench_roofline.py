@@ -1,0 +1,52 @@
+"""Deliverable (g): render the 40-cell (arch × shape) roofline table from
+the dry-run results database (experiments/dryrun.json, written by
+``repro.launch.dryrun``).  Does not compile anything itself."""
+from __future__ import annotations
+
+import json
+import os
+
+DB = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun.json")
+
+COLS = ["arch", "shape", "status", "dominant", "compute_s", "memory_s",
+        "collective_s", "roofline_fraction", "useful_ratio"]
+
+
+def rows(db_path: str = DB):
+    with open(db_path) as f:
+        db = json.load(f)
+    out = []
+    for key, rec in sorted(db.items()):
+        if rec.get("mesh") != "single":
+            continue
+        t = rec.get("terms", {})
+        out.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "status": rec["status"] if "terms" in rec or rec["status"] != "ok"
+            else "ok(no-probe)",
+            "dominant": t.get("dominant", ""),
+            "compute_s": t.get("compute_s", ""),
+            "memory_s": t.get("memory_s", ""),
+            "collective_s": t.get("collective_s", ""),
+            "roofline_fraction": t.get("roofline_fraction", ""),
+            "useful_ratio": t.get("useful_ratio", ""),
+        })
+    return out
+
+
+def main():
+    try:
+        rs = rows()
+    except FileNotFoundError:
+        print("no dry-run database yet; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return []
+    print(",".join(COLS))
+    for r in rs:
+        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+                       for c in COLS))
+    return rs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Paper Figures 8-10 / Table 2: multi-worker data-parallel scaling.
+
+The paper scales AtacWorks training 1→16 CPU sockets with MPI.  The
+mesh-native analogue: lower the SAME train step against data-parallel
+meshes of 1..16 workers (placeholder devices, dry-run style — this is a
+compile-time scaling study, honest on a 1-core container) and derive, per
+worker count:
+
+  * per-device compute/memory roofline terms (should stay ~flat = linear
+    scaling of throughput),
+  * gradient all-reduce bytes per device (the scaling tax; paper hides it
+    under MPI),
+  * predicted scaling efficiency = t(1 worker) / t(N workers) where
+    t = max(compute, memory, collective) terms.
+
+Runs in a SUBPROCESS so the placeholder-device XLA_FLAGS never leak into
+the benchmark process (smoke tests and other benches must see 1 device).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+import json, dataclasses
+import jax
+from repro import configs
+from repro.configs.base import ShapeConfig
+from repro.launch.specs import lower_cell
+from repro.roofline import analysis as ra
+
+cfg = configs.get("atacworks")
+out = []
+for workers in (1, 2, 4, 8, 16):
+    mesh = jax.make_mesh((workers,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    # batch scales with workers, per the paper's §4.5.1 protocol
+    shape = ShapeConfig("scale", "train", 60_000, 4 * workers)
+    lowered, meta = lower_cell(cfg, shape, mesh, accum_steps=1)
+    compiled = lowered.compile()
+    m = ra.compile_metrics(compiled)
+    t_comp = m["flops"] / ra.PEAK_FLOPS
+    t_mem = m["bytes"] / ra.HBM_BW
+    t_coll = m["coll_bytes"] / ra.ICI_BW
+    out.append(dict(workers=workers, flops_per_dev=m["flops"],
+                    bytes_per_dev=m["bytes"], coll_bytes_per_dev=m["coll_bytes"],
+                    step_bound_s=max(t_comp, t_mem, t_coll)))
+print("JSON:" + json.dumps(out))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", _CHILD], env=env,
+                          capture_output=True, text=True, timeout=1800)
+    for line in proc.stdout.splitlines():
+        if line.startswith("JSON:"):
+            rows = json.loads(line[5:])
+            break
+    else:
+        raise RuntimeError(f"scaling child failed:\n{proc.stdout}\n{proc.stderr}")
+    base = rows[0]["step_bound_s"]
+    for r in rows:
+        # throughput per worker is ~flat => efficiency = bound(1)/bound(N)
+        r["scaling_efficiency"] = base / r["step_bound_s"]
+    return rows
+
+
+def main():
+    rows = run()
+    cols = ["workers", "flops_per_dev", "bytes_per_dev", "coll_bytes_per_dev",
+            "step_bound_s", "scaling_efficiency"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # container-scaled
+    PYTHONPATH=src python -m benchmarks.run --full     # paper-scale grids
+
+  bench_conv1d_sweep   Figs 4/5/6  (efficiency/generality sweep)
+  bench_atacworks_e2e  Table 1/Fig 7 (end-to-end training)
+  bench_scaling        Figs 8-10/Table 2 (data-parallel scaling)
+  bench_roofline       §Roofline table from the dry-run database
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    full = "--full" in argv
+    only = [a for a in argv if not a.startswith("-")]
+    benches = {
+        "conv1d_sweep": lambda: _run("bench_conv1d_sweep", full=full),
+        "atacworks_e2e": lambda: _run("bench_atacworks_e2e", full=full),
+        "scaling": lambda: _run("bench_scaling"),
+        "roofline": lambda: _run("bench_roofline"),
+    }
+    failures = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"\n=== {name} " + "=" * (60 - len(name)))
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"FAILED {name}: {e!r}")
+        print(f"=== {name} done in {time.time() - t0:.1f}s")
+    return 1 if failures else 0
+
+
+def _run(mod_name: str, **kw):
+    import importlib
+    mod = importlib.import_module(f"benchmarks.{mod_name}")
+    if kw and "full" in mod.main.__code__.co_varnames:
+        return mod.main(**kw)
+    return mod.main()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

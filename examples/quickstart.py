@@ -1,0 +1,50 @@
+"""Quickstart: the paper's 1D dilated convolution layer in 30 lines.
+
+Builds a DilatedConv1D (Chaudhary et al. 2021, BRGEMM formulation), runs
+the forward pass through all three backends — the Pallas TPU kernel
+(interpret mode on CPU), the S-GEMM reference, and the vendor-library XLA
+conv — checks they agree, then takes one gradient step through the
+custom-VJP (Algorithms 2/3/4).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.conv1d import DilatedConv1D
+from repro.kernels import ops as kops
+
+# the paper's flagship configuration: C=K=15, S=51, dilation=8 (AtacWorks)
+N, C, K, S, d, W = 2, 15, 15, 51, 8, 2048
+
+key = jax.random.key(0)
+params = DilatedConv1D.init(key, C, K, S, dtype=jnp.float32)
+x = jax.random.normal(jax.random.key(1), (N, C, W), jnp.float32)
+
+outs = {}
+for backend in ("pallas", "ref", "xla"):
+    outs[backend] = DilatedConv1D.apply(params, x, dilation=d,
+                                        padding="SAME", backend=backend)
+    print(f"{backend:7s} out shape {outs[backend].shape} "
+          f"mean {float(outs[backend].mean()):+.6f}")
+
+np.testing.assert_allclose(outs["pallas"], outs["ref"], rtol=1e-5, atol=1e-5)
+np.testing.assert_allclose(outs["xla"], outs["ref"], rtol=1e-4, atol=1e-4)
+print("all three backends agree ✓")
+
+# one gradient step through the paper's bwd-data (Alg. 3) + bwd-weight (Alg. 4)
+target = jax.random.normal(jax.random.key(2), outs["ref"].shape)
+
+
+def loss_fn(p):
+    y = DilatedConv1D.apply(p, x, dilation=d, padding="SAME", backend="pallas")
+    return jnp.mean((y - target) ** 2)
+
+
+loss, grads = jax.value_and_grad(loss_fn)(params)
+params2 = jax.tree.map(lambda p, g: p - 0.1 * g, params, grads)
+loss2 = loss_fn(params2)
+print(f"loss {float(loss):.4f} -> {float(loss2):.4f} after one step "
+      f"({'improved ✓' if loss2 < loss else 'NOT improved ✗'})")
+assert loss2 < loss

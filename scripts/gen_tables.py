@@ -1,0 +1,103 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun.json.  Usage:
+
+    PYTHONPATH=src python scripts/gen_tables.py [experiments/dryrun.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(v):
+    if v == "" or v is None:
+        return ""
+    if v == 0:
+        return "0"
+    return f"{v:.3g}"
+
+
+def gib(v):
+    return f"{v / 2**30:.2f}"
+
+
+def main(path="experiments/dryrun.json"):
+    with open(path) as f:
+        db = json.load(f)
+
+    archs, shapes = [], []
+    for rec in db.values():
+        if rec["arch"] not in archs:
+            archs.append(rec["arch"])
+        if rec["shape"] not in shapes:
+            shapes.append(rec["shape"])
+    order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    shapes = [s for s in order if s in shapes]
+
+    print("### Dry-run matrix (status / compile time / per-device temp memory)\n")
+    print("| arch | shape | single-pod (256) | multi-pod (512) | accum |")
+    print("|---|---|---|---|---|")
+    for a in sorted(archs):
+        for s in shapes:
+            cells, accum = [], ""
+            for mesh in ("single", "multi"):
+                rec = db.get(f"{a}|{s}|{mesh}")
+                if rec is None:
+                    cells.append("–")
+                elif rec["status"] == "skip":
+                    cells.append("skip")
+                elif rec["status"] == "error":
+                    cells.append("ERROR")
+                else:
+                    mem = rec.get("memory", {})
+                    t = mem.get("temp_size_in_bytes", 0)
+                    arg = mem.get("argument_size_in_bytes", 0)
+                    cells.append(f"ok {rec['meta']['compile_s']}s, "
+                                 f"temp {gib(t)} GiB, args {gib(arg)} GiB")
+                    accum = rec["meta"].get("accum_steps", "")
+            print(f"| {a} | {s} | {cells[0]} | {cells[1]} | {accum} |")
+
+    print("\n### Roofline (single-pod 256 chips; terms in seconds/step)\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL_FLOPs | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for a in sorted(archs):
+        for s in shapes:
+            rec = db.get(f"{a}|{s}|single")
+            if rec is None or rec["status"] == "skip":
+                if rec is not None:
+                    print(f"| {a} | {s} | — | — | — | skip: "
+                          f"{rec.get('why', '')[:40]} | | | |")
+                continue
+            t = rec.get("terms")
+            if not t:
+                print(f"| {a} | {s} | (no probe: "
+                      f"{rec.get('probe_error', '?')[:40]}) | | | | | | |")
+                continue
+            print(f"| {a} | {s} | {fmt_s(t['compute_s'])} | "
+                  f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+                  f"{t['dominant']} | {t['model_flops']:.3g} | "
+                  f"{t['useful_ratio']:.3f} | {t['roofline_fraction']:.4f} |")
+
+    # hillclimb candidates
+    print("\n### Hillclimb candidate ranking\n")
+    rows = []
+    for a in sorted(archs):
+        for s in shapes:
+            rec = db.get(f"{a}|{s}|single")
+            if rec and rec.get("terms"):
+                t = rec["terms"]
+                rows.append((t["roofline_fraction"], t["collective_s"]
+                             / max(t["dominant_s"], 1e-30), a, s,
+                             t["dominant"]))
+    rows.sort()
+    print("worst roofline fractions:")
+    for fr, cr, a, s, dom in rows[:5]:
+        print(f"  {a} × {s}: frac={fr:.4f} dominant={dom}")
+    print("most collective-bound:")
+    for fr, cr, a, s, dom in sorted(rows, key=lambda r: -r[1])[:5]:
+        print(f"  {a} × {s}: coll/dominant={cr:.3f} frac={fr:.4f}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

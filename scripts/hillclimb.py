@@ -1,0 +1,110 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: lower one cell with a named optimization-variant
+stack, derive roofline terms via the probe system, append to
+experiments/perf.json.
+
+    PYTHONPATH=src python scripts/hillclimb.py <arch> <shape> <variant> [...]
+
+Variants compose left-to-right (e.g. ``cap1.25 xent512 rematdots grads``).
+"""
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import lower_cell
+from repro.roofline import analysis as ra
+from repro.roofline import flops as rf
+
+PERF_DB = "experiments/perf.json"
+
+
+def apply_variant(cfg, train_kwargs, name):
+    r = dataclasses.replace
+    if name == "baseline":
+        return cfg, train_kwargs
+    if name.startswith("cap"):
+        return r(cfg, moe=r(cfg.moe, capacity_factor=float(name[3:]))), train_kwargs
+    if name.startswith("xent"):
+        return r(cfg, xent_chunk=int(name[4:])), train_kwargs
+    if name == "rematdots":
+        return r(cfg, remat_policy="dots"), train_kwargs
+    if name == "grads":
+        return cfg, {**train_kwargs, "constrain_grads": True}
+    if name == "compress":
+        return cfg, {**train_kwargs, "grad_compression": True}
+    if name.startswith("attnchunk"):
+        return r(cfg, attn_chunk=int(name[9:])), train_kwargs
+    if name == "absorb":  # MLA absorbed decode (latent-space attention)
+        return cfg, {**train_kwargs, "__serve_absorb": True}
+    if name == "flash":  # Pallas flash attention (kernels/flash_attention.py)
+        return r(cfg, attn_impl="flash", flash_phantom=True), train_kwargs
+    raise ValueError(name)
+
+
+def measure(cfg, shape, mesh, train_kwargs):
+    serve_kwargs = {}
+    if train_kwargs.pop("__serve_absorb", False):
+        serve_kwargs["absorb"] = True
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    lowered, meta = lower_cell(cfg, shape, mesh, train_kwargs=train_kwargs,
+                               serve_kwargs=serve_kwargs)
+    compiled = lowered.compile()
+    full_compile_s = time.time() - t0
+    accum = meta.get("accum_steps", 1)
+    plan, rows, full_row = ra.probe_plan(cfg, shape, accum)
+    if len(plan) == 1 and plan[0].cfg is cfg:
+        m = ra.compile_metrics(compiled)
+        full = {k: m[k] for k in ("flops", "bytes", "bytes_raw", "coll_bytes")}
+    else:
+        pm = []
+        for p in plan:
+            lo, _ = lower_cell(p.cfg, p.shape, mesh, accum_steps=p.accum,
+                               unroll_accum=True, train_kwargs=train_kwargs,
+                               serve_kwargs=serve_kwargs)
+            pm.append(ra.compile_metrics(lo.compile()))
+        full = ra.extrapolate(pm, rows, full_row)
+    corr = ra.ssd_scan_correction(cfg, shape, n_chips)
+    fcorr = ra.flash_correction(cfg, shape, n_chips)
+    full = {k: full[k] + corr.get(k, 0.0) + fcorr.get(k, 0.0) for k in full}
+    terms = ra.roofline_terms(full, n_chips, rf.model_flops(cfg, shape),
+                              rf.model_bytes(cfg, shape))
+    terms["compile_s"] = round(full_compile_s, 1)
+    return full, terms
+
+
+def main():
+    arch, shape_name, *variants = sys.argv[1:]
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    train_kwargs = {}
+    for v in variants:
+        cfg, train_kwargs = apply_variant(cfg, train_kwargs, v)
+    mesh = make_production_mesh()
+    full, terms = measure(cfg, shape, mesh, train_kwargs)
+    key = f"{arch}|{shape_name}|{'+'.join(variants) or 'baseline'}"
+    try:
+        db = json.load(open(PERF_DB))
+    except (OSError, json.JSONDecodeError):
+        db = {}
+    db[key] = {"per_device": full, "terms": terms,
+               "train_kwargs": {k: True for k in train_kwargs}}
+    os.makedirs("experiments", exist_ok=True)
+    json.dump(db, open(PERF_DB, "w"), indent=1, sort_keys=True)
+    print(f"{key}: compute={terms['compute_s']:.3g}s "
+          f"memory={terms['memory_s']:.3g}s "
+          f"collective={terms['collective_s']:.3g}s "
+          f"dominant={terms['dominant']} frac={terms['roofline_fraction']:.4f} "
+          f"useful={terms['useful_ratio']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

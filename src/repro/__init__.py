@@ -1,0 +1,3 @@
+"""repro — BRGEMM 1D dilated convolution (Chaudhary et al. 2021) as a
+production JAX/TPU training+serving framework.  See README.md."""
+__version__ = "1.0.0"

@@ -1,0 +1,168 @@
+"""Fault-tolerant checkpointing.
+
+Design (scaled-down faithfully from the multi-host version):
+
+  * **Atomic commit** — a checkpoint directory is staged as
+    ``step_<n>.tmp`` and ``os.replace``d to ``step_<n>`` only after every
+    array and the manifest are fsync'd; a crash mid-write can never leave a
+    readable-but-corrupt checkpoint, and ``latest_step`` only ever sees
+    committed directories.
+  * **Async writer** — ``save_async`` snapshots the (device) state with
+    ``jax.device_get`` on the caller thread (cheap, one copy) and hands
+    serialization + fsync to a background thread, so the train loop resumes
+    immediately; ``wait()`` joins before the next save or at exit.
+  * **Elastic restore** — arrays are stored whole (per-host shards in the
+    multi-host deployment, concatenated on restore); ``restore`` re-places
+    them against WHATEVER sharding the *current* mesh prescribes, so a
+    checkpoint written on an M-chip mesh restores onto an N-chip mesh
+    (elastic scaling / failed-node replacement).
+  * **Retention** — ``keep`` newest checkpoints are retained; deletion also
+    goes through a rename (to ``.trash``) so a concurrent reader never sees
+    a half-deleted directory.
+
+Layout:
+  <dir>/step_000100/manifest.json       tree structure, shapes, dtypes
+  <dir>/step_000100/arrays.npz          leaf arrays keyed by flat path
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+SEP = "/"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+
+    def name(k):
+        if hasattr(k, "key"):
+            return str(k.key)
+        if hasattr(k, "idx"):
+            return str(k.idx)
+        return str(k)
+
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        flat[SEP.join(name(k) for k in path)] = leaf
+    return flat
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- write ------------------------------------------------------------
+
+    def save(self, state, step: int) -> str:
+        """Synchronous atomic save; returns the committed path."""
+        host_state = jax.device_get(state)
+        return self._write(host_state, step)
+
+    def save_async(self, state, step: int) -> None:
+        """Snapshot now, serialize in the background."""
+        self.wait()
+        host_state = jax.device_get(state)
+        self._thread = threading.Thread(
+            target=self._write, args=(host_state, int(step)), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, host_state, step: int) -> str:
+        final = _step_dir(self.directory, step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(host_state)
+        arrays, manifest = {}, {"step": step, "leaves": {}}
+        for k, v in flat.items():
+            arr = np.asarray(v)
+            arrays[k] = arr
+            manifest["leaves"][k] = {"shape": list(arr.shape),
+                                     "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, "arrays.npz"), "wb") as f:
+            np.savez(f, **arrays)
+            f.flush()
+            os.fsync(f.fileno())
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)  # atomic commit
+        self._gc()
+        return final
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            victim = _step_dir(self.directory, s)
+            trash = victim + ".trash"
+            os.replace(victim, trash)
+            shutil.rmtree(trash, ignore_errors=True)
+
+    # -- read -------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith((".tmp", ".trash")):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: int | None = None):
+        """Restore into the structure (and shardings) of ``template``.
+
+        ``template`` may hold concrete arrays or ShapeDtypeStructs carrying
+        NamedShardings; each loaded array is ``device_put`` against the
+        template's sharding — this is the elastic-resharding path: the
+        stored arrays are mesh-agnostic, placement happens here.
+        """
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.directory}")
+        path = _step_dir(self.directory, step)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        flat_t = _flatten(template)
+
+        def put(key, tmpl):
+            arr = data[key]
+            want_dtype = jnp.dtype(tmpl.dtype)
+            arr = arr.astype(want_dtype) if arr.dtype != want_dtype else arr
+            sharding = getattr(tmpl, "sharding", None)
+            if sharding is not None and not callable(sharding):
+                return jax.device_put(arr, sharding)
+            return jnp.asarray(arr)
+
+        restored_flat = {k: put(k, v) for k, v in flat_t.items()}
+        leaves_t, treedef = jax.tree_util.tree_flatten(template)
+        keys = list(_flatten(template).keys())
+        return jax.tree_util.tree_unflatten(
+            treedef, [restored_flat[k] for k in keys])

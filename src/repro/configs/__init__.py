@@ -1,0 +1,5 @@
+"""Architecture config registry (``repro.configs.get`` / ``names``)."""
+from repro.configs.base import (  # noqa: F401
+    SHAPES, SUBQUADRATIC, ModelConfig, ShapeConfig, get, names, reduced,
+    register,
+)

@@ -1,0 +1,235 @@
+"""Config system: architecture registry + shape sets.
+
+Every assigned architecture gets one ``src/repro/configs/<id>.py`` that
+builds a :class:`ModelConfig` with the exact published hyperparameters and
+registers it.  ``repro.configs.get(name)`` / ``repro.configs.names()`` are
+the public lookup API used by the launcher (``--arch <id>``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Literal, Optional
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "encdec", "vlm", "conv"]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared: int = 0            # shared (always-on) experts
+    score_fn: str = "softmax"    # 'softmax' | 'sigmoid' (DeepSeek-V3)
+    routed_scaling: float = 1.0
+    first_dense_layers: int = 0  # leading dense layers (DeepSeek/Moonlight)
+    d_ff_dense: int = 0          # d_ff of those dense layers
+    capacity_factor: float = 0.0  # 0 => dropless (ragged_dot dispatch)
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    conv_width: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 128             # SSD chunk length
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    # attention details
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    attn_out_bias: bool = False
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"        # 'rmsnorm' | 'layernorm'
+    norm_eps: float = 1e-6
+    mlp_act: str = "swiglu"      # 'swiglu' | 'gelu'
+    mlp_bias: bool = False
+    tie_embeddings: bool = False
+    pos_embedding: str = "rope"  # 'rope' | 'sinusoidal' | 'learned' | 'none'
+    max_position: int = 1 << 20
+    # sub-family configs
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (Zamba2): shared attention block applied every `attn_every` layers
+    attn_every: int = 0
+    # enc-dec (Whisper)
+    n_encoder_layers: int = 0
+    encoder_width: int = 0       # frames fed to the encoder (stub frontend)
+    # vlm (InternVL): number of image tokens prepended (stub frontend)
+    n_image_tokens: int = 0
+    # conv nets (AtacWorks): see configs/atacworks.py
+    conv_channels: int = 0
+    conv_filter: int = 0
+    conv_dilation: int = 1
+    # numerics / compile
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "nothing"  # 'nothing' | 'dots' (§Perf hillclimb)
+    attn_chunk: int = 256        # q-chunk for chunked causal attention
+    # chunk size for the streamed cross-entropy (0 = materialise full
+    # (B,T,V) fp32 logits — the baseline; §Perf hillclimb)
+    xent_chunk: int = 0
+    # attention implementation: 'chunked' (q-chunk scan, scores hit HBM) or
+    # 'flash' (Pallas kernel, kernels/flash_attention.py; §Perf hillclimb)
+    attn_impl: str = "chunked"
+    # roofline probes only: lower flash attention as a traffic-equivalent
+    # surrogate (a CPU-interpreted Pallas kernel would re-materialise the
+    # scores the TPU kernel keeps in VMEM); exact MXU flops are re-added
+    # analytically (roofline/analysis.py flash_correction)
+    flash_phantom: bool = False
+    # roofline probes: unroll layer stacks (exact HloCostAnalysis counts;
+    # see models/common.py scan_layers).  Never set on production configs.
+    unroll_layers: bool = False
+    # notes for DESIGN/EXPERIMENTS
+    source: str = ""
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding-table vocab rounded up to a multiple of 256 so the
+        vocab dim shards evenly on any power-of-two 'model' axis (the
+        MaxText/Megatron convention).  Logits above ``vocab_size`` are
+        masked to -inf in ``logits_from_hidden``."""
+        if self.vocab_size == 0:
+            return 0
+        return (self.vocab_size + 255) // 256 * 256
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS roofline term)."""
+        from repro.roofline import flops as _f
+        return _f.param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.roofline import flops as _f
+        return _f.active_param_count(self)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: Literal["train", "prefill", "decode"]
+    seq_len: int
+    global_batch: int
+    # decode: seq_len is the KV-cache length, one new token is generated
+    microbatch: int = 0          # 0 => launcher picks (grad-accum for train)
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+# archs allowed to run long_500k (sub-quadratic sequence mixing)
+SUBQUADRATIC = {"mamba2-370m", "zamba2-7b"}
+
+_REGISTRY: dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        _load_all()
+    return _REGISTRY[name]
+
+
+def names() -> list[str]:
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests."""
+    small: dict = dict(
+        n_layers=min(cfg.n_layers, 2),
+        d_model=64,
+        n_heads=4 if cfg.n_heads else 0,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads else 0,
+        head_dim=16 if cfg.head_dim else 0,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 256) if cfg.vocab_size else 0,
+        max_position=4096,
+        dtype="float32",
+        remat=False,
+        attn_chunk=64,
+    )
+    if cfg.moe:
+        small["moe"] = dataclasses.replace(
+            cfg.moe, n_experts=min(cfg.moe.n_experts, 8),
+            top_k=min(cfg.moe.top_k, 2), d_ff_expert=32,
+            first_dense_layers=min(cfg.moe.first_dense_layers, 1),
+            d_ff_dense=128 if cfg.moe.d_ff_dense else 0)
+    if cfg.mla:
+        small["mla"] = MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                 qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                 v_head_dim=16)
+    if cfg.ssm:
+        small["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, head_dim=8, chunk=16)
+    if cfg.n_encoder_layers:
+        small["n_encoder_layers"] = 2
+        small["encoder_width"] = 64
+    if cfg.n_image_tokens:
+        small["n_image_tokens"] = 8
+    if cfg.attn_every:
+        small["attn_every"] = 2
+        small["n_layers"] = 4
+    if cfg.family == "conv":
+        small.update(d_model=0, n_heads=0, n_kv_heads=0, head_dim=0, d_ff=0,
+                     conv_channels=min(cfg.conv_channels, 8),
+                     conv_filter=min(cfg.conv_filter, 9), n_layers=3)
+    small.update(overrides)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **small)
+
+
+_LOADED = False
+
+
+def _load_all() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from importlib import import_module
+    for mod in (
+        "moonshot_v1_16b_a3b", "deepseek_v3_671b", "internvl2_2b",
+        "qwen2_7b", "qwen3_8b", "qwen3_14b", "starcoder2_3b",
+        "zamba2_7b", "whisper_large_v3", "mamba2_370m", "atacworks",
+    ):
+        import_module(f"repro.configs.{mod}")

@@ -1,0 +1,38 @@
+"""DeepSeek-V3 671B.  [arXiv:2412.19437; hf]
+
+61L d_model=7168 128H MLA, 1 shared + 256 routed experts top-8 (sigmoid
+routing, scaling 2.5), d_ff_expert=2048, first 3 layers dense (d_ff=18432),
+vocab=129280.  MLA: q_lora 1536, kv_lora 512, nope 128 / rope 64 / v 128.
+"""
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    head_dim=128,
+    d_ff=0,
+    vocab_size=129280,
+    rope_theta=10000.0,
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    moe=MoEConfig(
+        n_experts=256,
+        top_k=8,
+        d_ff_expert=2048,
+        n_shared=1,
+        score_fn="sigmoid",
+        routed_scaling=2.5,
+        first_dense_layers=3,
+        d_ff_dense=18432,
+    ),
+    source="arXiv:2412.19437",
+))

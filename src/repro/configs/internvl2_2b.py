@@ -1,0 +1,23 @@
+"""InternVL2-2B (InternLM2-1.8B backbone + InternViT stub frontend).
+[arXiv:2404.16821; hf]
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.  The ViT frontend is
+a stub per assignment: ``input_specs`` provides 256 precomputed patch
+embeddings prepended to the text sequence.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=92553,
+    rope_theta=1_000_000.0,
+    n_image_tokens=256,
+    source="arXiv:2404.16821",
+))

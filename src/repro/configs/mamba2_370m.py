@@ -1,0 +1,22 @@
+"""Mamba2-370M (SSD, attention-free).  [arXiv:2405.21060]
+
+48L d_model=1024, d_inner=2048 (expand 2), ssm_state=128, head_dim=64 ->
+32 SSM heads, causal conv width 4, vocab=50280.
+"""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    n_layers=48,
+    d_model=1024,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    pos_embedding="none",
+    ssm=SSMConfig(d_state=128, conv_width=4, expand=2, head_dim=64,
+                  n_groups=1, chunk=128),
+    source="arXiv:2405.21060 (unverified tier)",
+))

@@ -1,0 +1,31 @@
+"""Moonlight-16B-A3B (Moonshot).  [hf:moonshotai/Moonlight-16B-A3B; hf]
+
+48L d_model=2048 16H (kv=16, MHA) d_ff_expert=1408 vocab=163840,
+MoE 64 routed experts top-6 + 2 shared, DeepSeek-V3-style sigmoid routing,
+first layer dense.
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=0,
+    vocab_size=163840,
+    rope_theta=50000.0,
+    moe=MoEConfig(
+        n_experts=64,
+        top_k=6,
+        d_ff_expert=1408,
+        n_shared=2,
+        score_fn="sigmoid",
+        routed_scaling=2.446,
+        first_dense_layers=1,
+        d_ff_dense=11264,
+    ),
+    source="hf:moonshotai/Moonlight-16B-A3B",
+))

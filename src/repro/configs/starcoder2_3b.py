@@ -1,0 +1,27 @@
+"""StarCoder2-3B.  [arXiv:2402.19173; hf]
+
+30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152, RoPE, LayerNorm,
+GELU MLP, biases on.
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="starcoder2-3b",
+    family="dense",
+    n_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=12288,
+    vocab_size=49152,
+    norm="layernorm",
+    norm_eps=1e-5,
+    mlp_act="gelu",
+    mlp_bias=True,
+    qkv_bias=True,
+    attn_out_bias=True,
+    rope_theta=100_000.0,
+    tie_embeddings=True,
+    source="arXiv:2402.19173",
+))

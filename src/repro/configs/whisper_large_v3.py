@@ -1,0 +1,32 @@
+"""Whisper-large-v3 backbone.  [arXiv:2212.04356]
+
+Enc-dec: 32 encoder + 32 decoder layers, d_model=1280 20H (MHA kv=20)
+d_ff=5120 vocab=51866, GELU, LayerNorm, learned decoder positions.
+The conv/mel frontend is a STUB per assignment: ``input_specs`` provides
+precomputed frame embeddings (the conv frontend itself is implemented with
+the paper's kernel in models/whisper.py and unit-tested separately).
+"""
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-large-v3",
+    family="encdec",
+    n_layers=32,                 # decoder layers
+    n_encoder_layers=32,
+    encoder_width=1500,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    norm="layernorm",
+    norm_eps=1e-5,
+    mlp_act="gelu",
+    mlp_bias=True,
+    qkv_bias=True,
+    attn_out_bias=True,
+    pos_embedding="learned",
+    max_position=1 << 16,
+    source="arXiv:2212.04356 (unverified tier)",
+))

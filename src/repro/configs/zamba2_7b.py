@@ -1,0 +1,24 @@
+"""Zamba2-7B (hybrid Mamba2 + shared attention blocks).  [arXiv:2411.15242]
+
+81 Mamba2 layers, d_model=3584 (d_inner=7168, ssm_state=64, head_dim=64 ->
+112 SSM heads), with a weight-shared transformer block (32H MHA kv=32,
+d_ff=14336) applied every 6th layer.  vocab=32000.
+"""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    rope_theta=10000.0,
+    ssm=SSMConfig(d_state=64, conv_width=4, expand=2, head_dim=64,
+                  n_groups=1, chunk=128),
+    attn_every=6,
+    source="arXiv:2411.15242 (unverified tier)",
+))

@@ -1,0 +1,1 @@
+from repro.core.conv1d import DilatedConv1D  # noqa: F401

@@ -1,0 +1,64 @@
+"""AtacWorks-style 1D dilated-conv ResNet (paper §4.2) built on the
+DilatedConv1D layer — the paper's end-to-end training workload.
+
+25 conv layers: stem (1->C), 11 residual blocks of 2 convs each (C->C),
+and two 1-channel heads (denoised signal regression + peak-call logits).
+Most layers: C=K=15 (16 for bf16), S=51, dilation=8 — the paper's stated
+AtacWorks configuration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.conv1d import DilatedConv1D
+from repro.models import common as cm
+
+
+N_RES_BLOCKS = 11  # 1 stem + 11*2 res + 2 heads = 25 conv layers
+
+
+def init_params(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    C, S = cfg.conv_channels, cfg.conv_filter
+    ks = cm.split(key, 2 * N_RES_BLOCKS + 3)
+    mk = lambda k, cin, cout: DilatedConv1D.init(k, cin, cout, S, dtype=dtype)
+    params = {
+        "stem": mk(ks[0], 1, C),
+        "res": [
+            {"conv1": mk(ks[1 + 2 * i], C, C), "conv2": mk(ks[2 + 2 * i], C, C)}
+            for i in range(N_RES_BLOCKS)
+        ],
+        "head_signal": mk(ks[-2], C, 1),
+        "head_peak": mk(ks[-1], C, 1),
+    }
+    return params
+
+
+def forward(params, cfg, x, *, backend=None):
+    """x: (B, W) noisy coverage track -> (signal (B, W), peak_logits (B, W))."""
+    d = cfg.conv_dilation
+    h = x[:, None, :]  # (B, 1, W)
+    h = jax.nn.relu(DilatedConv1D.apply(params["stem"], h, dilation=d,
+                                        backend=backend).astype(jnp.float32)).astype(h.dtype)
+    for blk in params["res"]:
+        r = jax.nn.relu(DilatedConv1D.apply(blk["conv1"], h, dilation=d,
+                                            backend=backend).astype(jnp.float32)).astype(h.dtype)
+        r = DilatedConv1D.apply(blk["conv2"], r, dilation=d, backend=backend)
+        h = jax.nn.relu((h + r).astype(jnp.float32)).astype(h.dtype)
+    signal = DilatedConv1D.apply(params["head_signal"], h, dilation=d,
+                                 backend=backend)[:, 0, :]
+    peak = DilatedConv1D.apply(params["head_peak"], h, dilation=d,
+                               backend=backend)[:, 0, :]
+    return jax.nn.relu(signal.astype(jnp.float32)), peak.astype(jnp.float32)
+
+
+def loss_fn(params, cfg, batch, *, backend=None, peak_weight: float = 1.0):
+    """AtacWorks loss: MSE(denoised signal) + BCE(peak calls)."""
+    signal, peak_logits = forward(params, cfg, batch["noisy"], backend=backend)
+    mse = jnp.mean((signal - batch["clean"].astype(jnp.float32)) ** 2)
+    labels = batch["peaks"].astype(jnp.float32)
+    bce = jnp.mean(
+        jnp.maximum(peak_logits, 0) - peak_logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(peak_logits))))
+    return mse + peak_weight * bce, {"mse": mse, "bce": bce}

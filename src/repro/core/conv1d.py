@@ -1,0 +1,41 @@
+"""DilatedConv1D — the paper's contribution as a composable JAX layer.
+
+A thin, framework-grade wrapper over ``repro.kernels.ops``: parameter
+init (paper's (S, K, C) forward layout), bias handling (the paper defers
+bias to the framework; we do it here in the layer, outside the kernels,
+exactly as they do), dtype policy, and backend selection
+(pallas | xla | ref).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+class DilatedConv1D:
+    """Functional layer: ``params = init(...)``, ``y = apply(params, x, ...)``."""
+
+    @staticmethod
+    def init(key, c_in: int, c_out: int, filter_width: int, *,
+             dtype=jnp.float32, bias: bool = True):
+        wkey, _ = jax.random.split(key)
+        fan_in = c_in * filter_width
+        w = (jax.random.normal(wkey, (filter_width, c_out, c_in), jnp.float32)
+             * fan_in ** -0.5).astype(dtype)
+        p = {"w": w}
+        if bias:
+            p["b"] = jnp.zeros((c_out,), dtype)
+        return p
+
+    @staticmethod
+    def apply(params, x: jax.Array, *, dilation: int = 1,
+              padding: kops.Padding = "SAME", backend: str | None = None,
+              wblk: int | None = None) -> jax.Array:
+        """x: (N, C_in, W) -> (N, C_out, Q)."""
+        y = kops.conv1d(x, params["w"], dilation=dilation, padding=padding,
+                        backend=backend, wblk=wblk)
+        if "b" in params:
+            y = y + params["b"][None, :, None].astype(y.dtype)
+        return y

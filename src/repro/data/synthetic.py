@@ -1,0 +1,134 @@
+"""Synthetic data pipelines.
+
+The real ATAC-seq dataset behind the paper's end-to-end experiments is
+dbGaP-gated; per the repro plan (DESIGN.md §8) we generate synthetic
+coverage tracks with matched shape statistics: Poisson-like counts, sparse
+smoothed peaks, 50k-wide segments padded by 5k on both sides (paper §4.2).
+
+Also provides token/VLM/enc-dec batch synthesis for the LM families and a
+host-side prefetching loader that places shards according to a sharding.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# ATAC-seq-like tracks (paper workload)
+# ---------------------------------------------------------------------------
+
+
+def atacseq_batch(rng: np.random.Generator, batch: int, width: int = 60_000,
+                  pad: int = 5_000, peak_rate: float = 8e-5):
+    """Returns {'noisy','clean','peaks'} float32/float32/int8 of (B, width).
+
+    clean = sum of Gaussian bumps at sparse peak locations; noisy = Poisson
+    subsample of clean (low-coverage simulation); peaks = binary labels.
+    """
+    pad = min(pad, width // 12)
+    inner = width - 2 * pad
+    x = np.zeros((batch, width), np.float32)
+    peaks = np.zeros((batch, width), np.int8)
+    t = np.arange(width, dtype=np.float32)
+    for b in range(batch):
+        n_peaks = max(1, rng.poisson(peak_rate * inner))
+        centers = rng.integers(pad, width - pad, n_peaks)
+        widths = rng.uniform(150, 600, n_peaks).astype(np.float32)
+        heights = rng.uniform(2.0, 25.0, n_peaks).astype(np.float32)
+        for c, wd, h in zip(centers, widths, heights):
+            lo, hi = max(0, int(c - 4 * wd)), min(width, int(c + 4 * wd))
+            x[b, lo:hi] += h * np.exp(-0.5 * ((t[lo:hi] - c) / wd) ** 2)
+            peaks[b, max(0, int(c - wd)):min(width, int(c + wd))] = 1
+    clean = x
+    noisy = rng.poisson(np.maximum(clean * 0.15, 1e-3)).astype(np.float32)
+    return {"noisy": noisy, "clean": clean, "peaks": peaks}
+
+
+# ---------------------------------------------------------------------------
+# LM-family batches
+# ---------------------------------------------------------------------------
+
+
+def lm_batch(rng: np.random.Generator, cfg, batch: int, seq: int):
+    toks = rng.integers(0, cfg.vocab_size, (batch, seq + 1), dtype=np.int64)
+    return {"tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32)}
+
+
+def vlm_batch(rng: np.random.Generator, cfg, batch: int, seq: int):
+    """seq is the TOTAL length; text length = seq - n_image_tokens."""
+    t_text = seq - cfg.n_image_tokens
+    toks = rng.integers(0, cfg.vocab_size, (batch, t_text + 1), dtype=np.int64)
+    patches = rng.standard_normal(
+        (batch, cfg.n_image_tokens, cfg.d_model)).astype(np.float32)
+    return {"tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+            "patches": patches.astype(cfg.dtype)}
+
+
+def encdec_batch(rng: np.random.Generator, cfg, batch: int, seq: int):
+    toks = rng.integers(0, cfg.vocab_size, (batch, seq + 1), dtype=np.int64)
+    frames = rng.standard_normal(
+        (batch, cfg.encoder_width, cfg.d_model)).astype(np.float32)
+    return {"tokens": toks[:, :-1].astype(np.int32),
+            "labels": toks[:, 1:].astype(np.int32),
+            "frames": frames.astype(cfg.dtype)}
+
+
+def make_batch(cfg, batch: int, seq: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    if cfg.family == "conv":
+        return atacseq_batch(rng, batch, width=seq)
+    if cfg.family == "vlm":
+        return vlm_batch(rng, cfg, batch, seq)
+    if cfg.family == "encdec":
+        return encdec_batch(rng, cfg, batch, seq)
+    return lm_batch(rng, cfg, batch, seq)
+
+
+# ---------------------------------------------------------------------------
+# Prefetching loader
+# ---------------------------------------------------------------------------
+
+
+class SyntheticLoader:
+    """Host-side data pipeline: a producer thread synthesises + device-puts
+    batches (optionally with a NamedSharding) while the step runs — the
+    paper's DataLoader()-worker-per-socket pattern, jax-style."""
+
+    def __init__(self, cfg, batch: int, seq: int, *, sharding=None,
+                 prefetch: int = 2, seed: int = 0):
+        self.cfg, self.batch, self.seq = cfg, batch, seq
+        self.sharding = sharding
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._seed = seed
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._thread.start()
+
+    def _produce(self):
+        i = 0
+        while not self._stop.is_set():
+            b = make_batch(self.cfg, self.batch, self.seq, seed=self._seed + i)
+            if self.sharding is not None:
+                b = jax.tree.map(
+                    lambda x: jax.device_put(jnp.asarray(x), self.sharding), b)
+            try:
+                self._q.put(b, timeout=1.0)
+                i += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (the 1D dilated
+convolution layer) + jit'd wrappers (ops.py) + pure-jnp oracles (ref.py)."""

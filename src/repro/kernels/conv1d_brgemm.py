@@ -1,0 +1,264 @@
+"""Pallas TPU kernels for the 1D dilated convolution layer (BRGEMM formulation).
+
+TPU adaptation of Chaudhary et al. 2021 (see DESIGN.md §2).  The paper's
+LIBXSMM batch-reduce GEMM becomes an unrolled tap loop of MXU matmuls that
+accumulate into a single VMEM accumulator; the paper's cache blocking along
+the width dimension (block = 64 for AVX-512 L1/L2) becomes BlockSpec width
+tiling (block = WBLK, a multiple of the 128-lane TPU tile) with the *dilated
+footprint* ``F = WBLK + (S-1)*d`` staged HBM->VMEM once per tile via
+``pl.Element`` (overlapping-window) indexing and reused by all S taps.
+
+Three kernels, mirroring the paper's Algorithms 2-4:
+  * ``conv1d_fwd``          - Alg. 2 (also used for Alg. 3 / bwd-data with
+                              flipped+transposed weights, see ops.py)
+  * ``conv1d_bwd_weight``   - Alg. 4 (sequential-grid accumulation, the TPU
+                              analogue of the paper's shared weight-gradient
+                              buffer across width blocks)
+  * ``depthwise_conv1d_fwd`` / ``depthwise_conv1d_bwd_weight`` - the grouped
+                              (C == K) variant used by Mamba2/Zamba2 causal
+                              convs; runs on the VPU instead of the MXU.
+
+All kernels accept fp32 or bf16 inputs and accumulate in fp32
+(``preferred_element_type``), matching the AVX-512-BF16 contract.
+
+Shape contract (callers — see ops.py — arrange the padding):
+  x    : (N, C, Wp)   with Wp = Qp + (S-1)*d, Qp % WBLK == 0
+  w    : (S, K, C)    K % kblk == 0
+  out  : (N, K, Qp)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # TPU compiler params are optional (absent / ignored in interpret mode)
+    from jax.experimental.pallas import tpu as pltpu
+except ImportError:  # pragma: no cover
+    pltpu = None
+
+
+def _compiler_params(dimension_semantics: Sequence[str], interpret: bool):
+    if interpret or pltpu is None:
+        return None
+    try:
+        return pltpu.CompilerParams(dimension_semantics=tuple(dimension_semantics))
+    except TypeError:  # pragma: no cover - older API spelling
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Forward (Algorithm 2) — also the bwd-data engine (Algorithm 3)
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(x_ref, w_ref, o_ref, *, S: int, dilation: int, wblk: int):
+    """One (n, k-tile, q-tile) grid cell.
+
+    x_ref : (1, C, F)     dilated footprint for this width tile (VMEM)
+    w_ref : (S, KB, C)    all taps of this filter tile (VMEM)
+    o_ref : (1, KB, WBLK)
+    """
+    x = x_ref[0]  # (C, F)
+    acc = jnp.zeros((w_ref.shape[1], wblk), jnp.float32)
+    for s in range(S):  # the BRGEMM batch-reduce dimension (unrolled taps)
+        a = w_ref[s]  # (KB, C)
+        b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)  # (C, WBLK)
+        acc += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def conv1d_fwd(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    dilation: int = 1,
+    wblk: int = 256,
+    kblk: int | None = None,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """BRGEMM forward pass.  x: (N, C, Qp + (S-1)*d), w: (S, K, C) -> (N, K, Qp)."""
+    N, C, Wp = x.shape
+    S, K, Cw = w.shape
+    assert C == Cw, (C, Cw)
+    F = wblk + (S - 1) * dilation
+    Qp = Wp - (S - 1) * dilation
+    assert Qp % wblk == 0, (Qp, wblk)
+    kblk = kblk or K
+    assert K % kblk == 0, (K, kblk)
+    grid = (N, K // kblk, Qp // wblk)
+    out_dtype = out_dtype or x.dtype
+
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, S=S, dilation=dilation, wblk=wblk),
+        grid=grid,
+        in_specs=[
+            # overlapping dilated footprint along width: element-indexed
+            pl.BlockSpec(
+                (1, C, pl.Element(F)),
+                lambda n, kt, qt: (n, 0, qt * wblk),
+            ),
+            pl.BlockSpec((S, kblk, C), lambda n, kt, qt: (0, kt, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kblk, wblk), lambda n, kt, qt: (n, kt, qt)),
+        out_shape=jax.ShapeDtypeStruct((N, K, Qp), out_dtype),
+        compiler_params=_compiler_params(("parallel", "parallel", "parallel"), interpret),
+        interpret=interpret,
+    )(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Backward weight (Algorithm 4)
+# ---------------------------------------------------------------------------
+
+
+def _bwd_w_kernel(x_ref, g_ref, o_ref, *, S: int, dilation: int, wblk: int):
+    """Grid (N, Q_tiles), both sequential ("arbitrary"): the (S, K, C) output
+    block is revisited every step and accumulated into — the paper's shared
+    weight-gradient buffer across width blocks and batch threads.
+
+    x_ref : (1, C, F), g_ref : (1, K, WBLK), o_ref : (S, K, C) fp32
+    """
+    first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0)
+
+    @pl.when(first)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]  # (C, F)
+    g = g_ref[0]  # (K, WBLK)
+    for s in range(S):  # S small GEMMs per width block (Alg. 4 line 4)
+        b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)  # (C, WBLK)
+        o_ref[s] += jnp.dot(g, b.T, preferred_element_type=jnp.float32)
+
+
+def conv1d_bwd_weight(
+    x: jax.Array,
+    gout: jax.Array,
+    *,
+    S: int,
+    dilation: int = 1,
+    wblk: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """BRGEMM weight gradient.  x: (N, C, Qp+(S-1)d), gout: (N, K, Qp) -> (S, K, C) fp32."""
+    N, C, Wp = x.shape
+    Ng, K, Qp = gout.shape
+    assert N == Ng and Qp % wblk == 0 and Wp == Qp + (S - 1) * dilation
+    F = wblk + (S - 1) * dilation
+    grid = (N, Qp // wblk)
+
+    return pl.pallas_call(
+        functools.partial(_bwd_w_kernel, S=S, dilation=dilation, wblk=wblk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C, pl.Element(F)), lambda n, qt: (n, 0, qt * wblk)),
+            pl.BlockSpec((1, K, wblk), lambda n, qt: (n, 0, qt)),
+        ],
+        out_specs=pl.BlockSpec((S, K, C), lambda n, qt: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, K, C), jnp.float32),
+        compiler_params=_compiler_params(("arbitrary", "arbitrary"), interpret),
+        interpret=interpret,
+    )(x, gout)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise (grouped, C == K) variant — Mamba2 / Zamba2 causal conv
+# ---------------------------------------------------------------------------
+
+
+def _dw_fwd_kernel(x_ref, w_ref, o_ref, *, S: int, dilation: int, wblk: int):
+    """x_ref: (1, CB, F), w_ref: (S, CB), o_ref: (1, CB, WBLK).  VPU fma chain."""
+    x = x_ref[0]
+    acc = jnp.zeros((x_ref.shape[1], wblk), jnp.float32)
+    for s in range(S):
+        b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)
+        acc += w_ref[s][:, None].astype(jnp.float32) * b.astype(jnp.float32)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+def depthwise_conv1d_fwd(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    dilation: int = 1,
+    wblk: int = 256,
+    cblk: int | None = None,
+    out_dtype=None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Depthwise forward.  x: (N, C, Qp+(S-1)d), w: (S, C) -> (N, C, Qp)."""
+    N, C, Wp = x.shape
+    S, Cw = w.shape
+    assert C == Cw
+    F = wblk + (S - 1) * dilation
+    Qp = Wp - (S - 1) * dilation
+    assert Qp % wblk == 0
+    cblk = cblk or min(C, 512)
+    assert C % cblk == 0, (C, cblk)
+    grid = (N, C // cblk, Qp // wblk)
+    out_dtype = out_dtype or x.dtype
+
+    return pl.pallas_call(
+        functools.partial(_dw_fwd_kernel, S=S, dilation=dilation, wblk=wblk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cblk, pl.Element(F)), lambda n, ct, qt: (n, ct * cblk, qt * wblk)),
+            pl.BlockSpec((S, cblk), lambda n, ct, qt: (0, ct)),
+        ],
+        out_specs=pl.BlockSpec((1, cblk, wblk), lambda n, ct, qt: (n, ct, qt)),
+        out_shape=jax.ShapeDtypeStruct((N, C, Qp), out_dtype),
+        compiler_params=_compiler_params(("parallel", "parallel", "parallel"), interpret),
+        interpret=interpret,
+    )(x, w)
+
+
+def _dw_bwd_w_kernel(x_ref, g_ref, o_ref, *, S: int, dilation: int, wblk: int):
+    first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0) & (pl.program_id(2) == 0)
+
+    @pl.when(first)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[0]
+    g = g_ref[0].astype(jnp.float32)  # (CB, WBLK)
+    for s in range(S):
+        b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)
+        o_ref[s] += jnp.sum(g * b.astype(jnp.float32), axis=-1)
+
+
+def depthwise_conv1d_bwd_weight(
+    x: jax.Array,
+    gout: jax.Array,
+    *,
+    S: int,
+    dilation: int = 1,
+    wblk: int = 256,
+    cblk: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Depthwise weight gradient -> (S, C) fp32."""
+    N, C, Wp = x.shape
+    Ng, Cg, Qp = gout.shape
+    assert N == Ng and C == Cg and Qp % wblk == 0
+    F = wblk + (S - 1) * dilation
+    cblk = cblk or min(C, 512)
+    assert C % cblk == 0
+    grid = (N, Qp // wblk, C // cblk)
+
+    return pl.pallas_call(
+        functools.partial(_dw_bwd_w_kernel, S=S, dilation=dilation, wblk=wblk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, cblk, pl.Element(F)), lambda n, qt, ct: (n, ct * cblk, qt * wblk)),
+            pl.BlockSpec((1, cblk, wblk), lambda n, qt, ct: (n, ct, qt)),
+        ],
+        out_specs=pl.BlockSpec((S, cblk), lambda n, qt, ct: (0, ct)),
+        out_shape=jax.ShapeDtypeStruct((S, C), jnp.float32),
+        compiler_params=_compiler_params(("arbitrary", "arbitrary", "arbitrary"), interpret),
+        interpret=interpret,
+    )(x, gout)

@@ -1,0 +1,235 @@
+"""Public, jit-friendly ops wrapping the Pallas BRGEMM conv1d kernels.
+
+``conv1d`` / ``depthwise_conv1d`` are the layer-facing entry points:
+  * padding modes VALID (paper's pre-padded contract), SAME, CAUSAL
+  * backend dispatch: 'pallas' (TPU target / interpret on CPU),
+    'xla' (lax.conv_general_dilated — the vendor-library baseline and the
+    fast CPU path), 'ref' (readable oracle)
+  * a ``jax.custom_vjp`` that binds the paper's Alg. 3 (bwd-data via the fwd
+    BRGEMM kernel on flipped+transposed weights) and Alg. 4 (bwd-weight
+    kernel) into autodiff, so ``jax.grad`` of a model using this layer
+    executes exactly the paper's three kernels.
+
+Blocking bookkeeping lives here: width is padded up to a multiple of the
+width tile WBLK and sliced back, mirroring the paper's "block length 64"
+discipline with TPU-native tile sizes.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from . import conv1d_brgemm as _k
+from . import ref as _ref
+
+Padding = Literal["VALID", "SAME", "CAUSAL"]
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_CONV_BACKEND")
+    if env:
+        return env
+    # Pallas is the TPU target; on CPU the honest fast path is XLA's conv
+    # (interpret-mode Pallas is a correctness tool, not a perf tool).
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _pad_amounts(S: int, dilation: int, padding: Padding) -> tuple[int, int]:
+    span = (S - 1) * dilation
+    if padding == "VALID":
+        return 0, 0
+    if padding == "SAME":
+        return span // 2, span - span // 2
+    if padding == "CAUSAL":
+        return span, 0
+    raise ValueError(padding)
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def pick_wblk(Q: int, S: int, dilation: int) -> int:
+    """Width-tile choice (the paper's 'block length' adapted to TPU lanes).
+
+    Keep the footprint F = WBLK + (S-1)d plus the output tile within a small
+    VMEM budget while making WBLK a multiple of the 128-lane tile.
+    """
+    for cand in (512, 256, 128):
+        if Q >= cand:
+            return cand
+    return 128
+
+
+# ---------------------------------------------------------------------------
+# Dense conv1d with custom VJP over the three BRGEMM kernels
+# ---------------------------------------------------------------------------
+
+
+def _pallas_fwd_padded(x, w, dilation, wblk, interpret):
+    """x: (N, C, W) already logically padded; returns (N, K, Q) via the
+    Pallas kernel, handling width round-up to the tile size."""
+    N, C, W = x.shape
+    S, K, _ = w.shape
+    span = (S - 1) * dilation
+    Q = W - span
+    Qp = _round_up(Q, wblk)
+    if Qp + span > W:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
+    out = _k.conv1d_fwd(x, w, dilation=dilation, wblk=wblk, interpret=interpret)
+    return out[:, :, :Q]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _conv1d_pallas(x, w, dilation, wblk, interpret):
+    return _pallas_fwd_padded(x, w, dilation, wblk, interpret)
+
+
+def _conv1d_pallas_fwd(x, w, dilation, wblk, interpret):
+    return _pallas_fwd_padded(x, w, dilation, wblk, interpret), (x, w)
+
+
+def _conv1d_pallas_bwd(dilation, wblk, interpret, res, gout):
+    x, w = res
+    S, K, C = w.shape
+    span = (S - 1) * dilation
+    # --- Alg. 3: bwd-data = fwd BRGEMM on zero-padded gout with flipped,
+    # transposed weights (the paper's (S, C, K) layout).
+    g_pad = jnp.pad(gout, ((0, 0), (0, 0), (span, span)))
+    w_flip = w[::-1].transpose(0, 2, 1)  # (S, C, K)
+    dx = _pallas_fwd_padded(g_pad, w_flip, dilation, wblk, interpret)
+    dx = dx.astype(x.dtype)
+    # --- Alg. 4: bwd-weight kernel (fp32 accumulation).
+    N, Cx, W = x.shape
+    Q = W - span
+    Qp = _round_up(Q, wblk)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W))) if Qp + span > W else x
+    gp = jnp.pad(gout, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else gout
+    dw = _k.conv1d_bwd_weight(
+        xp, gp, S=S, dilation=dilation, wblk=wblk, interpret=interpret
+    )
+    return dx, dw.astype(w.dtype)
+
+
+_conv1d_pallas.defvjp(_conv1d_pallas_fwd, _conv1d_pallas_bwd)
+
+
+def conv1d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    dilation: int = 1,
+    padding: Padding = "SAME",
+    backend: str | None = None,
+    wblk: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """1D dilated convolution, paper semantics.
+
+    x: (N, C, W), w: (S, K, C) -> (N, K, Q); Q == W for SAME/CAUSAL,
+    Q = W - (S-1)*dilation for VALID.
+    """
+    backend = backend or default_backend()
+    S = w.shape[0]
+    lo, hi = _pad_amounts(S, dilation, padding)
+    if lo or hi:
+        x = jnp.pad(x, ((0, 0), (0, 0), (lo, hi)))
+    if backend == "ref":
+        return _ref.conv1d_ref(x, w, dilation=dilation)
+    if backend == "xla":
+        return _ref.xla_conv1d(x, w, dilation=dilation)
+    if backend == "pallas":
+        Q = x.shape[-1] - (S - 1) * dilation
+        wblk = wblk or pick_wblk(Q, S, dilation)
+        interpret = _INTERPRET if interpret is None else interpret
+        return _conv1d_pallas(x, w, dilation, wblk, interpret)
+    raise ValueError(f"unknown conv backend {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# Depthwise conv1d (Mamba2/Zamba2 causal conv)
+# ---------------------------------------------------------------------------
+
+
+def _dw_pallas_fwd_padded(x, w, dilation, wblk, interpret):
+    N, C, W = x.shape
+    S, _ = w.shape
+    span = (S - 1) * dilation
+    Q = W - span
+    Qp = _round_up(Q, wblk)
+    if Qp + span > W:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
+    out = _k.depthwise_conv1d_fwd(x, w, dilation=dilation, wblk=wblk, interpret=interpret)
+    return out[:, :, :Q]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _dw_conv1d_pallas(x, w, dilation, wblk, interpret):
+    return _dw_pallas_fwd_padded(x, w, dilation, wblk, interpret)
+
+
+def _dw_conv1d_pallas_fwd(x, w, dilation, wblk, interpret):
+    return _dw_pallas_fwd_padded(x, w, dilation, wblk, interpret), (x, w)
+
+
+def _dw_conv1d_pallas_bwd(dilation, wblk, interpret, res, gout):
+    x, w = res
+    S, C = w.shape
+    span = (S - 1) * dilation
+    g_pad = jnp.pad(gout, ((0, 0), (0, 0), (span, span)))
+    dx = _dw_pallas_fwd_padded(g_pad, w[::-1], dilation, wblk, interpret).astype(x.dtype)
+    N, _, W = x.shape
+    Q = W - span
+    Qp = _round_up(Q, wblk)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W))) if Qp + span > W else x
+    gp = jnp.pad(gout, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else gout
+    dw = _k.depthwise_conv1d_bwd_weight(
+        xp, gp, S=S, dilation=dilation, wblk=wblk, interpret=interpret
+    )
+    return dx, dw.astype(w.dtype)
+
+
+_dw_conv1d_pallas.defvjp(_dw_conv1d_pallas_fwd, _dw_conv1d_pallas_bwd)
+
+
+def depthwise_conv1d(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    dilation: int = 1,
+    padding: Padding = "CAUSAL",
+    backend: str | None = None,
+    wblk: int | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Depthwise 1D conv.  x: (N, C, W), w: (S, C) -> (N, C, Q)."""
+    backend = backend or default_backend()
+    S = w.shape[0]
+    lo, hi = _pad_amounts(S, dilation, padding)
+    if lo or hi:
+        x = jnp.pad(x, ((0, 0), (0, 0), (lo, hi)))
+    if backend == "ref":
+        return _ref.depthwise_conv1d_ref(x, w, dilation=dilation)
+    if backend == "xla":
+        # grouped conv via feature_group_count; compute in fp32 throughout
+        # so the AD transpose sees consistent dtypes (bf16 params)
+        S_, C = w.shape
+        w_oiw = w.T[:, None, :].astype(jnp.float32)  # (C, 1, S)
+        return jax.lax.conv_general_dilated(
+            x.astype(jnp.float32), w_oiw, (1,), "VALID",
+            rhs_dilation=(dilation,),
+            dimension_numbers=("NCW", "OIW", "NCW"),
+            feature_group_count=C,
+        ).astype(x.dtype)
+    if backend == "pallas":
+        Q = x.shape[-1] - (S - 1) * dilation
+        wblk = wblk or pick_wblk(Q, S, dilation)
+        interpret = _INTERPRET if interpret is None else interpret
+        return _dw_conv1d_pallas(x, w, dilation, wblk, interpret)
+    raise ValueError(f"unknown conv backend {backend!r}")

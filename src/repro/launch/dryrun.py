@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent.
+
+For every (architecture × input shape) cell this lowers + compiles the
+step function against the production meshes —
+
+    single-pod : (data=16, model=16)          = 256 chips
+    multi-pod  : (pod=2, data=16, model=16)   = 512 chips
+
+— prints ``compiled.memory_analysis()`` (proves it fits) and
+``compiled.cost_analysis()`` (FLOPs/bytes for §Roofline), and appends a
+JSON record per cell to the results file that EXPERIMENTS.md is generated
+from.  ``--probes`` additionally compiles the reduced-depth probe configs
+(roofline/analysis.py) and derives the three roofline terms.
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count on first init, and only the dry-run may see 512
+placeholder devices (smoke tests and benches must see 1).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi --no-probes
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import applicable, lower_cell
+from repro.roofline import analysis as ra
+from repro.roofline import flops as rf
+
+ARCHS = [
+    "moonshot-v1-16b-a3b", "deepseek-v3-671b", "internvl2-2b", "qwen2-7b",
+    "qwen3-8b", "starcoder2-3b", "qwen3-14b", "zamba2-7b",
+    "whisper-large-v3", "mamba2-370m",
+]
+SHAPE_NAMES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+DEFAULT_OUT = "experiments/dryrun.json"
+
+
+def _memory_analysis_dict(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": repr(e)}
+    if m is None:
+        return {}
+    out = {}
+    for k in dir(m):
+        if k.startswith("_"):
+            continue
+        v = getattr(m, k, None)
+        if isinstance(v, (int, float)):
+            out[k] = v
+    return out
+
+
+def _compile_cell(cfg, shape, mesh, **kw):
+    t0 = time.time()
+    lowered, meta = lower_cell(cfg, shape, mesh, **kw)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    metrics = ra.compile_metrics(compiled)
+    mem = _memory_analysis_dict(compiled)
+    meta.update(lower_s=round(t1 - t0, 1), compile_s=round(t2 - t1, 1))
+    return compiled, metrics, mem, meta
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, probes: bool) -> dict:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind}
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skip", why=why)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    try:
+        compiled, metrics, mem, meta = _compile_cell(cfg, shape, mesh)
+    except Exception as e:
+        rec.update(status="error", error=repr(e),
+                   trace=traceback.format_exc(limit=8))
+        return rec
+    rec.update(status="ok", n_chips=n_chips, meta=meta, memory=mem,
+               per_device=metrics)
+    print(f"--- {arch} × {shape_name} × {mesh_kind} "
+          f"({n_chips} chips, compile {meta['compile_s']}s)")
+    print("memory_analysis:", json.dumps(mem))
+    print("cost_analysis:  flops/device=%.3e bytes/device=%.3e "
+          "coll_bytes/device=%.3e" % (metrics["flops"], metrics["bytes"],
+                                      metrics["coll_bytes"]))
+    if probes and mesh_kind == "single":
+        try:
+            accum_full = meta.get("accum_steps", 1)
+            plan, rows, full_row = ra.probe_plan(cfg, shape, accum_full)
+            if len(plan) == 1 and plan[0].cfg is cfg:
+                full = {k: metrics[k] for k in ("flops", "bytes", "coll_bytes")}
+            else:
+                pm = []
+                for p in plan:
+                    _, m, _, pmeta = _compile_cell(
+                        p.cfg, p.shape, mesh, accum_steps=p.accum,
+                        unroll_accum=True)
+                    pm.append(m)
+                    print(f"  probe L={p.cfg.n_layers}"
+                          f"{'/e' + str(p.cfg.n_encoder_layers) if p.cfg.n_encoder_layers else ''}"
+                          f" a={p.accum} B={p.shape.global_batch}"
+                          f" compile {pmeta['compile_s']}s flops={m['flops']:.3e}"
+                          f" coll={m['coll_bytes']:.3e}")
+                full = ra.extrapolate(pm, rows, full_row)
+            corr = ra.ssd_scan_correction(cfg, shape, n_chips)
+            full = {k: full[k] + corr.get(k, 0.0) for k in full}
+            mf = rf.model_flops(cfg, shape)
+            mbytes = rf.model_bytes(cfg, shape)
+            terms = ra.roofline_terms(full, n_chips, mf, mbytes)
+            rec["extrapolated_per_device"] = full
+            rec["terms"] = terms
+            print("roofline: compute=%.3es memory=%.3es collective=%.3es "
+                  "dominant=%s frac=%.3f useful=%.3f"
+                  % (terms["compute_s"], terms["memory_s"],
+                     terms["collective_s"], terms["dominant"],
+                     terms["roofline_fraction"], terms["useful_ratio"]))
+        except Exception as e:
+            rec["probe_error"] = repr(e)
+            rec["probe_trace"] = traceback.format_exc(limit=8)
+    return rec
+
+
+def _load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def _save(path: str, db: dict) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(db, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCHS + ["atacworks"], default=None)
+    ap.add_argument("--shape", choices=SHAPE_NAMES, default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true", help="all 40 cells")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    args = ap.parse_args(argv)
+
+    assert jax.device_count() == 512, (
+        "dry-run needs the 512 placeholder devices; do not import jax before "
+        "this module sets XLA_FLAGS")
+
+    archs = ARCHS if args.all or not args.arch else [args.arch]
+    shapes = SHAPE_NAMES if args.all or not args.shape else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    db = _load(args.out)
+    n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                key = f"{arch}|{shape}|{mesh_kind}"
+                if key in db and db[key].get("status") in ("ok", "skip") \
+                        and not args.force:
+                    if "probe_error" not in db[key]:
+                        continue
+                rec = run_cell(arch, shape, mesh_kind,
+                               probes=not args.no_probes)
+                db[key] = rec
+                _save(args.out, db)
+                if rec["status"] == "error":
+                    n_err += 1
+                    print(f"!!! {key}: {rec['error']}")
+    print(f"done: {len(db)} records, {n_err} new errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

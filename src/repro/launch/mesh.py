@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+Functions (not module-level constants) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and smoke tests/benches must keep seeing 1 device.
+
+Mesh axes:
+  single-pod : (data=16, model=16)            — 256 chips (one v5e pod)
+  multi-pod  : (pod=2, data=16, model=16)     — 512 chips (2 pods)
+
+Batch shards on ('pod','data'); tensor/expert-parallel dims on 'model';
+parameters are additionally sharded on 'data' (FSDP/ZeRO-style 2D
+sharding).  Scaling to 1000+ nodes grows 'pod'/'data' only — all sharding
+rules (models/sharding.py) are axis-NAME based, never size based, so the
+same rules lower unchanged on any mesh that keeps these names.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_host_mesh(*, model: int = 1):
+    """A mesh over whatever devices exist (CPU smoke / single host)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=_auto(2))
+
+
+def dp_size(mesh) -> int:
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def mp_size(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1

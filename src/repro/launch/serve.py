@@ -1,0 +1,87 @@
+"""Serving launcher — batched autoregressive decode with a KV/SSM cache.
+
+Demonstrates the decode path the decode_*/long_* dry-run cells lower:
+build a cache of ``--prompt-len`` tokens (sequential teacher-forced decode
+steps — production prefill is a separate fused step, see
+train/serve_step.make_prefill_step), then generate ``--gen`` tokens
+greedily, reporting per-step latency.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-8b --smoke \
+        --batch 4 --prompt-len 16 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import reduced
+from repro.launch.mesh import make_host_mesh
+from repro.models import get_model, sharding as shd
+from repro.train.serve_step import make_cache, make_serve_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    if cfg.family == "conv":
+        raise SystemExit("conv nets have no decode step")
+    mesh = make_host_mesh(model=args.model_parallel)
+    model = get_model(cfg)
+    max_len = args.prompt_len + args.gen
+
+    with mesh:
+        params = model.init_params(jax.random.key(args.seed), cfg)
+        pspecs = shd.param_pspecs(params, mesh)
+        params = jax.tree.map(
+            lambda p, s: jax.device_put(p, jax.sharding.NamedSharding(mesh, s)),
+            params, pspecs)
+        cache = make_cache(cfg, args.batch, max_len, dtype=jnp.float32)
+        serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+        rng = np.random.default_rng(args.seed)
+        prompt = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+            jnp.int32)
+
+        # prefill (sequential; cache-correct by construction)
+        t0 = time.time()
+        nxt = prompt[:, :1]
+        for t in range(args.prompt_len):
+            nxt, cache, _ = serve(params, cache, prompt[:, t:t + 1], jnp.int32(t))
+        print(f"prefill {args.prompt_len} tokens: {time.time() - t0:.2f}s")
+
+        # generate
+        out = [nxt]
+        times = []
+        for t in range(args.prompt_len, max_len - 1):
+            t0 = time.time()
+            nxt, cache, logits = serve(params, cache, nxt, jnp.int32(t))
+            times.append(time.time() - t0)
+            out.append(nxt)
+        toks = jnp.concatenate(out, axis=1)
+        assert bool(jnp.isfinite(jnp.asarray(logits)).all()), "non-finite logits"
+        print(f"generated {toks.shape} tokens; "
+              f"median step {np.median(times) * 1e3:.1f} ms, "
+              f"p99 {np.percentile(times, 99) * 1e3:.1f} ms")
+        print("sample:", np.asarray(toks[0])[:16])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,183 @@
+"""Cell construction for the launcher and the dry-run.
+
+A *cell* is one (architecture × shape × mesh) combination.  This module
+builds, without allocating any device memory:
+
+  * ``input_specs(cfg, shape)``      — ShapeDtypeStruct stand-ins for every
+                                       model input (weak-type-correct,
+                                       shardable, no allocation),
+  * ``state_specs`` / ``cache_specs`` — eval_shape'd TrainState / KV-cache
+                                       pytrees with NamedShardings attached,
+  * ``build_cell(cfg, shape, mesh)``  — the jitted step function plus its
+                                       fully-sharded abstract arguments,
+                                       ready for ``.lower().compile()``.
+
+train_* cells lower ``train_step`` (grad-accum microbatching picked so one
+microbatch is one sample per data shard); prefill_* cells lower
+``prefill_step`` (last-token logits); decode_*/long_* cells lower
+``serve_step`` (one new token against a seq_len KV cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SUBQUADRATIC
+from repro.launch.mesh import dp_size
+from repro.models import get_model
+from repro.models import sharding as shd
+from repro.train.serve_step import make_cache, make_prefill_step, make_serve_step
+from repro.train.train_step import init_state, make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Input specs (batch stand-ins)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, SDS]:
+    """ShapeDtypeStruct for every model input of this cell (no allocation)."""
+    B, T = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    if shape.kind == "decode":
+        return {"tokens": SDS((B, 1), jnp.int32)}
+    if cfg.family == "conv":
+        d = {"noisy": SDS((B, T), jnp.float32),
+             "clean": SDS((B, T), jnp.float32),
+             "peaks": SDS((B, T), jnp.int8)}
+        return d if shape.kind == "train" else {"noisy": d["noisy"]}
+    t_text = T - cfg.n_image_tokens if cfg.family == "vlm" else T
+    d = {"tokens": SDS((B, t_text), jnp.int32)}
+    if shape.kind == "train":
+        d["labels"] = SDS((B, t_text), jnp.int32)
+    if cfg.family == "vlm":
+        d["patches"] = SDS((B, cfg.n_image_tokens, cfg.d_model), dt)
+    if cfg.family == "encdec":
+        d["frames"] = SDS((B, cfg.encoder_width, cfg.d_model), dt)
+    return d
+
+
+def _with_sharding(struct_tree, spec_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct pytree."""
+    return jax.tree.map(
+        lambda s, p: SDS(s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        struct_tree, spec_tree)
+
+
+def batch_structs(cfg, shape, mesh):
+    """Batch ShapeDtypeStructs with batch-dim sharding on ('pod','data')
+    when the global batch divides; replicated otherwise (long_500k B=1)."""
+    structs = input_specs(cfg, shape)
+    dp = dp_size(mesh)
+    names = tuple(mesh.axis_names)
+    dp_axes = tuple(a for a in ("pod", "data") if a in names) or None
+    bdp = dp_axes if shape.global_batch % dp == 0 else None
+    specs = jax.tree.map(lambda s: P(*((bdp,) + (None,) * (len(s.shape) - 1))),
+                         structs)
+    return _with_sharding(structs, specs, mesh)
+
+
+# ---------------------------------------------------------------------------
+# Grad-accumulation heuristic
+# ---------------------------------------------------------------------------
+
+
+def pick_accum(cfg, shape, mesh) -> int:
+    """One sample per data shard per microbatch for LM train cells: keeps
+    the per-device fp32 logits (and activations) microbatch-sized, which is
+    what lets vocab-150k × 4k-seq train cells fit HBM."""
+    if shape.kind != "train":
+        return 1
+    if shape.microbatch:
+        return max(1, shape.global_batch // shape.microbatch)
+    dp = dp_size(mesh)
+    if cfg.family == "conv":
+        return 1
+    per_shard = max(1, shape.global_batch // dp)
+    return per_shard
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+
+class Cell(NamedTuple):
+    fn: Any               # the step function to jit/lower
+    args: tuple           # abstract args (ShapeDtypeStructs w/ shardings)
+    donate: tuple         # argnums to donate
+    meta: dict
+
+
+def applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is this (arch × shape) cell runnable?  (DESIGN.md §5 skips.)"""
+    if shape.name == "long_500k" and cfg.name not in SUBQUADRATIC:
+        return False, "long_500k needs sub-quadratic mixing; skipped for full-attention archs"
+    if cfg.family == "conv" and shape.kind != "train":
+        return False, "conv net has no decode/prefill serving step"
+    return True, ""
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+               accum_steps: int | None = None,
+               unroll_accum: bool = False,
+               train_kwargs: dict | None = None,
+               serve_kwargs: dict | None = None) -> Cell:
+    model = get_model(cfg)
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"cell {cfg.name}×{shape.name} inapplicable: {why}")
+
+    params_s = jax.eval_shape(lambda: model.init_params(jax.random.key(0), cfg))
+    pspecs = shd.param_pspecs(params_s, mesh)
+    params_abs = _with_sharding(params_s, pspecs, mesh)
+    batch_abs = batch_structs(cfg, shape, mesh)
+    meta = {"arch": cfg.name, "shape": shape.name, "kind": shape.kind,
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape))}
+
+    if shape.kind == "train":
+        accum = accum_steps or pick_accum(cfg, shape, mesh)
+        meta["accum_steps"] = accum
+        step = make_train_step(cfg, accum_steps=accum,
+                               unroll_accum=unroll_accum,
+                               **(train_kwargs or {}))
+        state_s = jax.eval_shape(lambda: init_state(params_s))
+        # moments are elementwise images of the params -> same specs
+        sspecs = type(state_s)(params=pspecs,
+                               opt=type(state_s.opt)(m=pspecs, v=pspecs,
+                                                     count=P()),
+                               step=P(),
+                               ef=pspecs if state_s.ef is not None else None)
+        state_abs = _with_sharding(state_s, sspecs, mesh)
+        return Cell(step, (state_abs, batch_abs), (0,), meta)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        return Cell(step, (params_abs, batch_abs), (), meta)
+
+    # decode / long-context decode: one token against a seq_len cache
+    step = make_serve_step(cfg, **(serve_kwargs or {}))
+    cache_s = jax.eval_shape(
+        lambda: make_cache(cfg, shape.global_batch, shape.seq_len,
+                           dtype=jnp.bfloat16))
+    cspecs = shd.cache_pspecs(cache_s, mesh, shape.global_batch)
+    cache_abs = _with_sharding(cache_s, cspecs, mesh)
+    tokens_abs = batch_structs(cfg, shape, mesh)["tokens"]
+    pos_abs = SDS((), jnp.int32, sharding=NamedSharding(mesh, P()))
+    return Cell(step, (params_abs, cache_abs, tokens_abs, pos_abs), (1,), meta)
+
+
+def lower_cell(cfg, shape, mesh, **kw):
+    """jit + lower one cell against the given mesh (no device allocation)."""
+    cell = build_cell(cfg, shape, mesh, **kw)
+    with mesh:
+        jitted = jax.jit(cell.fn, donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+    return lowered, cell.meta

@@ -1,0 +1,29 @@
+"""Model registry: family -> module implementing the functional model API
+
+    init_params(key, cfg) -> params
+    forward(params, cfg, tokens, *, extra_embeds=None) -> (logits, aux)
+    init_cache(cfg, batch, max_len, dtype) -> cache          (decoders)
+    decode_step(params, cfg, cache, tokens, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        from repro.models import transformer
+        return transformer
+    if cfg.family == "ssm":
+        from repro.models import mamba2
+        return mamba2
+    if cfg.family == "hybrid":
+        from repro.models import zamba2
+        return zamba2
+    if cfg.family == "encdec":
+        from repro.models import whisper
+        return whisper
+    if cfg.family == "conv":
+        from repro.core import blocks
+        return blocks
+    raise ValueError(f"unknown family {cfg.family!r}")

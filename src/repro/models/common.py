@@ -1,0 +1,444 @@
+"""Shared model components: norms, RoPE, GQA attention (chunked-causal and
+KV-cache decode), MLPs, parameter init helpers, and mesh-aware sharding
+constraints.
+
+All models in this package are *functional*: parameters are plain pytrees
+(nested dicts of jax.Arrays), built by ``init_*`` functions and consumed by
+pure ``apply``-style functions.  Layer stacks are stored with a leading
+layer dimension and executed with ``lax.scan`` so the lowered HLO stays
+small enough to compile 61-layer/671B-parameter configs quickly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.interpreters import pxla
+from jax.sharding import PartitionSpec as P
+
+Params = Any  # nested dict pytree
+
+
+# ---------------------------------------------------------------------------
+# Mesh-aware sharding constraints ('dp' / 'mp' logical axes)
+# ---------------------------------------------------------------------------
+
+
+def _ambient_mesh():
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh is None or mesh.empty:
+        return None
+    return mesh
+
+
+def _mesh_axis_names() -> tuple[str, ...]:
+    mesh = _ambient_mesh()
+    return tuple(mesh.axis_names) if mesh is not None else ()
+
+
+def logical_to_spec(*logical: str | None) -> P | None:
+    """Translate logical axes ('dp' batch, 'mp' model, 'ep' combined
+    expert-parallel, None) to a PartitionSpec for the ambient mesh.
+    'dp' maps to ('pod', 'data'); 'ep' to ('data', 'model')."""
+    names = _mesh_axis_names()
+    if not names:
+        return None
+    out = []
+    for a in logical:
+        if a == "dp":
+            axes = tuple(x for x in ("pod", "data") if x in names)
+            out.append(axes if axes else None)
+        elif a == "mp":
+            out.append("model" if "model" in names else None)
+        elif a == "ep":
+            axes = tuple(x for x in ("data", "model") if x in names)
+            out.append(axes if axes else None)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """with_sharding_constraint against the ambient mesh; no-op without one.
+    Per-dim divisibility guard: a dim whose size doesn't divide its mesh
+    axes is left unconstrained instead of erroring (e.g. 64 experts on a
+    256-way 'ep' axis)."""
+    mesh = _ambient_mesh()
+    spec = logical_to_spec(*logical)
+    if spec is None or mesh is None:
+        return x
+    guarded = []
+    used: set = set()
+    for dim, entry in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        axes = entry if isinstance(entry, tuple) else (entry,) if entry else ()
+        # each mesh axis may bind at most one positional dim: drop repeats
+        # (e.g. 'ep' == (data, model) already consumed 'data' before a 'dp')
+        axes = tuple(a for a in axes if a not in used)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        ok = bool(axes) and dim % n == 0
+        guarded.append((axes if len(axes) > 1 else axes[0]) if ok else None)
+        if ok:
+            used.update(axes)
+    return jax.lax.with_sharding_constraint(x, P(*guarded))
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def split(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg, d: int, dtype):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x, cfg):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = x32.mean(-1, keepdims=True)
+        var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (x32 * x32).mean(-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x, scale, eps):
+    """Per-head RMS norm over the last (head_dim) axis (Qwen3 qk_norm)."""
+    x32 = x.astype(jnp.float32)
+    var = (x32 * x32).mean(-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (GPT-NeoX half-rotation convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, hd), positions: (B, T) or (T,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, T, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(T: int, d: int) -> jax.Array:
+    pos = jnp.arange(T, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((T, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, dtype),
+        "wk": dense_init(ks[1], D, KV * hd, dtype),
+        "wv": dense_init(ks[2], D, KV * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, D, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    if cfg.attn_out_bias:
+        p["bo"] = jnp.zeros((D,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _qkv(p, x, cfg, positions):
+    B, T, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, H, hd)
+    k = k.reshape(B, T, KV, hd)
+    v = v.reshape(B, T, KV, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_head_norm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(q, k, v, *, causal: bool, chunk: int = 0,
+                  kv_positions: jax.Array | None = None,
+                  q_positions: jax.Array | None = None,
+                  kv_len: jax.Array | None = None,
+                  unroll: bool = False):
+    """Grouped-query attention.
+
+    q: (B, Tq, H, hd); k, v: (B, Tk, KV, hd); H = KV * G.
+    ``chunk`` > 0 and Tq > chunk => scan over query chunks so the (Tq, Tk)
+    score tensor is never fully materialised (memory-sane 32k prefill).
+    ``kv_len``: dynamic valid-length mask for decode caches.
+    ``unroll``: python loop instead of the chunk scan (roofline probes —
+    HloCostAnalysis counts a while body once; semantics identical).
+    """
+    B, Tq, H, hd = q.shape
+    _, Tk, KV, _ = k.shape
+    vd = v.shape[-1]
+    G = H // KV
+    scale = hd ** -0.5
+    qg = q.reshape(B, Tq, KV, G, hd)
+
+    if q_positions is None:
+        q_positions = jnp.arange(Tq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Tk)
+
+    def blk(q_blk, qpos_blk):
+        # q_blk: (B, tq, KV, G, hd)
+        s = jnp.einsum("btkgh,bskh->bkgts", q_blk.astype(jnp.float32) * scale,
+                       k.astype(jnp.float32))
+        mask = jnp.ones((q_blk.shape[1], Tk), bool)
+        if causal:
+            mask &= qpos_blk[:, None] >= kv_positions[None, :]
+        if kv_len is not None:
+            mask &= (kv_positions < kv_len)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        a = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgts,bskh->btkgh", a.astype(v.dtype), v)
+        return o
+
+    if chunk and Tq > chunk and Tq % chunk == 0:
+        n = Tq // chunk
+        if unroll:
+            outs = [blk(qg[:, i * chunk:(i + 1) * chunk],
+                        q_positions[i * chunk:(i + 1) * chunk])
+                    for i in range(n)]
+            o = jnp.concatenate(outs, axis=1)
+        else:
+            def body(_, i):
+                qb = jax.lax.dynamic_slice_in_dim(qg, i * chunk, chunk, axis=1)
+                pb = jax.lax.dynamic_slice_in_dim(q_positions, i * chunk, chunk, axis=0)
+                return None, blk(qb, pb)
+
+            _, chunks = jax.lax.scan(body, None, jnp.arange(n))
+            # chunks: (n, B, chunk, KV, G, vd)
+            o = jnp.moveaxis(chunks, 0, 1).reshape(B, Tq, KV, G, vd)
+    else:
+        o = blk(qg, q_positions)
+    return o.reshape(B, Tq, H, vd)
+
+
+def flash_or_phantom(q, k, v, cfg, *, causal):
+    """Dispatch to the Pallas flash kernel (q: (B,T,H,hd) grouped to
+    (B,T,KV,G,hd)) or, for roofline probes (``cfg.flash_phantom``), to a
+    traffic-equivalent surrogate: reads q/k/v, writes o — exactly the flash
+    kernel's HBM footprint; its missing MXU flops are re-added analytically
+    (roofline/analysis.py flash_correction)."""
+    from repro.kernels.flash_attention import flash_attention
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, T, KV, H // KV, hd)
+    if cfg.flash_phantom:
+        o = (qg + (k.mean(axis=1) + v.mean(axis=1))[:, None, :, None, :])
+        return o.reshape(B, T, H, hd)
+    interpret = jax.default_backend() != "tpu"
+    o = flash_attention(qg, k, v, causal, min(cfg.attn_chunk or 256, T),
+                        interpret)
+    return o.reshape(B, T, H, hd)
+
+
+def attention_block(p, x, cfg, positions, *, causal=True):
+    """Full-sequence self-attention (train / prefill)."""
+    q, k, v = _qkv(p, x, cfg, positions)
+    if cfg.attn_impl == "flash":
+        o = flash_or_phantom(q, k, v, cfg, causal=causal)
+    else:
+        o = gqa_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk,
+                          unroll=cfg.unroll_layers)
+    o = o.reshape(*x.shape[:2], -1) @ p["wo"]
+    if cfg.attn_out_bias:
+        o = o + p["bo"]
+    return o
+
+
+def attention_decode(p, x, cfg, cache_k, cache_v, pos):
+    """Single-token decode.  x: (B, 1, D); cache_k/v: (B, Tmax, KV, hd);
+    pos: scalar current position.  Returns (out, new_k, new_v)."""
+    B = x.shape[0]
+    q, k, v = _qkv(p, x, cfg, positions=jnp.full((B, 1), pos))
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    o = gqa_attention(q, cache_k, cache_v, causal=False, chunk=0,
+                      kv_len=pos + 1)
+    o = o.reshape(B, 1, -1) @ p["wo"]
+    if cfg.attn_out_bias:
+        o = o + p["bo"]
+    return o, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg, dtype, d_ff: int | None = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = split(key, 3)
+    if cfg.mlp_act == "swiglu":
+        p = {
+            "w_gate": dense_init(ks[0], D, F, dtype),
+            "w_up": dense_init(ks[1], D, F, dtype),
+            "w_down": dense_init(ks[2], F, D, dtype),
+        }
+    else:
+        p = {
+            "w_up": dense_init(ks[0], D, F, dtype),
+            "w_down": dense_init(ks[1], F, D, dtype),
+        }
+    if cfg.mlp_bias:
+        p["b_up"] = jnp.zeros((F,), dtype)
+        p["b_down"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_mlp(p, x, cfg):
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu((x @ p["w_gate"]).astype(jnp.float32)).astype(x.dtype) * (x @ p["w_up"])
+    else:
+        h = x @ p["w_up"]
+        if "b_up" in p:
+            h = h + p["b_up"]
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    h = shard(h, "dp", None, "mp")
+    o = h @ p["w_down"]
+    if "b_down" in p:
+        o = o + p["b_down"]
+    return o
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg, dtype):
+    p = {"tok": embed_init(key, cfg.padded_vocab, cfg.d_model, dtype)}
+    if cfg.pos_embedding == "learned":
+        k2 = jax.random.fold_in(key, 1)
+        p["pos"] = embed_init(k2, min(cfg.max_position, 1 << 16), cfg.d_model, dtype)
+    return p
+
+
+def embed_tokens(p, tokens, cfg, positions=None):
+    x = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.pos_embedding == "learned":
+        pos = positions if positions is not None else jnp.arange(tokens.shape[-1])
+        x = x + jnp.take(p["pos"], pos, axis=0)
+    elif cfg.pos_embedding == "sinusoidal":
+        x = x + sinusoidal_positions(tokens.shape[-1], cfg.d_model).astype(x.dtype)
+    return x
+
+
+def logits_from_hidden(params, x, cfg):
+    emb = params["embed"]["tok"]
+    w = emb.T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ w).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask the vocab-padding columns
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, NEG_INF, logits)
+    return logits
+
+
+def maybe_remat(fn, cfg):
+    if not cfg.remat:
+        return fn
+    policies = {
+        # paper-era default: recompute EVERYTHING in the backward pass
+        "nothing": jax.checkpoint_policies.nothing_saveable,
+        # hillclimbed: keep matmul outputs, recompute the cheap elementwise
+        # chains only — trades ~seq*d_model*L bytes of HBM for skipping the
+        # recompute of every dot (EXPERIMENTS.md §Perf)
+        "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+    }
+    policy = policies[getattr(cfg, "remat_policy", "nothing")]
+    return jax.checkpoint(fn, policy=policy)
+
+
+def scan_layers(body, carry, xs, cfg):
+    """``lax.scan`` over a stacked layer axis — or an unrolled python loop
+    when ``cfg.unroll_layers``.
+
+    XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+    count, so the roofline probes (roofline/analysis.py) lower reduced-depth
+    configs with ``unroll_layers=True`` to obtain exact per-layer FLOP/byte/
+    collective costs; production configs keep the scan (small HLO, fast
+    compiles).  Semantics are identical to ``jax.lax.scan(body, carry, xs)``.
+    """
+    if not getattr(cfg, "unroll_layers", False):
+        return jax.lax.scan(body, carry, xs)
+    L = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x_i = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x_i)
+        ys.append(y)
+    if not ys or ys[0] is None:
+        return carry, None
+    stacked = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    return carry, stacked

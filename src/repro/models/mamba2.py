@@ -1,0 +1,266 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060), attention-free LM.
+
+The causal depthwise conv inside every block runs through the paper's
+BRGEMM conv1d kernel stack (``repro.kernels.ops.depthwise_conv1d``) — this
+is where Chaudhary et al.'s technique lands inside the SSM/hybrid
+architectures (DESIGN.md §5).
+
+Sequence mixing is the chunked SSD algorithm: quadratic attention-like
+computation inside chunks of length ``cfg.ssm.chunk``, linear recurrent
+state passing across chunks (a ``lax.scan``).  Decode is the O(1)
+recurrent update on an (H, P, N) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import common as cm
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, n_heads, conv_dim
+
+
+def init_block(key, cfg, dtype):
+    s = cfg.ssm
+    D = cfg.d_model
+    d_inner, H, conv_dim = dims(cfg)
+    ks = cm.split(key, 5)
+    d_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + H  # z, xBC, dt
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,), jnp.float32)
+                 * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    return {
+        "in_proj": cm.dense_init(ks[0], D, d_proj, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_dim), jnp.float32)
+                   * s.conv_width ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "gate_norm": jnp.ones((d_inner,), dtype),
+        "out_proj": cm.dense_init(ks[3], d_inner, D, dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    s = cfg.ssm
+    d_inner, H, _ = dims(cfg)
+    gN = s.n_groups * s.d_state
+    z, xBC, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * gN], axis=-1)
+    return z, xBC, dt
+
+
+def _conv(p, xBC, cfg):
+    """Causal depthwise conv over time via the paper's BRGEMM kernel stack."""
+    y = kops.depthwise_conv1d(
+        xBC.transpose(0, 2, 1), p["conv_w"], dilation=1, padding="CAUSAL"
+    ).transpose(0, 2, 1)
+    return jax.nn.silu((y + p["conv_b"]).astype(jnp.float32))
+
+
+def ssd_chunked(x, dt, A, B, C, chunk):
+    """SSD scan.  x: (B,T,H,P), dt: (B,T,H), A: (H,), B/C: (B,T,G,N).
+    Returns y: (B,T,H,P).  All math fp32."""
+    b, T, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    if T % chunk:
+        # Pad to a chunk multiple.  dt=0 padding is inert: dA=0 leaves the
+        # cumulative decay flat and dt_j·x_j = 0 removes the padded taps from
+        # every einsum, so the sliced-out prefix is exact.
+        pad = chunk - T % chunk
+        pw = [(0, 0), (0, pad)]
+        x = jnp.pad(x, pw + [(0, 0), (0, 0)])
+        dt = jnp.pad(dt, pw + [(0, 0)])
+        B = jnp.pad(B, pw + [(0, 0), (0, 0)])
+        C = jnp.pad(C, pw + [(0, 0), (0, 0)])
+        return ssd_chunked(x, dt, A, B, C, chunk)[:, :T]
+    nc = T // chunk
+    rep = H // G
+
+    def r(t):  # (b, nc, chunk, ...)
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    x_, dt_, B_, C_ = r(x), r(dt), r(B), r(C)
+
+    # --- canonical head-major layout (§Perf: 'SSD layout canonicalisation')
+    # All quadratic-in-chunk einsums below keep batch dims (b, nc, H|G)
+    # LEADING and reduce over trailing dims, so XLA lowers them as batched
+    # GEMMs with NO physical transposes of 5-D fp32 intermediates (the
+    # baseline's mixed orders cost ~4 chunk² copies per layer per pass).
+    xh = x_.transpose(0, 1, 3, 2, 4)            # (b,nc,H,c,P)
+    dth = dt_.transpose(0, 1, 3, 2)             # (b,nc,H,c)
+    Bg = B_.transpose(0, 1, 3, 2, 4)            # (b,nc,G,c,N)
+    Cg = C_.transpose(0, 1, 3, 2, 4)
+    dA_cs_h = jnp.cumsum(dth * A[:, None], axis=3)  # (b,nc,H,c)
+
+    # intra-chunk: y[i] += C_i·B_j exp(cs_i - cs_j) dt_j x_j, j<=i.
+    # C·B is HEAD-INDEPENDENT within a group — compute once per group
+    # (rep× less flops+bytes than the baseline's repeat-to-heads).
+    cb = jnp.einsum("bxgcn,bxgsn->bxgcs", Cg, Bg)   # (b,nc,G,c,c)
+    seg = dA_cs_h[..., :, None] - dA_cs_h[..., None, :]  # (b,nc,H,c,c)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(causal, jnp.exp(seg), 0.0)
+    cbl = (cb.reshape(b, nc, G, 1, chunk, chunk)
+           * L.reshape(b, nc, G, rep, chunk, chunk)).reshape(
+        b, nc, H, chunk, chunk)
+    y_intra = jnp.einsum("bxhcs,bxhs,bxhsp->bxhcp", cbl, dth, xh)
+
+    # chunk states: S_n = sum_j exp(cs_last - cs_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(dA_cs_h[..., -1:] - dA_cs_h)  # (b,nc,H,c)
+    wdt = (dth * decay_to_end).reshape(b, nc, G, rep, chunk)
+    S = jnp.einsum("bxgcn,bxgrc,bxgrcp->bxgrnp", Bg, wdt,
+                   xh.reshape(b, nc, G, rep, chunk, P)).reshape(
+        b, nc, H, N, P)
+
+    # inter-chunk recurrence over nc chunks
+    chunk_decay = jnp.exp(dA_cs_h[..., -1])  # (b,nc,H)
+
+    def scan_body(h, inp):
+        S_n, dec = inp  # (b,H,N,P), (b,H)
+        h_next = h * dec[:, :, None, None] + S_n
+        return h_next, h  # emit state *entering* the chunk
+
+    S_sw = jnp.moveaxis(S, 1, 0)
+    dec_sw = jnp.moveaxis(chunk_decay, 1, 0)
+    h0 = jnp.zeros((b, H, N, P), jnp.float32)
+    _, h_in = jax.lax.scan(scan_body, h0, (S_sw, dec_sw))
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (b,nc,H,N,P)
+
+    y_inter = jnp.einsum("bxgcn,bxgrc,bxgrnp->bxgrcp",
+                         Cg, jnp.exp(dA_cs_h).reshape(b, nc, G, rep, chunk),
+                         h_in.reshape(b, nc, G, rep, N, P)).reshape(
+        b, nc, H, chunk, P)
+    y = (y_intra + y_inter).transpose(0, 1, 3, 2, 4).reshape(b, T, H, P)
+    return y
+
+
+def block_fwd(p, xres, cfg):
+    """One Mamba2 block, full sequence.  xres: (B, T, D) (already normed)."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = dims(cfg)
+    P, G, N = s.head_dim, s.n_groups, s.d_state
+    b, T, _ = xres.shape
+    z, xBC, dt = _split_proj(cfg, xres @ p["in_proj"])
+    xBC = _conv(p, xBC, cfg)  # fp32 (B,T,conv_dim)
+    x_ssm, B, C = jnp.split(xBC, [d_inner, d_inner + G * N], axis=-1)
+    x_ssm = x_ssm.reshape(b, T, H, P)
+    B = B.reshape(b, T, G, N)
+    C = C.reshape(b, T, G, N)
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y = ssd_chunked(x_ssm, dt_act, A, B, C, s.chunk)
+    y = y + p["D"][None, None, :, None] * x_ssm
+    y = y.reshape(b, T, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    # gated RMSNorm
+    y = y * jax.lax.rsqrt((y * y).mean(-1, keepdims=True) + cfg.norm_eps)
+    y = (y * p["gate_norm"].astype(jnp.float32)).astype(xres.dtype)
+    return y @ p["out_proj"]
+
+
+def init_block_state(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    d_inner, H, conv_dim = dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, H, s.d_state, s.head_dim), dtype),
+    }
+
+
+def block_decode(p, xres, cfg, state):
+    """One token.  xres: (B, 1, D); state: {'conv': (B,S-1,cd), 'ssm': (B,H,N,P)}."""
+    s = cfg.ssm
+    d_inner, H, conv_dim = dims(cfg)
+    P, G, N = s.head_dim, s.n_groups, s.d_state
+    b = xres.shape[0]
+    z, xBC, dt = _split_proj(cfg, xres @ p["in_proj"])  # (B,1,·)
+    # conv via the rolling state
+    window = jnp.concatenate([state["conv"], xBC.astype(state["conv"].dtype)], axis=1)  # (B,S,cd)
+    conv_out = jnp.einsum("bsc,sc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out)[:, None, :]  # (B,1,cd)
+    new_conv = window[:, 1:, :]
+    x_ssm, B, C = jnp.split(conv_out, [d_inner, d_inner + G * N], axis=-1)
+    x_ssm = x_ssm.reshape(b, H, P)
+    B = jnp.repeat(B.reshape(b, G, N), H // G, axis=1)  # (b,H,N)
+    C = jnp.repeat(C.reshape(b, G, N), H // G, axis=1)
+    dt_act = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (b,H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt_act * A)  # (b,H)
+    h = state["ssm"] * decay[:, :, None, None] + \
+        jnp.einsum("bh,bhn,bhp->bhnp", dt_act, B, x_ssm.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", C, h) + p["D"][None, :, None] * x_ssm
+    y = y.reshape(b, 1, d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt((y * y).mean(-1, keepdims=True) + cfg.norm_eps)
+    y = (y * p["gate_norm"].astype(jnp.float32)).astype(xres.dtype)
+    return y @ p["out_proj"], {"conv": new_conv, "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# Full LM (family == 'ssm')
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = cm.split(key, 2)
+    return {"norm": cm.init_norm(cfg, cfg.d_model, dtype),
+            "mixer": init_block(ks[0], cfg, dtype)}
+
+
+def init_params(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = cm.split(key, 3)
+    keys = jnp.stack(cm.split(ks[1], cfg.n_layers))
+    return {
+        "embed": cm.init_embed(ks[0], cfg, dtype),
+        "layers": jax.vmap(lambda k: _init_layer(k, cfg))(keys),
+        "final_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+        "unembed": cm.dense_init(ks[2], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+
+
+def forward(params, cfg, tokens, *, extra_embeds=None, last_only=False,
+            hidden_only=False):
+    x = cm.embed_tokens(params["embed"], tokens, cfg)
+    x = cm.shard(x, "dp", None, None)
+
+    def body(x, lp):
+        def f(x_, lp_):
+            return x_ + block_fwd(lp_["mixer"], cm.apply_norm(lp_["norm"], x_, cfg), cfg)
+        return cm.maybe_remat(f, cfg)(x, lp), None
+
+    x, _ = cm.scan_layers(body, x, params["layers"], cfg)
+    if last_only:
+        x = x[:, -1:]
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    if hidden_only:
+        return x, 0.0
+    return cm.logits_from_hidden(params, x, cfg), 0.0
+
+
+def init_cache(cfg, batch, max_len=0, dtype=jnp.float32):
+    """SSM cache is O(1) in sequence length (max_len unused)."""
+    L = cfg.n_layers
+    one = init_block_state(cfg, batch, dtype)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (L,) + a.shape), one)
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    x = cm.embed_tokens(params["embed"], tokens, cfg)
+
+    def body(x, inp):
+        lp, st = inp
+        o, new_st = block_decode(lp["mixer"], cm.apply_norm(lp["norm"], x, cfg), cfg, st)
+        return x + o, new_st
+
+    x, new_cache = cm.scan_layers(body, x, (params["layers"], cache), cfg)
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    return cm.logits_from_hidden(params, x, cfg), new_cache

@@ -1,0 +1,159 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries go through a low-rank bottleneck (q_lora); keys/values are jointly
+compressed to a ``kv_lora_rank`` latent plus a shared RoPE key.  The decode
+cache stores only (c_kv, k_rope) — the paper's compressed KV cache —
+reconstructing per-head K/V via ``kv_up`` at attention time (the baseline);
+the "absorbed" decode path (folding kv_up into the query / output
+projections so the cache is attended to directly in latent space) is the
+hillclimbed variant, selected with ``absorb=True``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+def init_mla(key, cfg, dtype):
+    a = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qh = a.qk_nope_head_dim + a.qk_rope_head_dim
+    ks = cm.split(key, 6)
+    return {
+        "q_down": cm.dense_init(ks[0], D, a.q_lora_rank, dtype),
+        "q_norm": jnp.ones((a.q_lora_rank,), dtype),
+        "q_up": cm.dense_init(ks[1], a.q_lora_rank, H * qh, dtype),
+        "kv_down": cm.dense_init(ks[2], D, a.kv_lora_rank + a.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.ones((a.kv_lora_rank,), dtype),
+        "kv_up": cm.dense_init(ks[3], a.kv_lora_rank,
+                               H * (a.qk_nope_head_dim + a.v_head_dim), dtype),
+        "wo": cm.dense_init(ks[4], H * a.v_head_dim, D, dtype),
+    }
+
+
+def _rms(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    return (x32 * jax.lax.rsqrt((x32 * x32).mean(-1, keepdims=True) + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _queries(p, x, cfg, positions):
+    a = cfg.mla
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    qh = a.qk_nope_head_dim + a.qk_rope_head_dim
+    q = _rms(x @ p["q_down"], p["q_norm"], cfg.norm_eps) @ p["q_up"]
+    q = q.reshape(B, T, H, qh)
+    q_nope, q_rope = jnp.split(q, [a.qk_nope_head_dim], axis=-1)
+    q_rope = cm.apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent(p, x, cfg, positions):
+    a = cfg.mla
+    ckr = x @ p["kv_down"]
+    c_kv, k_rope = jnp.split(ckr, [a.kv_lora_rank], axis=-1)
+    c_kv = _rms(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = cm.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope  # (B, T, r), (B, T, rope)
+
+
+def _expand_kv(p, c_kv, cfg):
+    a = cfg.mla
+    B, T, _ = c_kv.shape
+    H = cfg.n_heads
+    kv = (c_kv @ p["kv_up"]).reshape(B, T, H, a.qk_nope_head_dim + a.v_head_dim)
+    return jnp.split(kv, [a.qk_nope_head_dim], axis=-1)  # k_nope, v
+
+
+def mla_attention_block(p, x, cfg, positions):
+    """Full-sequence MLA self-attention (train / prefill)."""
+    a = cfg.mla
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    c_kv, k_rope = _latent(p, x, cfg, positions)
+    k_nope, v = _expand_kv(p, c_kv, cfg)
+    H = cfg.n_heads
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  k_nope.shape[:3] + (a.qk_rope_head_dim,))], -1)
+    if cfg.attn_impl == "flash":
+        # MLA is MHA at attention time (KV == H, G == 1); qk head dim (192)
+        # differs from the v head dim (128) -> padded kernel call
+        o = _flash_mla(q, k, v, cfg)
+    else:
+        o = cm.gqa_attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                             unroll=cfg.unroll_layers)
+    return o.reshape(*x.shape[:2], H * a.v_head_dim) @ p["wo"]
+
+
+def _flash_mla(q, k, v, cfg):
+    """Flash with mismatched qk/v head dims (192 vs 128): pad v up to the
+    qk dim for the kernel, slice the output back."""
+    import jax
+    from repro.kernels.flash_attention import flash_attention
+    B, T, H, qh = q.shape
+    vh = v.shape[-1]
+    if cfg.flash_phantom:
+        o = q[..., :vh] + (k.mean(1)[..., :vh] + v.mean(1))[:, None]
+        return o
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qh - vh)))
+    o = flash_attention(q.reshape(B, T, H, 1, qh), k, vp, True,
+                        min(cfg.attn_chunk or 256, T),
+                        jax.default_backend() != "tpu")
+    return o.reshape(B, T, H, qh)[..., :vh]
+
+
+def mla_init_cache(cfg, batch, max_len, dtype):
+    a = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, a.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, a.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_attention_decode(p, x, cfg, cache, pos, *, absorb: bool = False):
+    """Single-token decode against the compressed latent cache."""
+    a = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    positions = jnp.full((B, 1), pos)
+    q_nope, q_rope = _queries(p, x, cfg, positions)        # (B,1,H,·)
+    c_new, kr_new = _latent(p, x, cfg, positions)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+    Tk = c_kv.shape[1]
+    kv_len = pos + 1
+    mask = (jnp.arange(Tk) < kv_len)  # (Tk,)
+    scale = (a.qk_nope_head_dim + a.qk_rope_head_dim) ** -0.5
+
+    if absorb:
+        # fold kv_up's K-half into the query and its V-half into the output:
+        # attention runs directly in the r-dimensional latent space, so the
+        # per-step cache-expansion GEMM (T·r·H·(nope+v)) disappears.
+        wk_up = p["kv_up"][:, : H * a.qk_nope_head_dim].reshape(
+            a.kv_lora_rank, H, a.qk_nope_head_dim)
+        wv_up = p["kv_up"][:, H * a.qk_nope_head_dim:].reshape(
+            a.kv_lora_rank, H, a.v_head_dim)
+        q_lat = jnp.einsum("bthn,rhn->bthr", q_nope.astype(jnp.float32),
+                           wk_up.astype(jnp.float32))         # (B,1,H,r)
+        s = jnp.einsum("bthr,bsr->bhts", q_lat * scale, c_kv.astype(jnp.float32))
+        s += jnp.einsum("bthe,bse->bhts", q_rope.astype(jnp.float32) * scale,
+                        k_rope.astype(jnp.float32))
+        s = jnp.where(mask[None, None, None], s, cm.NEG_INF)
+        att = jax.nn.softmax(s, -1)
+        o_lat = jnp.einsum("bhts,bsr->bthr", att, c_kv.astype(jnp.float32))  # (B,1,H,r)
+        o = jnp.einsum("bthr,rhv->bthv", o_lat, wv_up.astype(jnp.float32))
+    else:
+        k_nope, v = _expand_kv(p, c_kv, cfg)                   # (B,Tk,H,·)
+        s = jnp.einsum("bthn,bshn->bhts", q_nope.astype(jnp.float32) * scale,
+                       k_nope.astype(jnp.float32))
+        s += jnp.einsum("bthe,bse->bhts", q_rope.astype(jnp.float32) * scale,
+                        k_rope.astype(jnp.float32))
+        s = jnp.where(mask[None, None, None], s, cm.NEG_INF)
+        att = jax.nn.softmax(s, -1)
+        o = jnp.einsum("bhts,bshv->bthv", att, v.astype(jnp.float32))
+
+    o = o.reshape(B, 1, H * a.v_head_dim).astype(x.dtype) @ p["wo"]
+    return o, {"c_kv": c_kv, "k_rope": k_rope}

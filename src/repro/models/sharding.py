@@ -1,0 +1,223 @@
+"""Parameter / batch / cache PartitionSpec rules.
+
+2D sharding: tensor-parallel dims (heads, d_ff, experts, vocab) on 'model';
+the other large dim on 'data' (+'pod') FSDP-style so optimizer state for
+the 671B config fits per-chip HBM.  Rules are *name-based* over the params
+pytree, so every model family gets specs without per-model code.
+
+Logical axes here are 'dp' / 'mp'; ``to_mesh_specs`` translates them to the
+ambient mesh's concrete axis names (('pod','data') / 'model').
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+
+# rule: leaf-name -> logical spec for the *trailing* dims (layer-stack dims
+# are detected by ndim surplus and padded with None on the left).
+_RULES: dict[str, tuple] = {
+    # embeddings / unembedding
+    "tok": ("mp", "dp"),
+    "pos": (None, "dp"),
+    "unembed": ("dp", "mp"),
+    # attention
+    "wq": ("dp", "mp"), "wk": ("dp", "mp"), "wv": ("dp", "mp"),
+    "wo": ("mp", "dp"),
+    "bq": ("mp",), "bk": ("mp",), "bv": ("mp",), "bo": (None,),
+    "q_norm": (None,), "k_norm": (None,),
+    # MLA
+    "q_down": ("dp", None), "q_up": (None, "mp"),
+    "kv_down": ("dp", None), "kv_up": (None, "mp"),
+    "kv_norm": (None,),
+    # MLP
+    "w_gate": ("dp", "mp"), "w_up": ("dp", "mp"), "w_down": ("mp", "dp"),
+    "b_up": ("mp",), "b_down": (None,),
+    # MoE (experts on 'mp' = expert parallelism; hidden dims on 'dp' = FSDP)
+    "router": ("dp", None), "router_bias": (None,),
+    # SSM
+    "in_proj": ("dp", "mp"), "out_proj": ("mp", "dp"),
+    "conv_w": (None, "mp"), "conv_b": ("mp",),
+    "dt_bias": ("mp",), "A_log": ("mp",), "D": ("mp",),
+    "gate_norm": ("mp",),
+    # norms
+    "scale": (None,), "bias": (None,),
+    # conv nets (channels are tiny; replicate)
+    "w": (None, None, None), "b": (None,),
+    # whisper frontend
+    "conv1_w": (None, "mp", None), "conv1_b": ("mp",),
+    "conv2_w": (None, "mp", "dp"), "conv2_b": ("mp",),
+}
+
+# MoE expert stacks get a 3D rule keyed on name within a 'moe' scope.
+# 'ep' = expert parallelism over the COMBINED (pod·data·model) axes: each
+# device owns whole experts, so FSDP's per-microbatch weight all-gather
+# disappears (tokens move instead — §Perf cell 1 it-6).  Falls back to the
+# ('mp', 'dp', ·) TP+FSDP layout when n_experts doesn't divide the combined
+# axis size (translation in to_mesh_specs, which sees the leaf shapes).
+_MOE_RULES = {
+    "w_gate": ("ep", "dp", None),
+    "w_up": ("ep", "dp", None),
+    "w_down": ("ep", None, "dp"),
+}
+_EP_FALLBACK = {"ep": "mp"}  # per-dim fallback when divisibility fails
+
+
+def _key_name(k) -> str:
+    if isinstance(k, DictKey):
+        return str(k.key)
+    if isinstance(k, SequenceKey):
+        return str(k.idx)
+    return str(k)
+
+
+def spec_for_path(path, leaf) -> tuple:
+    names = [_key_name(k) for k in path]
+    leaf_name = names[-1]
+    in_moe = "moe" in names and "shared" not in names
+    rule = None
+    if in_moe and leaf_name in _MOE_RULES:
+        rule = _MOE_RULES[leaf_name]
+    elif leaf_name in _RULES:
+        rule = _RULES[leaf_name]
+    if rule is None:
+        rule = (None,) * leaf.ndim
+    # layer-stacked params carry extra leading dims -> replicate those
+    extra = leaf.ndim - len(rule)
+    if extra > 0:
+        rule = (None,) * extra + tuple(rule)
+    elif extra < 0:
+        rule = tuple(rule[-leaf.ndim:]) if leaf.ndim else ()
+    return rule
+
+
+def logical_param_specs(params):
+    """Pytree of logical-axis tuples matching params."""
+    return jax.tree_util.tree_map_with_path(spec_for_path, params)
+
+
+_LOGICAL = ("dp", "mp", "ep", None)
+
+
+def to_mesh_specs(logical_tree, mesh, shapes_tree=None) -> object:
+    """Translate logical ('dp'/'mp'/'ep'/None) tuples to PartitionSpecs.
+
+    'ep' needs the leaf's dim size (expert count) to check divisibility by
+    the combined axis product; pass ``shapes_tree`` (same structure, leaves
+    with .shape) to enable it — without shapes, 'ep' degrades to 'mp'.
+    When 'ep' binds the combined axes, any 'dp' in the SAME spec is dropped
+    (a mesh axis may appear once per PartitionSpec).
+    """
+    names = tuple(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in names) or None
+    mp = "model" if "model" in names else None
+    ep = tuple(a for a in ("data", "model") if a in names) or None
+    ep_size = 1
+    for a in ep or ():
+        ep_size *= mesh.shape[a]
+
+    def is_leaf(x):
+        return isinstance(x, tuple) and all(a in _LOGICAL for a in x)
+
+    def tr(t, leaf=None):
+        use_ep = ("ep" in t and ep and leaf is not None
+                  and leaf.shape[t.index("ep")] % ep_size == 0)
+        out = []
+        for a in t:
+            if a == "ep":
+                out.append(ep if use_ep else mp)
+            elif a == "dp":
+                out.append(None if use_ep else dp)
+            elif a == "mp":
+                out.append(mp)
+            else:
+                out.append(None)
+        return P(*out)
+
+    if shapes_tree is None:
+        return jax.tree.map(tr, logical_tree, is_leaf=is_leaf)
+    flat_l, treedef = jax.tree_util.tree_flatten(logical_tree, is_leaf=is_leaf)
+    flat_s = jax.tree_util.tree_leaves(shapes_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [tr(l, s) for l, s in zip(flat_l, flat_s)])
+
+
+def param_pspecs(params, mesh):
+    return to_mesh_specs(logical_param_specs(params), mesh,
+                         shapes_tree=params)
+
+
+def constrain_like_params(tree):
+    """with_sharding_constraint every leaf of a params-shaped pytree
+    (e.g. GRADIENTS) to its parameter's logical spec.
+
+    §Perf hillclimb: without this, GSPMD re-shards the fp32 gradient
+    accumulator inside the microbatch loop (observed as full f32
+    all-gathers of weight-sized tensors per microbatch); pinning the grads
+    to the param layout removes those collectives."""
+    from repro.models import common as cm
+
+    def one(path, leaf):
+        return cm.shard(leaf, *spec_for_path(path, leaf))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def batch_pspec(mesh) -> P:
+    names = tuple(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in names) or None
+    return P(dp)
+
+
+def cache_pspecs(cache, mesh, batch_size: int):
+    """KV / SSM caches: shard batch on dp when divisible, heads/channels on mp.
+
+    Cache layouts (leading layer-stack dim handled by padding):
+      k/v        : (L, B, T, KV, hd)   -> (None, dp, None, mp, None)
+      c_kv/k_rope: (L, B, T, r)        -> (None, dp, None, None)
+      conv state : (L, B, S-1, cd)     -> (None, dp, None, mp)
+      ssm state  : (L, B, H, N, P)     -> (None, dp, mp, None, None)
+      cross_k/v  : (L, B, Te, H, hd)   -> (None, dp, None, mp, None)
+    """
+    names = tuple(mesh.axis_names)
+    dp = tuple(a for a in ("pod", "data") if a in names) or None
+    mp = "model" if "model" in names else None
+    n_mp = mesh.shape["model"] if mp else 1
+    n_dp = 1
+    for a in ("pod", "data"):
+        if a in names:
+            n_dp *= mesh.shape[a]
+    bdp = dp if (dp and batch_size % n_dp == 0) else None
+
+    def spec(path, leaf):
+        name = _key_name(path[-1])
+        nd = leaf.ndim
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # shard KV heads on mp when they divide the axis; otherwise
+            # fall back to sharding head_dim (GQA archs with KV < mp)
+            kv_heads, hd = leaf.shape[-2], leaf.shape[-1]
+            if kv_heads % n_mp == 0:
+                s = (None, bdp, None, mp, None)
+            elif hd % n_mp == 0:
+                s = (None, bdp, None, None, mp)
+            else:
+                s = (None, bdp, None, None, None)
+        elif name == "c_kv":
+            # latent cache: shard the rank dim on mp (it is 512 — divisible)
+            s = (None, bdp, None, mp)
+        elif name == "k_rope":
+            s = (None, bdp, None, None)
+        elif name == "conv":
+            s = (None, bdp, None, mp)
+        elif name == "ssm":
+            s = (None, bdp, mp, None, None)
+        else:
+            s = (None,) * nd
+        if len(s) > nd:
+            s = s[len(s) - nd:]
+        elif len(s) < nd:
+            s = (None,) * (nd - len(s)) + s
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

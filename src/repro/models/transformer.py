@@ -1,0 +1,195 @@
+"""Decoder-only transformer LM covering the dense, MoE, and VLM families.
+
+Layer stacks are stored stacked (leading layer axis) and executed with
+``lax.scan``; MoE models with leading dense layers (DeepSeek/Moonlight) get
+two homogeneous stacks.  Attention is standard GQA or MLA depending on
+``cfg.mla``.  The VLM family (InternVL) prepends stub patch embeddings to
+the token embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+
+
+def _n_dense(cfg) -> int:
+    if cfg.moe is None:
+        return cfg.n_layers
+    return cfg.moe.first_dense_layers
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _init_attn(key, cfg, dtype):
+    if cfg.mla is not None:
+        return mla_mod.init_mla(key, cfg, dtype)
+    return cm.init_attention(key, cfg, dtype)
+
+
+def _init_layer(key, cfg, *, moe_layer: bool):
+    dtype = _dtype(cfg)
+    ks = cm.split(key, 4)
+    p = {
+        "attn_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+        "attn": _init_attn(ks[0], cfg, dtype),
+        "mlp_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+    }
+    if moe_layer:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        d_ff = cfg.d_ff if cfg.moe is None else cfg.moe.d_ff_dense
+        p["mlp"] = cm.init_mlp(ks[2], cfg, dtype, d_ff=d_ff)
+    return p
+
+
+def init_params(key, cfg):
+    dtype = _dtype(cfg)
+    ks = cm.split(key, 4)
+    n_dense = _n_dense(cfg)
+    n_moe = cfg.n_layers - n_dense
+    params = {"embed": cm.init_embed(ks[0], cfg, dtype)}
+    if n_dense:
+        keys = jnp.stack(cm.split(ks[1], n_dense))
+        params["dense_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, moe_layer=False))(keys)
+    if n_moe:
+        keys = jnp.stack(cm.split(ks[2], n_moe))
+        params["moe_layers"] = jax.vmap(
+            lambda k: _init_layer(k, cfg, moe_layer=True))(keys)
+    params["final_norm"] = cm.init_norm(cfg, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["unembed"] = cm.dense_init(ks[3], cfg.d_model, cfg.padded_vocab, dtype)
+    return params
+
+
+def _attn_block(lp, x, cfg, positions):
+    if cfg.mla is not None:
+        return mla_mod.mla_attention_block(lp["attn"], x, cfg, positions)
+    return cm.attention_block(lp["attn"], x, cfg, positions)
+
+
+def _layer_fwd(lp, x, cfg, positions, *, moe_layer: bool):
+    x = x + _attn_block(lp, cm.apply_norm(lp["attn_norm"], x, cfg), cfg, positions)
+    h = cm.apply_norm(lp["mlp_norm"], x, cfg)
+    if moe_layer:
+        o, aux = moe_mod.moe_ffn(lp["moe"], h, cfg)
+    else:
+        o, aux = cm.apply_mlp(lp["mlp"], h, cfg), 0.0
+    x = cm.shard(x + o, "dp", None, None)
+    return x, jnp.asarray(aux, jnp.float32)
+
+
+def _scan_stack(x, stack, cfg, positions, *, moe_layer: bool):
+    def body(x, lp):
+        return cm.maybe_remat(
+            lambda x_, lp_: _layer_fwd(lp_, x_, cfg, positions, moe_layer=moe_layer),
+            cfg)(x, lp)
+
+    x, aux = cm.scan_layers(body, x, stack, cfg)
+    return x, aux.sum()
+
+
+def forward(params, cfg, tokens, *, extra_embeds=None, last_only=False,
+            hidden_only=False):
+    """tokens: (B, T_text) int32; extra_embeds: (B, T_img, D) for VLM.
+    Returns (logits fp32 (B, T, V), aux_loss).  ``last_only`` restricts the
+    unembedding to the final position (prefill serving path — avoids the
+    (B, T, V) logits tensor); ``hidden_only`` returns the final-norm hidden
+    states instead of logits (streamed-xent training path)."""
+    x = cm.embed_tokens(params["embed"], tokens, cfg)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+    x = cm.shard(x, "dp", None, None)
+    T = x.shape[1]
+    positions = jnp.arange(T)
+    aux = 0.0
+    if "dense_layers" in params:
+        x, a = _scan_stack(x, params["dense_layers"], cfg, positions, moe_layer=False)
+        aux += a
+    if "moe_layers" in params:
+        x, a = _scan_stack(x, params["moe_layers"], cfg, positions, moe_layer=True)
+        aux += a
+    if last_only:
+        x = x[:, -1:]
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    if hidden_only:
+        return x, aux
+    return cm.logits_from_hidden(params, x, cfg), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    n_dense = _n_dense(cfg)
+    n_moe = cfg.n_layers - n_dense
+    cache = {}
+
+    def one_stack(n):
+        if cfg.mla is not None:
+            a = cfg.mla
+            return {
+                "c_kv": jnp.zeros((n, batch, max_len, a.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((n, batch, max_len, a.qk_rope_head_dim), dtype),
+            }
+        return {
+            "k": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((n, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+
+    if n_dense:
+        cache["dense"] = one_stack(n_dense)
+    if n_moe:
+        cache["moe"] = one_stack(n_moe)
+    return cache
+
+
+def _layer_decode(lp, x, cfg, layer_cache, pos, *, moe_layer: bool, absorb=False):
+    h = cm.apply_norm(lp["attn_norm"], x, cfg)
+    if cfg.mla is not None:
+        o, new_cache = mla_mod.mla_attention_decode(lp["attn"], h, cfg, layer_cache,
+                                                    pos, absorb=absorb)
+    else:
+        o, ck, cv = cm.attention_decode(lp["attn"], h, cfg,
+                                        layer_cache["k"], layer_cache["v"], pos)
+        new_cache = {"k": ck, "v": cv}
+    x = x + o
+    h = cm.apply_norm(lp["mlp_norm"], x, cfg)
+    if moe_layer:
+        o, _ = moe_mod.moe_ffn(lp["moe"], h, cfg)
+    else:
+        o = cm.apply_mlp(lp["mlp"], h, cfg)
+    return x + o, new_cache
+
+
+def decode_step(params, cfg, cache, tokens, pos, *, absorb: bool = False):
+    """One decode step.  tokens: (B, 1) int32; pos: scalar int32 (current
+    write position == current KV length).  Returns (logits, new_cache)."""
+    x = cm.embed_tokens(params["embed"], tokens, cfg)
+
+    def stack_body(x, stack, stack_cache, moe_layer):
+        def body(x, inp):
+            lp, lcache = inp
+            x, new = _layer_decode(lp, x, cfg, lcache, pos,
+                                   moe_layer=moe_layer, absorb=absorb)
+            return x, new
+
+        return cm.scan_layers(body, x, (stack, stack_cache), cfg)
+
+    new_cache = {}
+    if "dense_layers" in params:
+        x, nc = stack_body(x, params["dense_layers"], cache["dense"], False)
+        new_cache["dense"] = nc
+    if "moe_layers" in params:
+        x, nc = stack_body(x, params["moe_layers"], cache["moe"], True)
+        new_cache["moe"] = nc
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    return cm.logits_from_hidden(params, x, cfg), new_cache

@@ -1,0 +1,200 @@
+"""Whisper-large-v3 backbone (arXiv:2212.04356): encoder-decoder transformer.
+
+Per the assignment the mel/conv frontend is a STUB — ``input_specs`` feeds
+precomputed frame embeddings (B, W_enc, D) to the encoder.  The conv
+frontend itself IS implemented here (``init_frontend``/``conv_frontend``)
+using the paper's BRGEMM conv1d kernel stack and unit-tested, since a
+strided 1D conv over 3000-frame mel spectrograms is precisely the workload
+class the paper targets.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.models import common as cm
+
+
+# ---------------------------------------------------------------------------
+# Conv frontend (paper kernel; stride-2 realised as conv + subsample)
+# ---------------------------------------------------------------------------
+
+N_MELS = 128
+
+
+def init_frontend(key, cfg, dtype):
+    ks = cm.split(key, 2)
+    D = cfg.d_model
+    return {
+        "conv1_w": (jax.random.normal(ks[0], (3, D, N_MELS), jnp.float32)
+                    * (3 * N_MELS) ** -0.5).astype(dtype),
+        "conv1_b": jnp.zeros((D,), dtype),
+        "conv2_w": (jax.random.normal(ks[1], (3, D, D), jnp.float32)
+                    * (3 * D) ** -0.5).astype(dtype),
+        "conv2_b": jnp.zeros((D,), dtype),
+    }
+
+
+def conv_frontend(p, mel, cfg):
+    """mel: (B, N_MELS, T) -> (B, T//2, D) frame embeddings."""
+    h = kops.conv1d(mel, p["conv1_w"], padding="SAME")
+    h = jax.nn.gelu((h + p["conv1_b"][None, :, None]).astype(jnp.float32)).astype(mel.dtype)
+    h = kops.conv1d(h, p["conv2_w"], padding="SAME")[:, :, ::2]  # stride 2
+    h = jax.nn.gelu((h + p["conv2_b"][None, :, None]).astype(jnp.float32))
+    return h.astype(mel.dtype).transpose(0, 2, 1)
+
+
+# ---------------------------------------------------------------------------
+# Encoder / decoder layers
+# ---------------------------------------------------------------------------
+
+
+def _init_cross_attention(key, cfg, dtype):
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = cm.split(key, 4)
+    return {
+        "wq": cm.dense_init(ks[0], D, H * hd, dtype),
+        "wk": cm.dense_init(ks[1], D, H * hd, dtype),
+        "wv": cm.dense_init(ks[2], D, H * hd, dtype),
+        "wo": cm.dense_init(ks[3], H * hd, D, dtype),
+        "bq": jnp.zeros((H * hd,), dtype),
+        "bv": jnp.zeros((H * hd,), dtype),
+        "bo": jnp.zeros((D,), dtype),
+    }
+
+
+def cross_kv(p, enc, cfg):
+    B, Te, _ = enc.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    k = (enc @ p["wk"]).reshape(B, Te, H, hd)
+    v = (enc @ p["wv"] + p["bv"]).reshape(B, Te, H, hd)
+    return k, v
+
+
+def cross_attention(p, x, k, v, cfg):
+    B, T, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"] + p["bq"]).reshape(B, T, H, hd)
+    o = cm.gqa_attention(q, k, v, causal=False, chunk=cfg.attn_chunk,
+                         unroll=cfg.unroll_layers)
+    return o.reshape(B, T, H * hd) @ p["wo"] + p["bo"]
+
+
+def _init_enc_layer(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = cm.split(key, 2)
+    return {
+        "attn_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+        "attn": cm.init_attention(ks[0], cfg, dtype),
+        "mlp_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+        "mlp": cm.init_mlp(ks[1], cfg, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = cm.split(key, 3)
+    p = _init_enc_layer(ks[0], cfg)
+    p["cross_norm"] = cm.init_norm(cfg, cfg.d_model, dtype)
+    p["cross"] = _init_cross_attention(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = cm.split(key, 5)
+    enc_keys = jnp.stack(cm.split(ks[0], cfg.n_encoder_layers))
+    dec_keys = jnp.stack(cm.split(ks[1], cfg.n_layers))
+    return {
+        "embed": cm.init_embed(ks[2], cfg, dtype),  # decoder tokens (+learned pos)
+        "frontend": init_frontend(ks[4], cfg, dtype),
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+        "unembed": cm.dense_init(ks[3], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: (B, W_enc, D) stub frame embeddings -> encoder states."""
+    x = frames + cm.sinusoidal_positions(frames.shape[1], cfg.d_model).astype(frames.dtype)
+    positions = jnp.arange(frames.shape[1])
+
+    def body(x, lp):
+        def f(x_, lp_):
+            h = cm.apply_norm(lp_["attn_norm"], x_, cfg)
+            x_ = x_ + cm.attention_block(lp_["attn"], h, cfg, positions, causal=False)
+            x_ = x_ + cm.apply_mlp(lp_["mlp"], cm.apply_norm(lp_["mlp_norm"], x_, cfg), cfg)
+            return x_
+        return cm.maybe_remat(f, cfg)(x, lp), None
+
+    x, _ = cm.scan_layers(body, x, params["enc_layers"], cfg)
+    return cm.apply_norm(params["enc_norm"], x, cfg)
+
+
+def forward(params, cfg, tokens, *, frames=None, extra_embeds=None,
+            last_only=False, hidden_only=False):
+    """Training/prefill: tokens (B, T_dec), frames (B, W_enc, D)."""
+    frames = frames if frames is not None else extra_embeds
+    enc = encode(params, cfg, frames)
+    positions = jnp.arange(tokens.shape[1])
+    x = cm.embed_tokens(params["embed"], tokens, cfg, positions=positions)
+
+    def body(x, lp):
+        def f(x_, lp_):
+            h = cm.apply_norm(lp_["attn_norm"], x_, cfg)
+            x_ = x_ + cm.attention_block(lp_["attn"], h, cfg, positions, causal=True)
+            h = cm.apply_norm(lp_["cross_norm"], x_, cfg)
+            k, v = cross_kv(lp_["cross"], enc, cfg)
+            x_ = x_ + cross_attention(lp_["cross"], h, k, v, cfg)
+            x_ = x_ + cm.apply_mlp(lp_["mlp"], cm.apply_norm(lp_["mlp_norm"], x_, cfg), cfg)
+            return x_
+        return cm.maybe_remat(f, cfg)(x, lp), None
+
+    x, _ = cm.scan_layers(body, x, params["dec_layers"], cfg)
+    if last_only:
+        x = x[:, -1:]
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    if hidden_only:
+        return x, 0.0
+    return cm.logits_from_hidden(params, x, cfg), 0.0
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16, enc_len=None):
+    """Self-attn KV cache + precomputed cross-attn K/V (from prefill)."""
+    L = cfg.n_layers
+    H, hd = cfg.n_heads, cfg.head_dim
+    Te = enc_len or cfg.encoder_width
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "cross_k": jnp.zeros((L, batch, Te, H, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, Te, H, hd), dtype),
+    }
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    B = tokens.shape[0]
+    x = cm.embed_tokens(params["embed"], tokens, cfg,
+                        positions=jnp.full((1,), pos))
+
+    def body(x, inp):
+        lp, ck, cv, xk, xv = inp
+        h = cm.apply_norm(lp["attn_norm"], x, cfg)
+        o, ck, cv = cm.attention_decode(lp["attn"], h, cfg, ck, cv, pos)
+        x = x + o
+        h = cm.apply_norm(lp["cross_norm"], x, cfg)
+        x = x + cross_attention(lp["cross"], h, xk.astype(x.dtype), xv.astype(x.dtype), cfg)
+        x = x + cm.apply_mlp(lp["mlp"], cm.apply_norm(lp["mlp_norm"], x, cfg), cfg)
+        return x, (ck, cv)
+
+    x, (cks, cvs) = cm.scan_layers(
+        body, x,
+        (params["dec_layers"], cache["k"], cache["v"], cache["cross_k"],
+         cache["cross_v"]), cfg)
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    logits = cm.logits_from_hidden(params, x, cfg)
+    return logits, {"k": cks, "v": cvs,
+                    "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}

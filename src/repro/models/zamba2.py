@@ -1,0 +1,214 @@
+"""Zamba2 hybrid: a Mamba2 backbone with a single *weight-shared*
+transformer block (attention + MLP) applied every ``cfg.attn_every`` layers
+(arXiv:2411.15242).
+
+Per Zamba, the shared block sees ``concat(hidden, original_embedding)``
+(width 2·D) and projects back to D.  The per-invocation LoRA adapters of
+Zamba2 are omitted (noted in DESIGN.md §8) — they are <0.1% of params and
+orthogonal to the systems work here.
+
+The causal conv inside each Mamba2 block uses the paper's BRGEMM depthwise
+kernel (see models/mamba2.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import mamba2 as m2
+
+
+def n_shared_applications(cfg) -> int:
+    return len([i for i in range(cfg.n_layers)
+                if i % cfg.attn_every == cfg.attn_every - 1])
+
+
+def _shared_block_cfg(cfg):
+    """The shared attention reads the 2*D concat input."""
+    return dataclasses.replace(cfg, qkv_bias=False, attn_out_bias=False,
+                               qk_norm=False, pos_embedding="rope")
+
+
+def init_shared_block(key, cfg, dtype):
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = cm.split(key, 6)
+    return {
+        "in_norm": cm.init_norm(cfg, 2 * D, dtype),
+        "wq": cm.dense_init(ks[0], 2 * D, H * hd, dtype),
+        "wk": cm.dense_init(ks[1], 2 * D, cfg.n_kv_heads * hd, dtype),
+        "wv": cm.dense_init(ks[2], 2 * D, cfg.n_kv_heads * hd, dtype),
+        "wo": cm.dense_init(ks[3], H * hd, D, dtype),
+        "mlp_norm": cm.init_norm(cfg, D, dtype),
+        "mlp": cm.init_mlp(ks[4], cfg, dtype),
+    }
+
+
+def _shared_qkv(p, xcat, cfg, positions):
+    B, T, _ = xcat.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    h = cm.apply_norm(p["in_norm"], xcat, cfg)
+    q = (h @ p["wq"]).reshape(B, T, H, hd)
+    k = (h @ p["wk"]).reshape(B, T, KV, hd)
+    v = (h @ p["wv"]).reshape(B, T, KV, hd)
+    q = cm.apply_rope(q, positions, cfg.rope_theta)
+    k = cm.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def shared_block_fwd(p, x, emb, cfg, positions):
+    xcat = jnp.concatenate([x, emb], axis=-1)
+    q, k, v = _shared_qkv(p, xcat, cfg, positions)
+    if cfg.attn_impl == "flash":
+        o = cm.flash_or_phantom(q, k, v, cfg, causal=True)
+    else:
+        o = cm.gqa_attention(q, k, v, causal=True, chunk=cfg.attn_chunk,
+                             unroll=cfg.unroll_layers)
+    x = x + o.reshape(*x.shape[:2], -1) @ p["wo"]
+    x = x + cm.apply_mlp(p["mlp"], cm.apply_norm(p["mlp_norm"], x, cfg), cfg)
+    return x
+
+
+def shared_block_decode(p, x, emb, cfg, ck, cv, pos):
+    """x: (B,1,D). ck/cv: (B, Tmax, KV, hd) for THIS application slot."""
+    B = x.shape[0]
+    xcat = jnp.concatenate([x, emb], axis=-1)
+    q, k, v = _shared_qkv(p, xcat, cfg, jnp.full((B, 1), pos))
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, axis=1)
+    o = cm.gqa_attention(q, ck, cv, causal=False, chunk=0, kv_len=pos + 1)
+    x = x + o.reshape(B, 1, -1) @ p["wo"]
+    x = x + cm.apply_mlp(p["mlp"], cm.apply_norm(p["mlp_norm"], x, cfg), cfg)
+    return x, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = cm.split(key, 4)
+    keys = jnp.stack(cm.split(ks[1], cfg.n_layers))
+    return {
+        "embed": cm.init_embed(ks[0], cfg, dtype),
+        "layers": jax.vmap(lambda k: m2._init_layer(k, cfg))(keys),
+        "shared": init_shared_block(ks[2], cfg, dtype),
+        "final_norm": cm.init_norm(cfg, cfg.d_model, dtype),
+        "unembed": cm.dense_init(ks[3], cfg.d_model, cfg.padded_vocab, dtype),
+    }
+
+
+def forward(params, cfg, tokens, *, extra_embeds=None, last_only=False,
+            hidden_only=False):
+    x = cm.embed_tokens(params["embed"], tokens, cfg)
+    x = cm.shard(x, "dp", None, None)
+    emb = x
+    T = x.shape[1]
+    positions = jnp.arange(T)
+    flags = jnp.array([i % cfg.attn_every == cfg.attn_every - 1
+                       for i in range(cfg.n_layers)])
+    shared = params["shared"]
+
+    if cfg.unroll_layers:
+        # unrolled path (roofline probes): the shared-block application
+        # pattern is static, so branch in PYTHON — the HLO contains exactly
+        # n_shared_applications shared blocks (exact cost counts).
+        def one_layer(x_, lp_, with_shared):
+            x_ = x_ + m2.block_fwd(lp_["mixer"], cm.apply_norm(lp_["norm"], x_, cfg), cfg)
+            if with_shared:
+                x_ = shared_block_fwd(shared, x_, emb, cfg, positions)
+            return x_
+
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            ws = i % cfg.attn_every == cfg.attn_every - 1
+            x = cm.maybe_remat(lambda a, b: one_layer(a, b, ws), cfg)(x, lp)
+    else:
+        def body(x, inp):
+            lp, flag = inp
+
+            def f(x_, lp_):
+                x_ = x_ + m2.block_fwd(lp_["mixer"], cm.apply_norm(lp_["norm"], x_, cfg), cfg)
+                return jax.lax.cond(
+                    flag,
+                    lambda a: shared_block_fwd(shared, a, emb, cfg, positions),
+                    lambda a: a,
+                    x_)
+
+            return cm.maybe_remat(f, cfg)(x, lp), None
+
+        x, _ = jax.lax.scan(body, x, (params["layers"], flags))
+    if last_only:
+        x = x[:, -1:]
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    if hidden_only:
+        return x, 0.0
+    return cm.logits_from_hidden(params, x, cfg), 0.0
+
+
+def init_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    n_app = n_shared_applications(cfg)
+    return {
+        "mamba": m2.init_cache(cfg, batch, dtype=jnp.float32),
+        "k": jnp.zeros((n_app, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((n_app, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def decode_step(params, cfg, cache, tokens, pos):
+    x = cm.embed_tokens(params["embed"], tokens, cfg)
+    emb = x
+    shared = params["shared"]
+    flags = jnp.array([i % cfg.attn_every == cfg.attn_every - 1
+                       for i in range(cfg.n_layers)])
+    attn_idx = jnp.array([i // cfg.attn_every for i in range(cfg.n_layers)])
+
+    ck_all, cv_all = cache["k"], cache["v"]
+
+    if cfg.unroll_layers:  # probe path: static branching, exact costs
+        states = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            st = jax.tree.map(lambda a: a[i], cache["mamba"])
+            o, new_st = m2.block_decode(lp["mixer"], cm.apply_norm(lp["norm"], x, cfg), cfg, st)
+            x = x + o
+            states.append(new_st)
+            if i % cfg.attn_every == cfg.attn_every - 1:
+                ai = i // cfg.attn_every
+                x, ck, cv = shared_block_decode(shared, x, emb, cfg,
+                                                ck_all[ai], cv_all[ai], pos)
+                ck_all = ck_all.at[ai].set(ck)
+                cv_all = cv_all.at[ai].set(cv)
+        new_mamba = jax.tree.map(lambda *a: jnp.stack(a), *states)
+        x = cm.apply_norm(params["final_norm"], x, cfg)
+        logits = cm.logits_from_hidden(params, x, cfg)
+        return logits, {"mamba": new_mamba, "k": ck_all, "v": cv_all}
+
+    def body(carry, inp):
+        x, ck_all, cv_all = carry
+        lp, st, flag, ai = inp
+        o, new_st = m2.block_decode(lp["mixer"], cm.apply_norm(lp["norm"], x, cfg), cfg, st)
+        x = x + o
+
+        def with_attn(args):
+            x, ck_all, cv_all = args
+            ck = jax.lax.dynamic_index_in_dim(ck_all, ai, 0, keepdims=False)
+            cv = jax.lax.dynamic_index_in_dim(cv_all, ai, 0, keepdims=False)
+            x, ck, cv = shared_block_decode(shared, x, emb, cfg, ck, cv, pos)
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, ck, ai, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, cv, ai, 0)
+            return x, ck_all, cv_all
+
+        x, ck_all, cv_all = jax.lax.cond(flag, with_attn, lambda a: a,
+                                         (x, ck_all, cv_all))
+        return (x, ck_all, cv_all), new_st
+
+    (x, ck_all, cv_all), new_mamba = jax.lax.scan(
+        body, (x, ck_all, cv_all), (params["layers"], cache["mamba"], flags, attn_idx))
+    x = cm.apply_norm(params["final_norm"], x, cfg)
+    logits = cm.logits_from_hidden(params, x, cfg)
+    return logits, {"mamba": new_mamba, "k": ck_all, "v": cv_all}

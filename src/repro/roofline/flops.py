@@ -1,0 +1,203 @@
+"""Analytic parameter counts and MODEL_FLOPS per architecture family.
+
+MODEL_FLOPS is the *useful* compute of a step (6·N·D for training dense
+models, 6·N_active·D for MoE, plus exact attention terms); the roofline
+report compares it against the compiled HLO FLOP count to expose
+remat/redundancy waste (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+
+def _attn_params(cfg) -> int:
+    if cfg.mla is not None:
+        a = cfg.mla
+        qh = a.qk_nope_head_dim + a.qk_rope_head_dim
+        return (cfg.d_model * a.q_lora_rank
+                + a.q_lora_rank * cfg.n_heads * qh
+                + cfg.d_model * (a.kv_lora_rank + a.qk_rope_head_dim)
+                + a.kv_lora_rank * cfg.n_heads * (a.qk_nope_head_dim + a.v_head_dim)
+                + cfg.n_heads * a.v_head_dim * cfg.d_model)
+    D, hd = cfg.d_model, cfg.head_dim
+    return D * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd + cfg.n_heads * hd * D
+
+
+def _mlp_params(cfg, d_ff: int) -> int:
+    mult = 3 if cfg.mlp_act == "swiglu" else 2
+    return mult * cfg.d_model * d_ff
+
+
+def _moe_layer_params(cfg, active_only: bool) -> int:
+    m = cfg.moe
+    n_routed = m.top_k if active_only else m.n_experts
+    p = cfg.d_model * m.n_experts  # router
+    p += n_routed * 3 * cfg.d_model * m.d_ff_expert
+    if m.n_shared:
+        p += 3 * cfg.d_model * m.d_ff_expert * m.n_shared
+    return p
+
+
+def _ssm_block_params(cfg) -> int:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    gN = s.n_groups * s.d_state
+    conv_dim = d_inner + 2 * gN
+    return (cfg.d_model * (2 * d_inner + 2 * gN + H)
+            + s.conv_width * conv_dim + d_inner * cfg.d_model)
+
+
+def _shared_block_params(cfg) -> int:  # Zamba2 shared transformer block
+    D, hd = cfg.d_model, cfg.head_dim
+    attn = 2 * D * (cfg.n_heads + 2 * cfg.n_kv_heads) * hd + cfg.n_heads * hd * D
+    return attn + _mlp_params(cfg, cfg.d_ff)
+
+
+def param_count(cfg, active_only: bool = False) -> int:
+    V, D, L = cfg.vocab_size, cfg.d_model, cfg.n_layers
+    if cfg.family == "conv":
+        C, S = cfg.conv_channels, cfg.conv_filter
+        from repro.core.blocks import N_RES_BLOCKS
+        return S * (C * 1 + 2 * N_RES_BLOCKS * C * C + 2 * C)
+    emb = V * D * (1 if cfg.tie_embeddings else 2)
+    if cfg.family in ("dense", "vlm"):
+        return emb + L * (_attn_params(cfg) + _mlp_params(cfg, cfg.d_ff))
+    if cfg.family == "moe":
+        nd = cfg.moe.first_dense_layers
+        return (emb + L * _attn_params(cfg)
+                + nd * _mlp_params(cfg, cfg.moe.d_ff_dense)
+                + (L - nd) * _moe_layer_params(cfg, active_only))
+    if cfg.family == "ssm":
+        return emb + L * _ssm_block_params(cfg)
+    if cfg.family == "hybrid":
+        return emb + L * _ssm_block_params(cfg) + _shared_block_params(cfg)
+    if cfg.family == "encdec":
+        enc = cfg.n_encoder_layers * (_attn_params(cfg) + _mlp_params(cfg, cfg.d_ff))
+        # decoder adds cross attention (MHA, 4 projections)
+        cross = 4 * D * cfg.n_heads * cfg.head_dim
+        dec = L * (_attn_params(cfg) + cross + _mlp_params(cfg, cfg.d_ff))
+        return emb + enc + dec
+    raise ValueError(cfg.family)
+
+
+def active_param_count(cfg) -> int:
+    return param_count(cfg, active_only=True)
+
+
+def _attn_seq_flops(cfg, B: int, T: int, causal: bool = True) -> int:
+    """QK^T + AV flops for one full-sequence attention pass, all layers that
+    have attention."""
+    factor = 0.5 if causal else 1.0
+    if cfg.family in ("dense", "vlm", "moe"):
+        hd = (cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+              + cfg.mla.v_head_dim) / 2 if cfg.mla else cfg.head_dim
+        n_attn = cfg.n_layers
+        return int(4 * B * T * T * cfg.n_heads * hd * factor * n_attn)
+    if cfg.family == "hybrid":
+        from repro.models.zamba2 import n_shared_applications
+        n_attn = n_shared_applications(cfg)
+        return int(4 * B * T * T * cfg.n_heads * cfg.head_dim * factor * n_attn)
+    if cfg.family == "encdec":
+        enc = 4 * B * cfg.encoder_width ** 2 * cfg.n_heads * cfg.head_dim
+        dec_self = 4 * B * T * T * cfg.n_heads * cfg.head_dim * 0.5
+        dec_cross = 4 * B * T * cfg.encoder_width * cfg.n_heads * cfg.head_dim
+        return int((enc * cfg.n_encoder_layers
+                    + (dec_self + dec_cross) * cfg.n_layers))
+    if cfg.family == "ssm":
+        # SSD intra-chunk quadratic + state flops
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        H = d_inner // s.head_dim
+        c = s.chunk
+        per_layer = (4 * B * T * c * H * s.head_dim   # intra-chunk
+                     + 6 * B * T * H * s.head_dim * s.d_state)  # states
+        return int(per_layer * cfg.n_layers)
+    return 0
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful FLOPs for one step of the given ShapeConfig."""
+    B, T = shape.global_batch, shape.seq_len
+    n_act = active_param_count(cfg)
+    if cfg.family == "conv":
+        # conv layer flops: 2*C_in*C_out*S per output point, fwd+bwd = 3x fwd
+        C, S = cfg.conv_channels, cfg.conv_filter
+        from repro.core.blocks import N_RES_BLOCKS
+        per_pt = 2 * S * (C + 2 * N_RES_BLOCKS * C * C + 2 * C)
+        mult = 3 if shape.kind == "train" else 1
+        return float(mult * B * T * per_pt)
+    if shape.kind == "train":
+        return float(6 * n_act * B * T + 3 * _attn_seq_flops(cfg, B, T))
+    if shape.kind == "prefill":
+        return float(2 * n_act * B * T + _attn_seq_flops(cfg, B, T))
+    # decode: one token, attention reads the whole cache
+    if cfg.family == "ssm":
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        H = d_inner // s.head_dim
+        state_flops = 6 * B * H * s.head_dim * s.d_state * cfg.n_layers
+        return float(2 * n_act * B + state_flops)
+    if cfg.family == "hybrid":
+        from repro.models.zamba2 import n_shared_applications
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        H = d_inner // s.head_dim
+        state_flops = 6 * B * H * s.head_dim * s.d_state * cfg.n_layers
+        attn = 4 * B * T * cfg.n_heads * cfg.head_dim * n_shared_applications(cfg)
+        return float(2 * n_act * B + state_flops + attn)
+    if cfg.mla is not None:
+        a = cfg.mla
+        # baseline decode re-expands the latent cache per step
+        expand = 2 * B * T * a.kv_lora_rank * cfg.n_heads * (a.qk_nope_head_dim + a.v_head_dim)
+        attn = 2 * B * T * cfg.n_heads * (a.qk_nope_head_dim + a.qk_rope_head_dim + a.v_head_dim)
+        return float(2 * n_act * B + (expand + attn) * cfg.n_layers)
+    attn = 4 * B * T * cfg.n_heads * cfg.head_dim * cfg.n_layers
+    if cfg.family == "encdec":
+        attn += 4 * B * cfg.encoder_width * cfg.n_heads * cfg.head_dim * cfg.n_layers
+    return float(2 * n_act * B + attn)
+
+
+def model_bytes(cfg, shape) -> float:
+    """Minimum global HBM traffic for one step — the memory-roofline floor.
+
+    decode: every (touched) parameter byte + cache read/write.
+    train:  params read (per microbatch re-read under FSDP is NOT charged —
+            that's an implementation choice, not a floor) + grads + moments,
+            plus one activations pass.
+    prefill: params + activations.
+    """
+    if shape.kind == "decode":
+        # MoE decode touches every routed expert once global_batch*top_k
+        # >~ n_experts (always true for our decode cells), so use FULL params
+        p_bytes = 2 * param_count(cfg)
+        return float(p_bytes + (hbm_bytes_decode(cfg, shape)
+                                - 2 * active_param_count(cfg)))
+    B, T = shape.global_batch, shape.seq_len
+    act = 2 * B * T * max(cfg.d_model, 1)
+    if cfg.family == "conv":
+        act = 4 * B * T * cfg.conv_channels
+    p = param_count(cfg)
+    if shape.kind == "train":
+        # params bf16 + grads fp32 + m/v fp32 read+write + params write
+        return float(2 * p + 4 * p + 2 * 2 * 4 * p + 2 * p + 6 * act)
+    return float(2 * p + 2 * act)
+
+
+def hbm_bytes_decode(cfg, shape) -> float:
+    """Minimum HBM traffic for one decode step: all active params + cache."""
+    B, T = shape.global_batch, shape.seq_len
+    p_bytes = 2 * active_param_count(cfg)
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        d_inner = s.expand * cfg.d_model
+        H = d_inner // s.head_dim
+        cache = 4 * B * H * s.head_dim * s.d_state * cfg.n_layers * 2  # rd+wr fp32
+        if cfg.family == "hybrid":
+            from repro.models.zamba2 import n_shared_applications
+            cache += 2 * B * T * cfg.n_kv_heads * cfg.head_dim * 2 * n_shared_applications(cfg)
+        return float(p_bytes + cache)
+    if cfg.mla is not None:
+        a = cfg.mla
+        cache = 2 * B * T * (a.kv_lora_rank + a.qk_rope_head_dim) * cfg.n_layers
+    else:
+        cache = 2 * B * T * 2 * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers
+    return float(p_bytes + cache)

@@ -1,0 +1,3 @@
+from repro.runtime.elastic import ElasticPlan, build_mesh, make_plan  # noqa: F401
+from repro.runtime.health import HealthMonitor, PreemptionGuard  # noqa: F401
+from repro.runtime.straggler import StragglerDetector  # noqa: F401

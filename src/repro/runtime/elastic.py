@@ -1,0 +1,81 @@
+"""Elastic scaling: recompute the run layout when the device set changes.
+
+A checkpoint stores mesh-agnostic whole arrays (checkpoint.py), so scaling
+is a *layout* problem, not a data problem:
+
+  1. the controller observes the new healthy-device count,
+  2. ``plan_mesh`` picks the largest usable (data, model) grid — the model
+     axis is kept fixed (sharding rules assume the tensor-parallel degree;
+     changing it mid-run changes numerics-irrelevant layout only but costs
+     a full re-shard, so we only shrink/grow 'data' and 'pod'),
+  3. ``plan_batch`` re-derives grad-accumulation so the GLOBAL batch (and
+     therefore the training trajectory) is preserved exactly across the
+     scale event,
+  4. the launcher rebuilds the jitted step against the new mesh and
+     restores the checkpoint with the new shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    n_devices: int
+    mesh_shape: tuple
+    axis_names: tuple
+    accum_steps: int
+    microbatch: int
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int,
+              pod_size: int | None = None):
+    """Largest (pod, data, model) grid using ≤ n_devices whole data rows."""
+    assert n_devices >= model_parallel, (n_devices, model_parallel)
+    rows = n_devices // model_parallel
+    if pod_size and rows > pod_size:
+        pods = rows // pod_size
+        return (pods, pod_size, model_parallel), ("pod", "data", "model")
+    return (rows, model_parallel), ("data", "model")
+
+
+def plan_batch(global_batch: int, dp_size: int, *,
+               max_microbatch_per_shard: int = 1) -> tuple[int, int]:
+    """(accum_steps, microbatch) preserving the exact global batch.
+
+    Requires dp_size | global_batch (the controller only admits device
+    counts satisfying this; otherwise it rounds the mesh down further).
+    """
+    assert global_batch % dp_size == 0, (global_batch, dp_size)
+    per_shard = global_batch // dp_size
+    micro_per_shard = min(per_shard, max_microbatch_per_shard)
+    accum = per_shard // micro_per_shard
+    return accum, micro_per_shard * dp_size
+
+
+def make_plan(n_devices: int, *, model_parallel: int, global_batch: int,
+              pod_size: int | None = None,
+              max_microbatch_per_shard: int = 1) -> ElasticPlan:
+    # largest data-parallel degree ≤ available rows that divides the batch
+    rows = n_devices // model_parallel
+    if pod_size and rows >= pod_size:
+        rows = (rows // pod_size) * pod_size  # whole pods only
+    dp = rows
+    while dp > 0 and global_batch % dp != 0:
+        dp -= 1
+        if pod_size and dp >= pod_size:
+            dp = (dp // pod_size) * pod_size
+    assert dp > 0, (n_devices, model_parallel, global_batch)
+    shape, names = plan_mesh(dp * model_parallel,
+                             model_parallel=model_parallel, pod_size=pod_size)
+    accum, micro = plan_batch(global_batch, dp,
+                              max_microbatch_per_shard=max_microbatch_per_shard)
+    return ElasticPlan(dp * model_parallel, shape, names, accum, micro)
+
+
+def build_mesh(plan: ElasticPlan):
+    return jax.make_mesh(
+        plan.mesh_shape, plan.axis_names,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(plan.axis_names))

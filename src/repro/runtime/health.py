@@ -1,0 +1,70 @@
+"""Step-level health monitoring.
+
+The in-graph half of fault tolerance lives in train_step (non-finite
+gradient guard: the update is skipped, not crashed).  This module is the
+host-side half:
+
+  * ``HealthMonitor`` — tracks consecutive skipped steps and loss spikes;
+    escalates from WARN to ABORT-and-restore when the run is diverging
+    (e.g. a corrupted batch or a bad host), which in the fleet deployment
+    triggers a restore-from-last-checkpoint on a fresh node set.
+  * ``PreemptionGuard`` — SIGTERM handler that requests a final checkpoint
+    flush before the scheduler reclaims the node (maintenance events give
+    ~30 s on cloud TPU).
+"""
+from __future__ import annotations
+
+import signal
+import threading
+from dataclasses import dataclass, field
+
+
+@dataclass
+class HealthMonitor:
+    max_consecutive_skips: int = 5
+    loss_spike_factor: float = 10.0
+    ema_decay: float = 0.98
+    _skips: int = 0
+    _loss_ema: float | None = None
+    events: list = field(default_factory=list)
+
+    def record(self, step: int, loss: float, skipped: bool) -> str:
+        """Returns 'ok' | 'warn' | 'restore'."""
+        if skipped:
+            self._skips += 1
+            self.events.append((step, "skip"))
+            if self._skips >= self.max_consecutive_skips:
+                self.events.append((step, "restore: non-finite streak"))
+                return "restore"
+            return "warn"
+        self._skips = 0
+        if self._loss_ema is not None and loss > self.loss_spike_factor * self._loss_ema:
+            self.events.append((step, f"warn: loss spike {loss:.3g} vs ema {self._loss_ema:.3g}"))
+            self._loss_ema = (self.ema_decay * self._loss_ema
+                              + (1 - self.ema_decay) * loss)
+            return "warn"
+        self._loss_ema = (loss if self._loss_ema is None else
+                          self.ema_decay * self._loss_ema + (1 - self.ema_decay) * loss)
+        return "ok"
+
+
+class PreemptionGuard:
+    """SIGTERM → set a flag the train loop polls; the loop then flushes a
+    checkpoint and exits cleanly instead of being killed mid-write."""
+
+    def __init__(self, install: bool = True):
+        self._requested = threading.Event()
+        if install:
+            try:
+                signal.signal(signal.SIGTERM, self._handler)
+            except ValueError:  # not on main thread (tests)
+                pass
+
+    def _handler(self, signum, frame):
+        self._requested.set()
+
+    def preempted(self) -> bool:
+        return self._requested.is_set()
+
+    def request(self) -> None:  # for tests / manual drain
+        self._requested.set()

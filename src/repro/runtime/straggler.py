@@ -1,0 +1,59 @@
+"""Straggler detection and mitigation.
+
+In a synchronous-SPMD fleet every step runs at the speed of the slowest
+participant, so stragglers are detected from *step wall-time*, not from
+per-host telemetry: a healthy step time is tracked with an EWMA + variance
+estimate, and a step slower than ``ewma + threshold·std`` (and at least
+``min_ratio×`` the EWMA) is flagged.
+
+Mitigations wired into the launcher:
+  * log + counter (always),
+  * after ``trip`` consecutive flags, recommend REPLACE — in the fleet
+    deployment the controller swaps the slow host out of the next mesh
+    epoch (elastic.py computes the new layout) and restores from the last
+    checkpoint; on a single host this surfaces as a recommendation only.
+
+The detector is deliberately stateful-but-tiny: it must never add a
+collective of its own to the hot path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class StragglerDetector:
+    ema_decay: float = 0.9
+    threshold_std: float = 4.0
+    min_ratio: float = 1.5
+    trip: int = 3
+    warmup: int = 5          # compile/first-touch steps are ignored
+    _n: int = 0
+    _ema: float = 0.0
+    _var: float = 0.0
+    _consecutive: int = 0
+    flagged_steps: list = field(default_factory=list)
+
+    def record(self, step: int, dt: float) -> str:
+        """Feed one step wall-time; returns 'ok' | 'slow' | 'replace'."""
+        self._n += 1
+        if self._n <= self.warmup:
+            self._ema = dt if self._ema == 0 else 0.5 * (self._ema + dt)
+            return "ok"
+        std = max(self._var, 1e-12) ** 0.5
+        slow = (dt > self._ema + self.threshold_std * std
+                and dt > self.min_ratio * self._ema)
+        if slow:
+            self._consecutive += 1
+            self.flagged_steps.append((step, dt, self._ema))
+            # do NOT fold outliers into the EWMA — they would mask repeats
+            return "replace" if self._consecutive >= self.trip else "slow"
+        self._consecutive = 0
+        d = dt - self._ema
+        self._ema += (1 - self.ema_decay) * d
+        self._var = self.ema_decay * (self._var + (1 - self.ema_decay) * d * d)
+        return "ok"
+
+    @property
+    def healthy_step_time(self) -> float:
+        return self._ema

@@ -1,0 +1,101 @@
+"""Per-family loss functions.  batch layouts:
+
+  LM (dense/moe/ssm/hybrid): {'tokens': (B, T) int32, 'labels': (B, T) int32}
+  VLM:    + {'patches': (B, n_img, D)} — loss over text positions only
+  encdec: {'frames': (B, W_enc, D), 'tokens': (B, T), 'labels': (B, T)}
+  conv:   {'noisy','clean','peaks': (B, W)}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def softmax_xent(logits, labels):
+    """logits fp32 (B, T, V), labels int32 (B, T).  Mean NLL."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def streamed_xent(params, hidden, labels, cfg):
+    """Cross-entropy without materialising the (B, T, V) fp32 logits.
+
+    §Perf hillclimb: the fp32 logits tensor and its cotangent dominate HBM
+    traffic for 130k-150k vocabularies.  This streams the unembedding over
+    T-chunks of ``cfg.xent_chunk`` positions; each chunk's logits live only
+    inside a rematerialised scan body, so peak logits memory (and the
+    traffic the roofline memory term counts) shrinks by T/chunk.
+
+    hidden: (B, T, D) post-final-norm; labels: (B, T) int32.
+    """
+    from repro.models import common as cm
+    B, T, D = hidden.shape
+    c = cfg.xent_chunk
+    if not c or T <= c or T % c:
+        return softmax_xent(cm.logits_from_hidden(params, hidden, cfg), labels)
+    n = T // c
+
+    def chunk_nll(hc, lc):
+        logits = cm.logits_from_hidden(params, hc, cfg)  # (B, c, V) fp32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return (logz - gold).sum()
+
+    chunk_nll = jax.checkpoint(chunk_nll)
+    h = hidden.reshape(B, n, c, D).transpose(1, 0, 2, 3)
+    l = labels.reshape(B, n, c).transpose(1, 0, 2)
+    if cfg.unroll_layers:  # roofline-probe path: exact cost counts
+        total = 0.0
+        for i in range(n):
+            total += chunk_nll(h[i], l[i])
+    else:
+        def body(acc, hl):
+            return acc + chunk_nll(*hl), None
+        total, _ = jax.lax.scan(body, 0.0, (h, l))
+    return total / (B * T)
+
+
+def make_loss_fn(cfg):
+    model = get_model(cfg)
+
+    if cfg.family == "conv":
+        from repro.core import blocks
+
+        def conv_loss(params, batch):
+            return blocks.loss_fn(params, cfg, batch)
+        return conv_loss
+
+    if cfg.family == "encdec":
+        def encdec_loss(params, batch):
+            logits, _ = model.forward(params, cfg, batch["tokens"],
+                                      frames=batch["frames"])
+            loss = softmax_xent(logits, batch["labels"])
+            return loss, {"nll": loss}
+        return encdec_loss
+
+    if cfg.family == "vlm":
+        def vlm_loss(params, batch):
+            logits, aux = model.forward(params, cfg, batch["tokens"],
+                                        extra_embeds=batch["patches"])
+            n_img = batch["patches"].shape[1]
+            text_logits = logits[:, n_img:, :]
+            loss = softmax_xent(text_logits, batch["labels"])
+            return loss + AUX_WEIGHT * aux, {"nll": loss}
+        return vlm_loss
+
+    def lm_loss(params, batch):
+        if cfg.xent_chunk:
+            hidden, aux = model.forward(params, cfg, batch["tokens"],
+                                        hidden_only=True)
+            loss = streamed_xent(params, hidden, batch["labels"], cfg)
+        else:
+            logits, aux = model.forward(params, cfg, batch["tokens"])
+            loss = softmax_xent(logits, batch["labels"])
+        total = loss + AUX_WEIGHT * jnp.asarray(aux, jnp.float32)
+        return total, {"nll": loss}
+    return lm_loss

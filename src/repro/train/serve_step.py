@@ -1,0 +1,52 @@
+"""Serve step factory — one batched decode step with a KV/SSM cache.
+
+``serve_step(params, cache, tokens, pos)`` appends one token per sequence
+and returns (next_tokens, new_cache, logits).  This is what the dry-run
+lowers for the decode_* / long_* shape cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+
+
+def make_serve_step(cfg, *, greedy: bool = True, absorb: bool = False):
+    model = get_model(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        """tokens: (B, 1) int32 current tokens; pos: scalar cache length."""
+        kwargs = {}
+        if cfg.mla is not None:
+            kwargs["absorb"] = absorb
+        logits, new_cache = model.decode_step(params, cfg, cache, tokens, pos,
+                                              **kwargs)
+        next_tokens = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return next_tokens, new_cache, logits
+
+    return serve_step
+
+
+def make_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    model = get_model(cfg)
+    return model.init_cache(cfg, batch, max_len, dtype=dtype)
+
+
+def make_prefill_step(cfg):
+    """Prefill: full-sequence forward, logits for the LAST position only
+    (the (B, T, V) logits tensor is never materialised).  This is what the
+    dry-run lowers for the prefill_* shape cells."""
+    model = get_model(cfg)
+
+    def prefill_step(params, batch):
+        kwargs = {"last_only": True}
+        if cfg.family == "vlm":
+            kwargs["extra_embeds"] = batch["patches"]
+        if cfg.family == "encdec":
+            kwargs["frames"] = batch["frames"]
+        logits, _ = model.forward(params, cfg, batch["tokens"], **kwargs)
+        next_tokens = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)[:, None]
+        return next_tokens, logits
+
+    return prefill_step

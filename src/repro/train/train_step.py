@@ -1,0 +1,115 @@
+"""Train step factory: loss -> grad (with microbatch gradient accumulation
+via ``lax.scan``) -> NaN/inf health guard -> AdamW update.
+
+The returned ``train_step(state, batch)`` is the function the launcher
+jits/lowers for the dry-run.  Gradient accumulation keeps peak activation
+memory ~ microbatch-sized, which is what lets the 671B×(256×4096) train
+cells fit per-chip HBM (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw, schedule
+from repro.train.losses import make_loss_fn
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: adamw.AdamWState
+    step: jax.Array
+    ef: Any = None  # fp32 error-feedback buffers (grad compression only)
+
+
+def init_state(params, *, grad_compression: bool = False) -> TrainState:
+    from repro.optim import compression
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32),
+                      ef=(compression.init_error_feedback(params)
+                          if grad_compression else None))
+
+
+def _split_microbatches(batch, accum: int):
+    def r(x):
+        return x.reshape(accum, x.shape[0] // accum, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg, *, accum_steps: int = 1, peak_lr: float = 3e-4,
+                    warmup_steps: int = 100, total_steps: int = 10_000,
+                    grad_clip: float = 1.0, weight_decay: float = 0.1,
+                    skip_nonfinite: bool = True, unroll_accum: bool = False,
+                    grad_compression: bool = False,
+                    constrain_grads: bool = False):
+    """``unroll_accum`` replaces the microbatch ``lax.scan`` with a python
+    loop — used by the roofline probes only (HloCostAnalysis counts a while
+    body once; see roofline/analysis.py).
+
+    ``grad_compression`` quantises the accumulated gradient to bf16 with an
+    fp32 error-feedback buffer carried in TrainState (optim/compression.py)
+    — the cast sits upstream of the GSPMD-inserted gradient reduction, so
+    the cross-device reduce moves half the bytes; the EF residual re-enters
+    next step, keeping the optimizer trajectory asymptotically exact."""
+    from repro.optim import compression
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        if accum_steps > 1:
+            micro = _split_microbatches(batch, accum_steps)
+
+            def accum_body(carry, mb):
+                gsum, lsum = carry
+                (loss, _), g = grad_fn(state.params, mb)
+                if constrain_grads:  # pin to param layout (§Perf)
+                    from repro.models.sharding import constrain_like_params
+                    g = constrain_like_params(g)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state.params)
+            carry = (gzero, 0.0)
+            if unroll_accum:
+                for i in range(accum_steps):
+                    mb = jax.tree.map(lambda x: x[i], micro)
+                    carry, _ = accum_body(carry, mb)
+                gsum, lsum = carry
+            else:
+                (gsum, lsum), _ = jax.lax.scan(accum_body, carry, micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, gsum)
+            loss = lsum / accum_steps
+        else:
+            (loss, _), grads = grad_fn(state.params, batch)
+            if constrain_grads:
+                from repro.models.sharding import constrain_like_params
+                grads = constrain_like_params(grads)
+
+        new_ef = state.ef
+        if grad_compression:
+            q, new_ef = compression.compress(grads, state.ef)
+            grads = compression.decompress(q)
+
+        # --- health guard: skip the update if any grad is non-finite -------
+        lr = schedule.cosine_with_warmup(
+            state.step, peak_lr=peak_lr, warmup_steps=warmup_steps,
+            total_steps=total_steps)
+        new_params, new_opt, metrics = adamw.update(
+            grads, state.opt, state.params, lr=lr,
+            weight_decay=weight_decay, grad_clip=grad_clip)
+        if skip_nonfinite:
+            finite = jnp.isfinite(metrics["grad_norm"]) & jnp.isfinite(loss)
+            new_params = jax.tree.map(
+                lambda n, o: jnp.where(finite, n, o), new_params, state.params)
+            new_opt = jax.tree.map(
+                lambda n, o: jnp.where(finite, n, o), new_opt, state.opt)
+            metrics["skipped"] = (~finite).astype(jnp.float32)
+        new_state = TrainState(new_params, new_opt, state.step + 1, new_ef)
+        metrics.update(loss=loss, lr=lr)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,71 @@
+"""Checkpointer: atomic commit, retention, async writer, elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.train.train_step import TrainState, init_state
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    params = {"w": jax.random.normal(k, (8, 4)),
+              "blocks": [{"b": jnp.ones((3,))}, {"b": jnp.zeros((3,))}]}
+    return init_state(params)
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    s = _state()
+    ck.save(s, 7)
+    assert ck.latest_step() == 7
+    restored = ck.restore(jax.tree.map(lambda x: x, s))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), s, restored)
+    assert isinstance(restored, TrainState)
+
+
+def test_async_and_retention(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        ck.save_async(_state(step), step)
+    ck.wait()
+    assert ck.all_steps() == [3, 4]
+    # no stray tmp dirs after commit
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_restore_latest_and_missing(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        ck.restore(_state())
+    ck.save(_state(1), 5)
+    ck.save(_state(2), 9)
+    r = ck.restore(_state())
+    np.testing.assert_array_equal(r.params["w"], _state(2).params["w"])
+
+
+def test_elastic_restore_via_template_sharding(tmp_path):
+    """Restore against ShapeDtypeStruct templates carrying shardings —
+    the mesh-change path (elastic scaling)."""
+    ck = Checkpointer(str(tmp_path))
+    s = _state()
+    ck.save(s, 1)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sh), s)
+    restored = ck.restore(template)
+    np.testing.assert_array_equal(restored.params["w"], s.params["w"])
+    assert restored.params["w"].sharding == sh
+
+
+def test_dtype_cast_on_restore(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    s = {"w": jnp.ones((4,), jnp.float32)}
+    ck.save(s, 1)
+    out = ck.restore({"w": jnp.zeros((4,), jnp.bfloat16)})
+    assert out["w"].dtype == jnp.bfloat16

@@ -1,0 +1,95 @@
+"""Dry-run machinery at CI scale: lower+compile reduced configs against a
+multi-device placeholder mesh in a SUBPROCESS (so this test never pollutes
+the 1-device test process), exercising the same specs/sharding/probe code
+paths the 256/512-chip production dry-run uses."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, dataclasses
+import jax
+from repro import configs
+from repro.configs.base import SHAPES, ShapeConfig, reduced
+from repro.launch.specs import applicable, batch_structs, input_specs, lower_cell
+from repro.roofline import analysis as ra
+
+mesh = jax.make_mesh((4, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+out = {}
+for arch in %(archs)s:
+    cfg = reduced(configs.get(arch))
+    for shape_name, kind, seq, batch in [
+        ("t", "train", 64, 8), ("p", "prefill", 64, 4), ("d", "decode", 64, 8),
+    ]:
+        shape = ShapeConfig(shape_name, kind, seq, batch)
+        ok, why = applicable(cfg, shape)
+        if not ok:
+            out[f"{arch}|{shape_name}"] = "skip"
+            continue
+        lowered, meta = lower_cell(cfg, shape, mesh)
+        compiled = lowered.compile()
+        m = ra.compile_metrics(compiled)
+        out[f"{arch}|{shape_name}"] = dict(
+            flops=m["flops"], coll=m["coll_bytes"],
+            mem=compiled.memory_analysis().temp_size_in_bytes)
+print("JSON:" + json.dumps(out))
+"""
+
+
+@pytest.mark.parametrize("archs", [
+    ["qwen3-8b", "mamba2-370m"],
+    ["moonshot-v1-16b-a3b", "whisper-large-v3"],
+    ["zamba2-7b", "internvl2-2b", "atacworks"],
+])
+def test_lower_compile_on_8dev_mesh(archs):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD % {"archs": repr(archs)}],
+        env=env, capture_output=True, text=True, timeout=560,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = next(l for l in proc.stdout.splitlines() if l.startswith("JSON:"))
+    out = json.loads(line[5:])
+    for key, rec in out.items():
+        if rec == "skip":
+            assert key.split("|")[0] == "atacworks"
+            continue
+        assert rec["flops"] > 0, key
+
+
+def test_input_specs_cover_all_families():
+    import jax.numpy as jnp
+    from repro import configs
+    from repro.configs.base import SHAPES
+    from repro.launch.specs import input_specs
+    for arch in ("qwen3-8b", "internvl2-2b", "whisper-large-v3",
+                 "mamba2-370m", "deepseek-v3-671b"):
+        cfg = configs.get(arch)
+        tr = input_specs(cfg, SHAPES["train_4k"])
+        assert tr["tokens"].dtype == jnp.int32
+        assert tr["tokens"].shape[0] == 256
+        if cfg.family == "vlm":
+            assert tr["tokens"].shape[1] == 4096 - cfg.n_image_tokens
+            assert "patches" in tr
+        if cfg.family == "encdec":
+            assert "frames" in tr
+        de = input_specs(cfg, SHAPES["decode_32k"])
+        assert de["tokens"].shape == (128, 1)
+
+
+def test_applicable_skips():
+    from repro import configs
+    from repro.configs.base import SHAPES
+    from repro.launch.specs import applicable
+    assert applicable(configs.get("qwen3-8b"), SHAPES["long_500k"])[0] is False
+    assert applicable(configs.get("mamba2-370m"), SHAPES["long_500k"])[0] is True
+    assert applicable(configs.get("zamba2-7b"), SHAPES["long_500k"])[0] is True
+    assert applicable(configs.get("atacworks"), SHAPES["decode_32k"])[0] is False

@@ -1,0 +1,83 @@
+"""Fault-tolerance substrate: straggler detection, health monitor, elastic
+planning."""
+import numpy as np
+import pytest
+
+from repro.runtime.elastic import make_plan, plan_batch, plan_mesh
+from repro.runtime.health import HealthMonitor, PreemptionGuard
+from repro.runtime.straggler import StragglerDetector
+
+
+class TestStraggler:
+    def test_steady_state_ok(self):
+        d = StragglerDetector()
+        assert all(d.record(i, 0.1 + 1e-4 * (i % 3)) == "ok"
+                   for i in range(50))
+
+    def test_flags_outlier_and_trips_replace(self):
+        d = StragglerDetector(trip=3)
+        for i in range(20):
+            d.record(i, 0.1)
+        assert d.record(20, 1.0) == "slow"
+        assert d.record(21, 1.0) == "slow"
+        assert d.record(22, 1.0) == "replace"
+        # outliers must not contaminate the healthy EWMA
+        assert d.healthy_step_time < 0.2
+
+    def test_warmup_ignores_compile_step(self):
+        d = StragglerDetector(warmup=2)
+        assert d.record(0, 30.0) == "ok"  # compile
+        assert d.record(1, 0.1) == "ok"
+        for i in range(2, 20):
+            assert d.record(i, 0.1) == "ok"
+
+
+class TestHealth:
+    def test_skip_streak_requests_restore(self):
+        h = HealthMonitor(max_consecutive_skips=3)
+        assert h.record(0, 1.0, skipped=True) == "warn"
+        assert h.record(1, 1.0, skipped=True) == "warn"
+        assert h.record(2, 1.0, skipped=True) == "restore"
+
+    def test_recovery_resets_streak(self):
+        h = HealthMonitor(max_consecutive_skips=2)
+        h.record(0, 1.0, skipped=True)
+        assert h.record(1, 1.0, skipped=False) == "ok"
+        assert h.record(2, 1.0, skipped=True) == "warn"
+
+    def test_loss_spike_warns(self):
+        h = HealthMonitor()
+        for i in range(10):
+            h.record(i, 1.0, skipped=False)
+        assert h.record(10, 100.0, skipped=False) == "warn"
+
+
+class TestPreemption:
+    def test_flag(self):
+        g = PreemptionGuard(install=False)
+        assert not g.preempted()
+        g.request()
+        assert g.preempted()
+
+
+class TestElastic:
+    def test_plan_mesh_shapes(self):
+        assert plan_mesh(256, model_parallel=16) == ((16, 16), ("data", "model"))
+        assert plan_mesh(512, model_parallel=16, pod_size=16) == (
+            (2, 16, 16), ("pod", "data", "model"))
+
+    def test_plan_batch_preserves_global(self):
+        accum, micro = plan_batch(256, 16, max_microbatch_per_shard=1)
+        assert accum * micro == 256
+        accum, micro = plan_batch(256, 8, max_microbatch_per_shard=4)
+        assert accum * micro == 256
+
+    def test_make_plan_after_node_loss(self):
+        """240 devices (one 16-chip node lost from 256): data axis shrinks,
+        global batch unchanged."""
+        p = make_plan(240, model_parallel=16, global_batch=256)
+        assert p.n_devices <= 240
+        dp = np.prod([s for s, n in zip(p.mesh_shape, p.axis_names)
+                      if n in ("pod", "data")])
+        assert 256 % dp == 0
+        assert p.accum_steps * p.microbatch == 256
