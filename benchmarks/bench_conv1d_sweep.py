@@ -10,29 +10,26 @@ tap-by-tap) against the vendor-library general convolution
 on the host CPU.  Wall-clock on this 1-core container is a *relative*
 signal; the TPU-side efficiency story is §Roofline's job.
 
-Emits CSV: fig,mode,dtype,N,C,K,S,d,Q,sec,gflops,speedup_vs_library
+``--tuned`` adds a ``backend='auto'`` (tuning-subsystem) measurement per
+cell plus a tuned-vs-default column; pre-populate the cache first with
+``scripts/tune.py`` (same shapes — both read ``repro.tune.presets``).  The
+``tuned_src`` column shows how each cell resolved ('cache' vs 'default'):
+an all-'default' run means the cache never matched and the tuned column is
+just the fallback path re-measured.
+
+Emits CSV: fig,mode,dtype,N,C,K,S,d,Q,sec,gflops,speedup_vs_library,
+tuned_vs_default,tuned_src
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks.common import conv1d_flops, time_fn
+from repro import tune
 from repro.kernels import ops as kops
-
-# (figure, dtype, C, K, d) — the paper's three plotted parameter sets
-FIGSETS = [
-    ("fig4", jnp.float32, 15, 15, 8),
-    ("fig5", jnp.float32, 64, 64, 1),
-    ("fig6", jnp.bfloat16, 32, 32, 4),
-]
-Q_SET = [1000, 5000, 20000]
-Q_SET_FULL = [1000, 2000, 5000, 10000, 20000, 60000]
-S_SET = [5, 25, 51]
-S_SET_FULL = [1, 5, 9, 15, 21, 25, 31, 49, 51]
-N = 4  # batch (paper used 56/64; scaled to the 1-core container)
+from repro.tune.presets import (  # single source of truth with scripts/tune.py
+    FIGSETS, N, Q_SET, Q_SET_FULL, S_SET, S_SET_FULL)
 
 
 def _fwd(backend, w, dilation):
@@ -53,44 +50,58 @@ def _fwd_bwd(backend, dilation):
     return f
 
 
-def run(full: bool = False, iters: int = 3):
+def run(full: bool = False, iters: int = 3, tuned: bool = False):
     rows = []
     qs = Q_SET_FULL if full else Q_SET
     ss = S_SET_FULL if full else S_SET
-    for fig, dtype, C, K, d in FIGSETS:
+    modes = ("ref", "xla") + (("auto",) if tuned else ())
+    for fig, (dtype_name, C, K, d) in FIGSETS.items():
+        dtype = jnp.dtype(dtype_name)
         for S in ss:
             key = jax.random.key(0)
             w = (jax.random.normal(key, (S, K, C), jnp.float32) * 0.05).astype(dtype)
             for Q in qs:
                 x = jax.random.normal(jax.random.key(1), (N, C, Q), jnp.float32).astype(dtype)
                 flops = conv1d_flops(N, C, K, S, Q)
+                tuned_src = None
+                if tuned:  # how will backend='auto' resolve this cell?
+                    tuned_src = tune.get_config(
+                        N=N, C=C, K=K, S=S, dilation=d, Q=Q, dtype=dtype,
+                        padding="SAME", allow_measure=False).source
                 res = {}
-                for mode in ("ref", "xla"):
+                for mode in modes:
                     t = time_fn(_fwd(mode, w, d), x, iters=iters, warmup=1)
                     res[mode] = t
                     rows.append(dict(fig=fig, mode=f"fwd-{mode}",
-                                     dtype=str(jnp.dtype(dtype)), N=N, C=C,
+                                     dtype=dtype_name, N=N, C=C,
                                      K=K, S=S, d=d, Q=Q, sec=t,
                                      gflops=flops / t / 1e9))
-                for r in rows[-2:]:
+                for r in rows[-len(modes):]:
                     r["speedup_vs_library"] = res["xla"] / r["sec"]
+                    if tuned:  # default path = what backend=None dispatches to
+                        r["tuned_vs_default"] = res["xla"] / res["auto"]
+                        r["tuned_src"] = tuned_src
                 tb = {}
-                for mode in ("ref", "xla"):
+                for mode in modes:
                     t = time_fn(_fwd_bwd(mode, d), x, w, iters=iters, warmup=1)
                     tb[mode] = t
                     rows.append(dict(fig=fig, mode=f"fwdbwd-{mode}",
-                                     dtype=str(jnp.dtype(dtype)), N=N, C=C,
+                                     dtype=dtype_name, N=N, C=C,
                                      K=K, S=S, d=d, Q=Q, sec=t,
                                      gflops=3 * flops / t / 1e9))
-                for r in rows[-2:]:
+                for r in rows[-len(modes):]:
                     r["speedup_vs_library"] = tb["xla"] / r["sec"]
+                    if tuned:
+                        r["tuned_vs_default"] = tb["xla"] / tb["auto"]
+                        r["tuned_src"] = tuned_src
     return rows
 
 
-def main(full: bool = False):
-    rows = run(full=full)
+def main(full: bool = False, tuned: bool = False):
+    rows = run(full=full, tuned=tuned)
     cols = ["fig", "mode", "dtype", "N", "C", "K", "S", "d", "Q", "sec",
-            "gflops", "speedup_vs_library"]
+            "gflops", "speedup_vs_library"] + (
+                ["tuned_vs_default", "tuned_src"] if tuned else [])
     print(",".join(cols))
     for r in rows:
         print(",".join(f"{r.get(c, '')}" if not isinstance(r.get(c), float)
@@ -100,4 +111,4 @@ def main(full: bool = False):
 
 if __name__ == "__main__":
     import sys
-    main(full="--full" in sys.argv)
+    main(full="--full" in sys.argv, tuned="--tuned" in sys.argv)

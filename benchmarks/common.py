@@ -1,27 +1,19 @@
 """Shared benchmark utilities: wall-clock timing of jitted callables on the
-host devices (1 CPU here), with compile excluded and block_until_ready."""
+host devices (1 CPU here), with compile excluded and block_until_ready.
+
+The timing harness itself lives in ``repro.tune.measure`` so tuner
+measurements and benchmark measurements stay comparable by construction.
+"""
 from __future__ import annotations
-
-import time
-
-import jax
-import numpy as np
 
 
 def time_fn(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     """Median seconds per call of an already-jitted fn."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    from repro.tune.measure import median_time
+    return median_time(fn, *args, iters=iters, warmup=warmup)
 
 
 def conv1d_flops(N: int, C: int, K: int, S: int, Q: int) -> float:
     """MACs×2 of one forward conv1d (paper's efficiency denominator)."""
-    return 2.0 * N * C * K * S * Q
+    from repro.roofline.flops import conv1d_flops as _f
+    return _f(N, C, K, S, Q)

@@ -1,0 +1,61 @@
+"""Pre-populate the conv1d tuning cache over the paper's figure shapes.
+
+    PYTHONPATH=src python scripts/tune.py --figset fig4            # cost-model only
+    PYTHONPATH=src python scripts/tune.py --figset all --measure   # wall-clock search
+    PYTHONPATH=src python scripts/tune.py --figset fig5 --full --cache /tmp/tc.json
+
+Writes one cache entry per (S, Q) cell of the selected figure(s) —
+``repro.tune.presets`` mirrors the sweep benchmark, so afterwards
+``benchmarks/bench_conv1d_sweep.py --tuned`` and any ``backend="auto"``
+call on those shapes hit the cache with no re-measurement.
+
+Default is the analytic cost model (fast, deterministic); ``--measure``
+runs the median-of-k wall-clock search instead (slow off-TPU: Pallas
+candidates execute in interpret mode).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro import tune
+from repro.tune.presets import FIGSETS, figset_shapes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--figset", default="all",
+                    choices=[*FIGSETS, "all"], help="paper figure to cover")
+    ap.add_argument("--full", action="store_true",
+                    help="full S/Q grid instead of the CI-sized subset")
+    ap.add_argument("--measure", action="store_true",
+                    help="wall-clock search (default: cost model only)")
+    ap.add_argument("--cache", default=None,
+                    help="cache file (default: $REPRO_TUNE_CACHE or "
+                         "~/.cache/repro/tune_cache.json)")
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--top-k", type=int, default=4,
+                    help="measured candidates per shape (cost-ranked)")
+    args = ap.parse_args(argv)
+
+    cache = tune.TuneCache(args.cache) if args.cache else tune.get_default_cache()
+    names = list(FIGSETS) if args.figset == "all" else [args.figset]
+    n = 0
+    for name in names:
+        for prob in figset_shapes(name, full=args.full):
+            dtype = jnp.dtype(prob.pop("dtype"))
+            cfg = tune.tune(**prob, dtype=dtype, cache=cache,
+                            measure=args.measure, iters=args.iters,
+                            top_k=args.top_k)
+            n += 1
+            sec = f" {cfg.sec:.3e}s" if cfg.sec is not None else ""
+            print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype}: "
+                  f"{cfg.backend} wblk={cfg.wblk} kblk={cfg.kblk} "
+                  f"[{cfg.source}]{sec}")
+    print(f"\n{n} entries -> {cache.path} ({len(cache)} total)")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,10 +32,15 @@ class DilatedConv1D:
     @staticmethod
     def apply(params, x: jax.Array, *, dilation: int = 1,
               padding: kops.Padding = "SAME", backend: str | None = None,
-              wblk: int | None = None) -> jax.Array:
-        """x: (N, C_in, W) -> (N, C_out, Q)."""
+              wblk: int | None = None, kblk: int | None = None) -> jax.Array:
+        """x: (N, C_in, W) -> (N, C_out, Q).
+
+        ``backend='auto'`` (or ``REPRO_CONV_BACKEND=auto``) lets the tuning
+        subsystem pick the backend and wblk/kblk tiles for this shape from
+        its persistent cache; explicit wblk/kblk args override it.
+        """
         y = kops.conv1d(x, params["w"], dilation=dilation, padding=padding,
-                        backend=backend, wblk=wblk)
+                        backend=backend, wblk=wblk, kblk=kblk)
         if "b" in params:
             y = y + params["b"][None, :, None].astype(y.dtype)
         return y

@@ -6,7 +6,7 @@ accumulate into a single VMEM accumulator; the paper's cache blocking along
 the width dimension (block = 64 for AVX-512 L1/L2) becomes BlockSpec width
 tiling (block = WBLK, a multiple of the 128-lane TPU tile) with the *dilated
 footprint* ``F = WBLK + (S-1)*d`` staged HBM->VMEM once per tile via
-``pl.Element`` (overlapping-window) indexing and reused by all S taps.
+overlapping-window (element-indexed) BlockSpecs and reused by all S taps.
 
 Three kernels, mirroring the paper's Algorithms 2-4:
   * ``conv1d_fwd``          - Alg. 2 (also used for Alg. 3 / bwd-data with
@@ -48,6 +48,28 @@ def _compiler_params(dimension_semantics: Sequence[str], interpret: bool):
         return pltpu.CompilerParams(dimension_semantics=tuple(dimension_semantics))
     except TypeError:  # pragma: no cover - older API spelling
         return None
+
+
+def _overlap_spec(block_shape, index_map):
+    """Overlapping-window BlockSpec along the last (width) axis.
+
+    The dilated footprint ``F = WBLK + (S-1)*d`` of adjacent width tiles
+    overlaps by ``(S-1)*d`` elements, so the window axis must be indexed in
+    *elements*, not blocks.  ``index_map`` follows the newer-jax
+    ``pl.Element`` convention: BLOCK indices for the leading (Blocked) axes,
+    an ELEMENT offset for the window axis.  jax <= 0.5 only has the
+    all-element ``Unblocked`` indexing mode, so there the leading block
+    indices are scaled by their block sizes here.
+    """
+    if hasattr(pl, "Element"):
+        shape = (*block_shape[:-1], pl.Element(block_shape[-1]))
+        return pl.BlockSpec(shape, index_map)
+
+    def elem_map(*grid_ids):
+        idx = index_map(*grid_ids)
+        return (*(i * b for i, b in zip(idx[:-1], block_shape[:-1])), idx[-1])
+
+    return pl.BlockSpec(block_shape, elem_map, indexing_mode=pl.Unblocked())
 
 
 # ---------------------------------------------------------------------------
@@ -98,10 +120,7 @@ def conv1d_fwd(
         grid=grid,
         in_specs=[
             # overlapping dilated footprint along width: element-indexed
-            pl.BlockSpec(
-                (1, C, pl.Element(F)),
-                lambda n, kt, qt: (n, 0, qt * wblk),
-            ),
+            _overlap_spec((1, C, F), lambda n, kt, qt: (n, 0, qt * wblk)),
             pl.BlockSpec((S, kblk, C), lambda n, kt, qt: (0, kt, 0)),
         ],
         out_specs=pl.BlockSpec((1, kblk, wblk), lambda n, kt, qt: (n, kt, qt)),
@@ -156,7 +175,7 @@ def conv1d_bwd_weight(
         functools.partial(_bwd_w_kernel, S=S, dilation=dilation, wblk=wblk),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, C, pl.Element(F)), lambda n, qt: (n, 0, qt * wblk)),
+            _overlap_spec((1, C, F), lambda n, qt: (n, 0, qt * wblk)),
             pl.BlockSpec((1, K, wblk), lambda n, qt: (n, 0, qt)),
         ],
         out_specs=pl.BlockSpec((S, K, C), lambda n, qt: (0, 0, 0)),
@@ -207,7 +226,7 @@ def depthwise_conv1d_fwd(
         functools.partial(_dw_fwd_kernel, S=S, dilation=dilation, wblk=wblk),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, cblk, pl.Element(F)), lambda n, ct, qt: (n, ct * cblk, qt * wblk)),
+            _overlap_spec((1, cblk, F), lambda n, ct, qt: (n, ct, qt * wblk)),
             pl.BlockSpec((S, cblk), lambda n, ct, qt: (0, ct)),
         ],
         out_specs=pl.BlockSpec((1, cblk, wblk), lambda n, ct, qt: (n, ct, qt)),
@@ -254,7 +273,7 @@ def depthwise_conv1d_bwd_weight(
         functools.partial(_dw_bwd_w_kernel, S=S, dilation=dilation, wblk=wblk),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, cblk, pl.Element(F)), lambda n, qt, ct: (n, ct * cblk, qt * wblk)),
+            _overlap_spec((1, cblk, F), lambda n, qt, ct: (n, ct, qt * wblk)),
             pl.BlockSpec((1, cblk, wblk), lambda n, qt, ct: (n, ct, qt)),
         ],
         out_specs=pl.BlockSpec((S, cblk), lambda n, qt, ct: (0, ct)),

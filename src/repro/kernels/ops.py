@@ -4,7 +4,8 @@
   * padding modes VALID (paper's pre-padded contract), SAME, CAUSAL
   * backend dispatch: 'pallas' (TPU target / interpret on CPU),
     'xla' (lax.conv_general_dilated — the vendor-library baseline and the
-    fast CPU path), 'ref' (readable oracle)
+    fast CPU path), 'ref' (readable oracle), 'auto' (per-shape choice of
+    backend AND tile sizes via the tuning subsystem, repro.tune)
   * a ``jax.custom_vjp`` that binds the paper's Alg. 3 (bwd-data via the fwd
     BRGEMM kernel on flipped+transposed weights) and Alg. 4 (bwd-weight
     kernel) into autodiff, so ``jax.grad`` of a model using this layer
@@ -40,6 +41,23 @@ def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
+def _resolve_auto(x, *, C, K, S, dilation, padding, wblk, kblk, depthwise):
+    """backend='auto': ask the tuner (repro.tune) for backend + tile sizes.
+
+    Runs at trace time on static shape info only.  Cache hit -> cached
+    winner; miss -> measured search iff REPRO_TUNE=1, else the pick_wblk
+    heuristic on the platform-default backend.  Explicit wblk/kblk args
+    still win over the tuner's choice.
+    """
+    from repro import tune  # late import: tune.measure calls back into ops
+
+    N = x.shape[0]
+    Q = x.shape[-1] - (S - 1) * dilation
+    cfg = tune.get_config(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
+                          dtype=x.dtype, padding=padding, depthwise=depthwise)
+    return cfg.backend, wblk or cfg.wblk, kblk or cfg.kblk
+
+
 def _pad_amounts(S: int, dilation: int, padding: Padding) -> tuple[int, int]:
     span = (S - 1) * dilation
     if padding == "VALID":
@@ -72,7 +90,7 @@ def pick_wblk(Q: int, S: int, dilation: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _pallas_fwd_padded(x, w, dilation, wblk, interpret):
+def _pallas_fwd_padded(x, w, dilation, wblk, kblk, interpret):
     """x: (N, C, W) already logically padded; returns (N, K, Q) via the
     Pallas kernel, handling width round-up to the tile size."""
     N, C, W = x.shape
@@ -82,20 +100,21 @@ def _pallas_fwd_padded(x, w, dilation, wblk, interpret):
     Qp = _round_up(Q, wblk)
     if Qp + span > W:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
-    out = _k.conv1d_fwd(x, w, dilation=dilation, wblk=wblk, interpret=interpret)
+    out = _k.conv1d_fwd(x, w, dilation=dilation, wblk=wblk, kblk=kblk,
+                        interpret=interpret)
     return out[:, :, :Q]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _conv1d_pallas(x, w, dilation, wblk, interpret):
-    return _pallas_fwd_padded(x, w, dilation, wblk, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _conv1d_pallas(x, w, dilation, wblk, kblk, interpret):
+    return _pallas_fwd_padded(x, w, dilation, wblk, kblk, interpret)
 
 
-def _conv1d_pallas_fwd(x, w, dilation, wblk, interpret):
-    return _pallas_fwd_padded(x, w, dilation, wblk, interpret), (x, w)
+def _conv1d_pallas_fwd(x, w, dilation, wblk, kblk, interpret):
+    return _pallas_fwd_padded(x, w, dilation, wblk, kblk, interpret), (x, w)
 
 
-def _conv1d_pallas_bwd(dilation, wblk, interpret, res, gout):
+def _conv1d_pallas_bwd(dilation, wblk, kblk, interpret, res, gout):
     x, w = res
     S, K, C = w.shape
     span = (S - 1) * dilation
@@ -103,7 +122,8 @@ def _conv1d_pallas_bwd(dilation, wblk, interpret, res, gout):
     # transposed weights (the paper's (S, C, K) layout).
     g_pad = jnp.pad(gout, ((0, 0), (0, 0), (span, span)))
     w_flip = w[::-1].transpose(0, 2, 1)  # (S, C, K)
-    dx = _pallas_fwd_padded(g_pad, w_flip, dilation, wblk, interpret)
+    # kblk tuned for K need not divide C (the bwd-data filter count)
+    dx = _pallas_fwd_padded(g_pad, w_flip, dilation, wblk, None, interpret)
     dx = dx.astype(x.dtype)
     # --- Alg. 4: bwd-weight kernel (fp32 accumulation).
     N, Cx, W = x.shape
@@ -128,18 +148,26 @@ def conv1d(
     padding: Padding = "SAME",
     backend: str | None = None,
     wblk: int | None = None,
+    kblk: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """1D dilated convolution, paper semantics.
 
     x: (N, C, W), w: (S, K, C) -> (N, K, Q); Q == W for SAME/CAUSAL,
     Q = W - (S-1)*dilation for VALID.
+
+    backend='auto' asks the tuning subsystem (``repro.tune``) to pick the
+    backend and tile sizes for this exact shape; see ``_resolve_auto``.
     """
     backend = backend or default_backend()
-    S = w.shape[0]
+    S, K, C = w.shape
     lo, hi = _pad_amounts(S, dilation, padding)
     if lo or hi:
         x = jnp.pad(x, ((0, 0), (0, 0), (lo, hi)))
+    if backend == "auto":
+        backend, wblk, kblk = _resolve_auto(
+            x, C=C, K=K, S=S, dilation=dilation, padding=padding,
+            wblk=wblk, kblk=kblk, depthwise=False)
     if backend == "ref":
         return _ref.conv1d_ref(x, w, dilation=dilation)
     if backend == "xla":
@@ -148,7 +176,7 @@ def conv1d(
         Q = x.shape[-1] - (S - 1) * dilation
         wblk = wblk or pick_wblk(Q, S, dilation)
         interpret = _INTERPRET if interpret is None else interpret
-        return _conv1d_pallas(x, w, dilation, wblk, interpret)
+        return _conv1d_pallas(x, w, dilation, wblk, kblk, interpret)
     raise ValueError(f"unknown conv backend {backend!r}")
 
 
@@ -157,7 +185,7 @@ def conv1d(
 # ---------------------------------------------------------------------------
 
 
-def _dw_pallas_fwd_padded(x, w, dilation, wblk, interpret):
+def _dw_pallas_fwd_padded(x, w, dilation, wblk, cblk, interpret):
     N, C, W = x.shape
     S, _ = w.shape
     span = (S - 1) * dilation
@@ -165,32 +193,34 @@ def _dw_pallas_fwd_padded(x, w, dilation, wblk, interpret):
     Qp = _round_up(Q, wblk)
     if Qp + span > W:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
-    out = _k.depthwise_conv1d_fwd(x, w, dilation=dilation, wblk=wblk, interpret=interpret)
+    out = _k.depthwise_conv1d_fwd(x, w, dilation=dilation, wblk=wblk,
+                                  cblk=cblk, interpret=interpret)
     return out[:, :, :Q]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
-def _dw_conv1d_pallas(x, w, dilation, wblk, interpret):
-    return _dw_pallas_fwd_padded(x, w, dilation, wblk, interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _dw_conv1d_pallas(x, w, dilation, wblk, cblk, interpret):
+    return _dw_pallas_fwd_padded(x, w, dilation, wblk, cblk, interpret)
 
 
-def _dw_conv1d_pallas_fwd(x, w, dilation, wblk, interpret):
-    return _dw_pallas_fwd_padded(x, w, dilation, wblk, interpret), (x, w)
+def _dw_conv1d_pallas_fwd(x, w, dilation, wblk, cblk, interpret):
+    return _dw_pallas_fwd_padded(x, w, dilation, wblk, cblk, interpret), (x, w)
 
 
-def _dw_conv1d_pallas_bwd(dilation, wblk, interpret, res, gout):
+def _dw_conv1d_pallas_bwd(dilation, wblk, cblk, interpret, res, gout):
     x, w = res
     S, C = w.shape
     span = (S - 1) * dilation
     g_pad = jnp.pad(gout, ((0, 0), (0, 0), (span, span)))
-    dx = _dw_pallas_fwd_padded(g_pad, w[::-1], dilation, wblk, interpret).astype(x.dtype)
+    dx = _dw_pallas_fwd_padded(g_pad, w[::-1], dilation, wblk, cblk,
+                               interpret).astype(x.dtype)
     N, _, W = x.shape
     Q = W - span
     Qp = _round_up(Q, wblk)
     xp = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W))) if Qp + span > W else x
     gp = jnp.pad(gout, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else gout
     dw = _k.depthwise_conv1d_bwd_weight(
-        xp, gp, S=S, dilation=dilation, wblk=wblk, interpret=interpret
+        xp, gp, S=S, dilation=dilation, wblk=wblk, cblk=cblk, interpret=interpret
     )
     return dx, dw.astype(w.dtype)
 
@@ -206,20 +236,27 @@ def depthwise_conv1d(
     padding: Padding = "CAUSAL",
     backend: str | None = None,
     wblk: int | None = None,
+    cblk: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Depthwise 1D conv.  x: (N, C, W), w: (S, C) -> (N, C, Q)."""
+    """Depthwise 1D conv.  x: (N, C, W), w: (S, C) -> (N, C, Q).
+
+    backend='auto' defers to the tuning subsystem, as in ``conv1d``.
+    """
     backend = backend or default_backend()
-    S = w.shape[0]
+    S, C = w.shape
     lo, hi = _pad_amounts(S, dilation, padding)
     if lo or hi:
         x = jnp.pad(x, ((0, 0), (0, 0), (lo, hi)))
+    if backend == "auto":
+        backend, wblk, cblk = _resolve_auto(
+            x, C=C, K=C, S=S, dilation=dilation, padding=padding,
+            wblk=wblk, kblk=cblk, depthwise=True)
     if backend == "ref":
         return _ref.depthwise_conv1d_ref(x, w, dilation=dilation)
     if backend == "xla":
         # grouped conv via feature_group_count; compute in fp32 throughout
         # so the AD transpose sees consistent dtypes (bf16 params)
-        S_, C = w.shape
         w_oiw = w.T[:, None, :].astype(jnp.float32)  # (C, 1, S)
         return jax.lax.conv_general_dilated(
             x.astype(jnp.float32), w_oiw, (1,), "VALID",
@@ -231,5 +268,5 @@ def depthwise_conv1d(
         Q = x.shape[-1] - (S - 1) * dilation
         wblk = wblk or pick_wblk(Q, S, dilation)
         interpret = _INTERPRET if interpret is None else interpret
-        return _dw_conv1d_pallas(x, w, dilation, wblk, interpret)
+        return _dw_conv1d_pallas(x, w, dilation, wblk, cblk, interpret)
     raise ValueError(f"unknown conv backend {backend!r}")

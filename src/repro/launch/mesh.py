@@ -20,22 +20,28 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def compat_make_mesh(shape, axis_names):
+    """``jax.make_mesh`` with explicit Auto axis types where the installed
+    jax supports them (``axis_types=`` and ``jax.sharding.AxisType`` arrived
+    after 0.4.x; older jax treats every axis as Auto already)."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axis_names,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names))
+    return jax.make_mesh(shape, axis_names)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh(*, model: int = 1):
     """A mesh over whatever devices exist (CPU smoke / single host)."""
     n = len(jax.devices())
     assert n % model == 0
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return compat_make_mesh((n // model, model), ("data", "model"))
 
 
 def dp_size(mesh) -> int:

@@ -8,6 +8,20 @@ remat/redundancy waste (EXPERIMENTS.md §Roofline).
 from __future__ import annotations
 
 
+def conv1d_flops(N: int, C: int, K: int, S: int, Q: int) -> float:
+    """MACs×2 of one forward dilated conv1d (the paper's efficiency
+    denominator; dilation moves taps, it does not change the count)."""
+    return 2.0 * N * C * K * S * Q
+
+
+def conv1d_min_bytes(N: int, C: int, K: int, S: int, Q: int,
+                     dilation: int, bytes_per_elem: int) -> float:
+    """Memory-roofline floor of one forward pass: read x and w once, write
+    the output once."""
+    W = Q + (S - 1) * dilation
+    return float(bytes_per_elem * (N * C * W + S * K * C + N * K * Q))
+
+
 def _attn_params(cfg) -> int:
     if cfg.mla is not None:
         a = cfg.mla

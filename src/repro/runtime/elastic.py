@@ -76,6 +76,5 @@ def make_plan(n_devices: int, *, model_parallel: int, global_batch: int,
 
 
 def build_mesh(plan: ElasticPlan):
-    return jax.make_mesh(
-        plan.mesh_shape, plan.axis_names,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(plan.axis_names))
+    from repro.launch.mesh import compat_make_mesh
+    return compat_make_mesh(plan.mesh_shape, plan.axis_names)

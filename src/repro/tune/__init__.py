@@ -1,0 +1,144 @@
+"""Autotuning subsystem for the conv1d layer (cost-model + measured search).
+
+The paper's generality claim rests on picking good blocking *per shape*
+(LIBXSMM does this on CPU; cuDNN does it by algorithm dispatch).  This
+package replaces the static ``pick_wblk`` ladder with:
+
+  * ``space``    — legal (backend, wblk, kblk) candidates under the kernel
+                   contract and a VMEM-footprint budget;
+  * ``cost``     — analytic roofline ranking (prunes before measuring, and
+                   is the whole answer when measurement is disabled);
+  * ``measure``  — jit + warmup + median-of-k wall-clock harness;
+  * ``cache``    — persistent JSON cache keyed by
+                   (device_kind, dtype, N, C, K, S, dilation, Q, padding).
+
+Entry points:
+
+  * ``get_config(...)`` — what ``ops.conv1d(backend="auto")`` calls per
+    shape at trace time: cache hit -> cached winner; miss -> measured
+    search *only* if tuning is enabled (``REPRO_TUNE=1`` or
+    ``allow_measure=True``), else the heuristic default (``pick_wblk``
+    ladder + default backend) without touching the cache.
+  * ``tune(...)`` — explicit search: enumerate, cost-rank, measure the
+    top-k, persist the winner.  ``scripts/tune.py`` drives this over the
+    paper's figure shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Any
+
+import jax
+
+from . import cache as _cache
+from . import cost as _cost
+from . import measure as _measure
+from . import presets  # noqa: F401  (re-exported work-lists)
+from . import space as _space
+from .cache import TuneCache, cache_key, get_default_cache, reset_default_cache
+from .space import Candidate
+
+ENV_TUNE = "REPRO_TUNE"
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    backend: str                 # 'pallas' | 'xla'
+    wblk: int | None
+    kblk: int | None             # cblk for depthwise
+    source: str                  # 'cache' | 'measured' | 'cost' | 'default'
+    sec: float | None = None     # measured seconds (if any)
+
+
+def device_kind() -> str:
+    return jax.devices()[0].device_kind
+
+
+def measurement_enabled() -> bool:
+    return os.environ.get(ENV_TUNE) == "1"
+
+
+def _problem_key(*, N, C, K, S, dilation, Q, dtype, padding, depthwise):
+    return cache_key(device_kind=device_kind(), dtype=str(jax.numpy.dtype(dtype)),
+                     N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
+                     padding=padding, depthwise=depthwise)
+
+
+def _default_config(Q: int, S: int, dilation: int) -> TunedConfig:
+    from repro.kernels import ops  # late import: ops dispatches into tune
+
+    backend = "pallas" if jax.default_backend() == "tpu" else "xla"
+    return TunedConfig(backend, ops.pick_wblk(Q, S, dilation), None, "default")
+
+
+def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
+         padding: str = "VALID", depthwise: bool = False,
+         cache: TuneCache | None = None, measure: bool = True,
+         top_k: int = 4, iters: int = 5, warmup: int = 2) -> TunedConfig:
+    """Search the candidate space for one problem and persist the winner.
+
+    With ``measure=False`` the analytic cost model alone picks (source
+    'cost'); otherwise the cost-ranked top-k candidates are wall-clock
+    timed and the median-fastest wins (source 'measured').
+    """
+    if cache is None:  # NOT `or`: an empty TuneCache is falsy (__len__)
+        cache = get_default_cache()
+    dtype_bytes = jax.numpy.dtype(dtype).itemsize
+    cands = _space.enumerate_candidates(
+        C=C, K=K, S=S, dilation=dilation, Q=Q, dtype_bytes=dtype_bytes,
+        depthwise=depthwise)
+    ranked = _cost.rank(cands, N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
+                        dtype_bytes=dtype_bytes, device_kind=device_kind(),
+                        depthwise=depthwise)
+    if measure:
+        timed = [(
+            _measure.time_candidate(c, N=N, C=C, K=K, S=S, dilation=dilation,
+                                    Q=Q, dtype=dtype, padding=padding,
+                                    iters=iters, warmup=warmup,
+                                    depthwise=depthwise), c)
+            for c in ranked[:top_k]]
+        sec, best = min(timed, key=lambda t: t[0])
+        cfg = TunedConfig(best.backend, best.wblk, best.kblk, "measured", sec)
+    else:
+        best = ranked[0]
+        cfg = TunedConfig(best.backend, best.wblk, best.kblk, "cost")
+    key = _problem_key(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
+                       dtype=dtype, padding=padding, depthwise=depthwise)
+    cache.put(key, {"backend": cfg.backend, "wblk": cfg.wblk,
+                    "kblk": cfg.kblk, "source": cfg.source, "sec": cfg.sec})
+    return cfg
+
+
+def get_config(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
+               dtype, padding: str = "VALID", depthwise: bool = False,
+               cache: TuneCache | None = None,
+               allow_measure: bool | None = None) -> TunedConfig:
+    """Resolve the config for one problem: cache -> (maybe) tune -> default.
+
+    A cache hit never re-measures.  On a miss, a measured search runs only
+    when allowed (``REPRO_TUNE=1`` or ``allow_measure=True``); otherwise the
+    heuristic default is returned and the cache is left untouched, so a
+    later real tuning run can still fill it.
+    """
+    if cache is None:  # NOT `or`: an empty TuneCache is falsy (__len__)
+        cache = get_default_cache()
+    key = _problem_key(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
+                       dtype=dtype, padding=padding, depthwise=depthwise)
+    hit = cache.get(key)
+    if hit is not None:
+        return TunedConfig(hit["backend"], hit.get("wblk"), hit.get("kblk"),
+                           "cache", hit.get("sec"))
+    if allow_measure is None:
+        allow_measure = measurement_enabled()
+    if allow_measure:
+        return tune(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q, dtype=dtype,
+                    padding=padding, depthwise=depthwise, cache=cache)
+    return _default_config(Q, S, dilation)
+
+
+__all__ = [
+    "Candidate", "TuneCache", "TunedConfig", "cache_key", "device_kind",
+    "get_config", "get_default_cache", "measurement_enabled", "presets",
+    "reset_default_cache", "tune",
+]

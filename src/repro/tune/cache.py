@@ -1,0 +1,119 @@
+"""Persistent JSON cache of tuned conv1d configurations.
+
+One entry per problem instance, keyed by everything that changes the best
+(backend, wblk, kblk) choice:
+
+    (device_kind, dtype, N, C, K, S, dilation, Q, padding[, depthwise])
+
+The cache is a flat JSON object mapping the canonical key string to the
+winning entry, e.g.::
+
+    {"TPU v5e|float32|N4|C15|K15|S5|d8|Q5000|VALID|dense":
+        {"backend": "pallas", "wblk": 512, "kblk": 15,
+         "source": "measured", "sec": 1.7e-4}}
+
+Path resolution: explicit argument > ``REPRO_TUNE_CACHE`` env var >
+``~/.cache/repro/tune_cache.json``.  Writes are atomic (tmp file + rename)
+so concurrent tuning runs cannot truncate each other's cache, and the file
+is re-read when its mtime changes so long-lived processes pick up entries
+written by ``scripts/tune.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+ENV_CACHE_PATH = "REPRO_TUNE_CACHE"
+_DEFAULT_PATH = os.path.join("~", ".cache", "repro", "tune_cache.json")
+
+
+def default_cache_path() -> str:
+    return os.path.expanduser(os.environ.get(ENV_CACHE_PATH) or _DEFAULT_PATH)
+
+
+def cache_key(*, device_kind: str, dtype: str, N: int, C: int, K: int,
+              S: int, dilation: int, Q: int, padding: str,
+              depthwise: bool = False) -> str:
+    kind = "dw" if depthwise else "dense"
+    return (f"{device_kind}|{dtype}|N{N}|C{C}|K{K}|S{S}|d{dilation}"
+            f"|Q{Q}|{padding}|{kind}")
+
+
+class TuneCache:
+    """Dict-like view over one JSON cache file."""
+
+    def __init__(self, path: str | None = None):
+        self.path = os.path.expanduser(path) if path else default_cache_path()
+        self._entries: dict[str, dict[str, Any]] | None = None
+        self._mtime: float | None = None
+
+    # -- IO -----------------------------------------------------------------
+
+    def _load(self) -> dict[str, dict[str, Any]]:
+        try:
+            mtime = os.path.getmtime(self.path)
+        except OSError:
+            if self._entries is None:
+                self._entries = {}
+            return self._entries
+        if self._entries is None or mtime != self._mtime:
+            try:
+                with open(self.path) as f:
+                    self._entries = json.load(f)
+            except (OSError, json.JSONDecodeError):
+                self._entries = {}
+            self._mtime = mtime
+        return self._entries
+
+    def _persist(self) -> None:
+        d = os.path.dirname(self.path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tune.tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(self._entries, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+        self._mtime = os.path.getmtime(self.path)
+
+    # -- API ----------------------------------------------------------------
+
+    def get(self, key: str) -> dict[str, Any] | None:
+        return self._load().get(key)
+
+    def put(self, key: str, entry: dict[str, Any], *, persist: bool = True) -> None:
+        self._load()[key] = dict(entry)
+        if persist:
+            self._persist()
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+    def keys(self):
+        return self._load().keys()
+
+
+_default: TuneCache | None = None
+
+
+def get_default_cache() -> TuneCache:
+    """Process-wide cache bound to the current ``REPRO_TUNE_CACHE`` value
+    (re-created if the env var changes, e.g. under pytest monkeypatch)."""
+    global _default
+    path = default_cache_path()
+    if _default is None or _default.path != path:
+        _default = TuneCache(path)
+    return _default
+
+
+def reset_default_cache() -> None:
+    global _default
+    _default = None

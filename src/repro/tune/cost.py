@@ -1,0 +1,103 @@
+"""Analytic roofline cost model for ranking tuner candidates.
+
+Estimates wall-clock for each (backend, wblk, kblk) candidate from three
+terms and returns ``max(compute, memory) + grid overhead``:
+
+  * compute — useful MACs *on the padded width* ``Qp = round_up(Q, wblk)``
+    (``repro.roofline.flops.conv1d_flops``), so tiles that round a small Q
+    far up are charged for the wasted columns;
+  * memory — modeled HBM traffic.  The Pallas grid iterates width tiles
+    innermost, so the weight block stays VMEM-resident across a width sweep
+    while the input footprint ``F = WBLK + (S-1)*d`` is re-fetched once per
+    (batch, filter-tile, width-tile) cell: smaller kblk ⇒ more passes over x;
+  * overhead — a fixed per-grid-cell cost (launch/bookkeeping), the
+    tie-breaker that prefers fewer, larger tiles when compute and traffic
+    are identical.
+
+The model only needs to *rank* candidates (prune the space before
+measuring, or pick a default when measurement is disabled), so the peak
+numbers are deliberately coarse.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.roofline.flops import conv1d_flops, conv1d_min_bytes
+
+from .space import Candidate, round_up
+
+CELL_OVERHEAD_SEC = 1e-7        # per grid cell: launch / loop bookkeeping
+
+# Achieved-fraction-of-peak derates.  The shape-specialized BRGEMM kernel
+# sustains a high fraction of the MXU on its target (the paper's thesis);
+# the generic library conv pays for generality; and Pallas off-TPU runs in
+# *interpret mode* — a correctness tool, orders of magnitude off peak — so
+# the model must never pick it on CPU.
+EFF_PALLAS_TPU = 0.8
+EFF_PALLAS_INTERPRET = 1e-3
+EFF_XLA_TPU = 0.45
+EFF_XLA_HOST = 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class Peaks:
+    flops_per_s: float
+    bytes_per_s: float
+
+
+# Coarse per-device peaks; matched by substring of jax's device_kind.
+DEVICE_PEAKS = {
+    "v5": Peaks(197e12, 819e9),     # TPU v5e (bf16 MXU)
+    "v4": Peaks(275e12, 1200e9),
+    "tpu": Peaks(180e12, 800e9),    # generic TPU fallback
+    "cpu": Peaks(1e11, 5e10),       # container CPU fallback
+}
+
+
+def peaks_for(device_kind: str) -> Peaks:
+    dk = device_kind.lower()
+    for sub, p in DEVICE_PEAKS.items():
+        if sub in dk:
+            return p
+    return DEVICE_PEAKS["cpu"]
+
+
+def estimate_seconds(cand: Candidate, *, N: int, C: int, K: int, S: int,
+                     dilation: int, Q: int, dtype_bytes: int,
+                     device_kind: str = "cpu",
+                     depthwise: bool = False) -> float:
+    peaks = peaks_for(device_kind)
+    is_tpu = "tpu" in device_kind.lower() or device_kind.lower().startswith("v")
+    n_filters = C if depthwise else K
+    # depthwise is one MAC chain per channel: K plays no contraction role
+    flops = conv1d_flops(N, C, 1 if depthwise else K, S, Q)
+
+    if cand.backend != "pallas":
+        eff = EFF_XLA_TPU if is_tpu else EFF_XLA_HOST
+        mem = conv1d_min_bytes(N, C, n_filters, S, Q, dilation, dtype_bytes)
+        # the derate applies to the whole pass: a generic library misses
+        # peak on both the compute and the traffic axis
+        return max(flops / peaks.flops_per_s, mem / peaks.bytes_per_s) / eff
+
+    wblk, kblk = cand.wblk, cand.kblk
+    Qp = round_up(Q, wblk)
+    flops *= Qp / Q             # padded columns are computed and discarded
+    F = wblk + (S - 1) * dilation
+    q_tiles = Qp // wblk
+    k_tiles = max(1, n_filters // kblk)
+    if depthwise:
+        x_traffic = N * k_tiles * q_tiles * kblk * F          # cblk rows of F
+    else:
+        x_traffic = N * k_tiles * q_tiles * C * F             # C rows per cell
+    w_traffic = S * n_filters * (1 if depthwise else C)
+    out_traffic = N * n_filters * Qp
+    mem = dtype_bytes * (x_traffic + w_traffic + out_traffic)
+    cells = N * k_tiles * q_tiles
+    eff = EFF_PALLAS_TPU if is_tpu else EFF_PALLAS_INTERPRET
+    return (max(flops / peaks.flops_per_s, mem / peaks.bytes_per_s) / eff
+            + cells * CELL_OVERHEAD_SEC)
+
+
+def rank(cands: list[Candidate], **problem) -> list[Candidate]:
+    """Candidates sorted cheapest-first under the analytic model."""
+    return sorted(cands, key=lambda c: estimate_seconds(c, **problem))

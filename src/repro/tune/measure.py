@@ -1,0 +1,62 @@
+"""Wall-clock measurement of tuner candidates.
+
+jit + warmup (compile excluded) + median-of-k with ``block_until_ready``,
+the same discipline as ``benchmarks/common.time_fn``.  Interpret-safe: the
+candidate is executed through ``repro.kernels.ops``, which runs Pallas in
+interpret mode off-TPU, so a measured search on the CPU container ranks the
+*formulation* honestly (and the xla backend is the fast CPU path, exactly
+what the tuner should pick there).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .space import Candidate
+
+
+def median_time(fn, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median seconds per call of an already-jitted fn."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def time_candidate(cand: Candidate, *, N: int, C: int, K: int, S: int,
+                   dilation: int, Q: int, dtype, padding: str = "VALID",
+                   iters: int = 5, warmup: int = 2, depthwise: bool = False,
+                   seed: int = 0) -> float:
+    """Seconds per forward pass of one candidate on a random problem
+    instance.  The input width is chosen so the output width is Q under the
+    given padding mode (VALID gets the pre-padded kernel contract)."""
+    from repro.kernels import ops  # late import: ops dispatches into tune
+
+    W = Q + (S - 1) * dilation if padding == "VALID" else Q
+    kx, kw = jax.random.split(jax.random.key(seed))
+    x = (jax.random.normal(kx, (N, C, W), jnp.float32)).astype(dtype)
+    if depthwise:
+        w = (jax.random.normal(kw, (S, C), jnp.float32) * 0.1).astype(dtype)
+
+        @jax.jit
+        def f(x, w):
+            return ops.depthwise_conv1d(
+                x, w, dilation=dilation, padding=padding,
+                backend=cand.backend, wblk=cand.wblk, cblk=cand.kblk)
+    else:
+        w = (jax.random.normal(kw, (S, K, C), jnp.float32) * 0.1).astype(dtype)
+
+        @jax.jit
+        def f(x, w):
+            return ops.conv1d(
+                x, w, dilation=dilation, padding=padding,
+                backend=cand.backend, wblk=cand.wblk, kblk=cand.kblk)
+
+    return median_time(f, x, w, iters=iters, warmup=warmup)

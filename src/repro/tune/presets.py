@@ -1,0 +1,32 @@
+"""The paper's Figure 4/5/6 parameter sets, as tuner work-lists.
+
+Single source of truth shared by ``scripts/tune.py`` (cache pre-population)
+and ``benchmarks/bench_conv1d_sweep.py`` (the efficiency sweep), so the
+shapes we benchmark are exactly the shapes we pre-tune.
+"""
+from __future__ import annotations
+
+# figure -> (dtype name, C, K, dilation); batch matches the sweep benchmark
+FIGSETS = {
+    "fig4": ("float32", 15, 15, 8),
+    "fig5": ("float32", 64, 64, 1),
+    "fig6": ("bfloat16", 32, 32, 4),
+}
+Q_SET = [1000, 5000, 20000]
+Q_SET_FULL = [1000, 2000, 5000, 10000, 20000, 60000]
+S_SET = [5, 25, 51]
+S_SET_FULL = [1, 5, 9, 15, 21, 25, 31, 49, 51]
+N = 4  # batch (paper used 56/64; scaled to the 1-core container)
+
+
+def figset_shapes(name: str, *, full: bool = False):
+    """Yield one problem dict per (S, Q) cell of the named figure.
+
+    padding='SAME' matches the sweep benchmark's calls, so the cache keys
+    written here are the ones ``backend='auto'`` looks up there.
+    """
+    dtype, C, K, d = FIGSETS[name]
+    for S in (S_SET_FULL if full else S_SET):
+        for Q in (Q_SET_FULL if full else Q_SET):
+            yield dict(N=N, C=C, K=K, S=S, dilation=d, Q=Q, dtype=dtype,
+                       padding="SAME")

@@ -1,0 +1,90 @@
+"""Candidate enumeration for the conv1d tuner.
+
+A candidate is a (backend, wblk, kblk) triple:
+
+  * backend 'pallas' — the BRGEMM kernel; wblk is the width tile, kblk the
+    filter tile (channel tile cblk for the depthwise variant).
+  * backend 'xla'    — the vendor-library general conv; no tiling knobs.
+
+Legality for the Pallas kernel (the shape contract of
+``kernels/conv1d_brgemm.py``):
+
+  * wblk is a multiple of the 128-lane TPU tile;
+  * K % kblk == 0 (C % cblk == 0 for depthwise);
+  * the VMEM working set — input footprint ``F = WBLK + (S-1)*d``, all S
+    weight taps of the filter tile, the output tile, and the fp32
+    accumulator — fits a per-core budget (half of the ~16 MiB VMEM, leaving
+    room for double buffering);
+  * the width round-up waste ``round_up(Q, wblk)/Q`` is bounded, so a tiny
+    problem never burns >2x its useful compute in padding.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+LANE = 128                      # TPU lane tile; wblk must be a multiple
+WBLK_CHOICES = (128, 256, 512, 1024)
+KBLK_CHOICES = (8, 16, 32, 64, 128, 256, 512)
+VMEM_BUDGET_BYTES = 8 * 2 ** 20  # half of ~16 MiB VMEM (double buffering)
+MAX_PAD_WASTE = 2.0              # round_up(Q, wblk) may at most double work
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    backend: str                 # 'pallas' | 'xla'
+    wblk: int | None = None      # width tile (pallas only)
+    kblk: int | None = None      # filter tile (channel tile if depthwise)
+
+    def as_entry(self) -> dict:
+        return {"backend": self.backend, "wblk": self.wblk, "kblk": self.kblk}
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def vmem_footprint_bytes(*, C: int, S: int, dilation: int, wblk: int,
+                         kblk: int, dtype_bytes: int,
+                         depthwise: bool = False) -> int:
+    """VMEM working set of one grid cell of the forward kernel."""
+    F = wblk + (S - 1) * dilation
+    if depthwise:               # x tile (cblk, F), w (S, cblk), out + fp32 acc
+        cblk = kblk
+        return dtype_bytes * (cblk * F + S * cblk + cblk * wblk) + 4 * cblk * wblk
+    return (dtype_bytes * (C * F + S * kblk * C + kblk * wblk)
+            + 4 * kblk * wblk)  # fp32 accumulator
+
+
+def legal_tile_choices(*, C: int, K: int, S: int, dilation: int, Q: int,
+                       dtype_bytes: int, depthwise: bool = False,
+                       budget: int = VMEM_BUDGET_BYTES) -> list[tuple[int, int]]:
+    """All (wblk, kblk) pairs legal under the kernel contract + VMEM budget."""
+    n_filters = C if depthwise else K
+    kblks = sorted({k for k in KBLK_CHOICES if n_filters % k == 0}
+                   | {n_filters})
+    out = []
+    for wblk in WBLK_CHOICES:
+        if round_up(Q, wblk) > MAX_PAD_WASTE * Q and wblk != min(WBLK_CHOICES):
+            continue            # padding would dominate; keep only the floor
+        for kblk in kblks:
+            fp = vmem_footprint_bytes(C=C, S=S, dilation=dilation, wblk=wblk,
+                                      kblk=kblk, dtype_bytes=dtype_bytes,
+                                      depthwise=depthwise)
+            if fp <= budget:
+                out.append((wblk, kblk))
+    if not out:                 # degenerate giant shape: smallest legal tiles
+        out.append((min(WBLK_CHOICES), min(kblks)))
+    return out
+
+
+def enumerate_candidates(*, C: int, K: int, S: int, dilation: int, Q: int,
+                         dtype_bytes: int, depthwise: bool = False,
+                         budget: int = VMEM_BUDGET_BYTES) -> list[Candidate]:
+    """The full search space for one problem instance: every legal Pallas
+    tiling plus the vendor-library backend."""
+    cands = [Candidate("pallas", wblk, kblk)
+             for wblk, kblk in legal_tile_choices(
+                 C=C, K=K, S=S, dilation=dilation, Q=Q,
+                 dtype_bytes=dtype_bytes, depthwise=depthwise, budget=budget)]
+    cands.append(Candidate("xla"))
+    return cands

@@ -53,8 +53,8 @@ def test_elastic_restore_via_template_sharding(tmp_path):
     ck = Checkpointer(str(tmp_path))
     s = _state()
     ck.save(s, 1)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import compat_make_mesh
+    mesh = compat_make_mesh((1,), ("data",))
     sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     template = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=sh), s)

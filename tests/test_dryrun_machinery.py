@@ -18,9 +18,9 @@ from repro import configs
 from repro.configs.base import SHAPES, ShapeConfig, reduced
 from repro.launch.specs import applicable, batch_structs, input_specs, lower_cell
 from repro.roofline import analysis as ra
+from repro.launch.mesh import compat_make_mesh
 
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat_make_mesh((4, 2), ("data", "model"))
 out = {}
 for arch in %(archs)s:
     cfg = reduced(configs.get(arch))

@@ -58,7 +58,10 @@ class TestScanPremise:
 
         s = jax.ShapeDtypeStruct((64, 64), jnp.float32)
         c = jax.jit(f).lower(s, s).compile()
-        flops = c.cost_analysis().get("flops", 0.0)
+        cost = c.cost_analysis()
+        if isinstance(cost, list):  # older API returned [dict]
+            cost = cost[0]
+        flops = cost.get("flops", 0.0)
         one_matmul = 2 * 64 ** 3
         assert flops < 2.5 * one_matmul, (
             "XLA now multiplies while bodies by trip count — remove the "
