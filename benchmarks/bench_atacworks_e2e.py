@@ -6,15 +6,19 @@ sec/step and samples/sec for:
 
   * our BRGEMM-formulated layer ('ref' decomposition — structurally the
     Pallas kernel's computation) vs the vendor-library conv ('xla'),
-  * FP32 vs BF16 (the paper's Cooper Lake comparison, C=K 15→16).
+  * FP32 vs BF16 (the paper's Cooper Lake comparison, C=K 15→16),
+  * the fused conv epilogue (bias+relu+residual inside the kernel,
+    DESIGN.md §10) vs the pre-fusion four-ops-per-layer composition —
+    the ``fused_speedup`` column is unfused/fused step time per
+    (arch, backend).
 
 Defaults are container-scaled (batch 2, width 6000, 3 steps); ``--full``
-uses the paper's 60 000-wide segments.
+uses the paper's 60 000-wide segments; ``--smoke`` is the CI perf-rot
+guard (tiny width, 1 iter).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
+import os
 
 import jax
 import jax.numpy as jnp
@@ -26,43 +30,49 @@ from repro.models import get_model
 from repro.train.train_step import init_state, make_train_step
 
 
-def run(full: bool = False, iters: int = 2):
-    width = 60_000 if full else 3_000
+def run(full: bool = False, iters: int = 2, smoke: bool = False):
+    width = 60_000 if full else (500 if smoke else 3_000)
     batch = 8 if full else 1
     rows = []
-    for arch in ("atacworks", "atacworks-bf16"):
+    # smoke: one arch — the run is compile-dominated and exists to catch
+    # rot, not to compare precisions
+    for arch in (("atacworks",) if smoke else ("atacworks", "atacworks-bf16")):
         cfg = configs.get(arch)
         for backend in ("ref", "xla"):
-            import os
-            os.environ["REPRO_CONV_BACKEND"] = backend
-            model = get_model(cfg)
-            params = model.init_params(jax.random.key(0), cfg)
-            state = init_state(params)
-            step = jax.jit(make_train_step(cfg, accum_steps=1, total_steps=100))
-            data = jax.tree.map(jnp.asarray, make_batch(cfg, batch, width))
+            for fused in (True, False):
+                try:
+                    os.environ["REPRO_CONV_BACKEND"] = backend
+                    os.environ["REPRO_FUSED_EPILOGUE"] = "1" if fused else "0"
+                    model = get_model(cfg)
+                    params = model.init_params(jax.random.key(0), cfg)
+                    state = init_state(params)
+                    step = jax.jit(make_train_step(cfg, accum_steps=1,
+                                                   total_steps=100))
+                    data = jax.tree.map(jnp.asarray, make_batch(cfg, batch, width))
 
-            def one(state_and_batch):
-                s, b = state_and_batch
-                return step(s, b)
-
-            # time full train steps (fwd+bwd+optimizer)
-            t = time_fn(lambda s=state, b=data: step(s, b)[1]["loss"],
-                        iters=iters, warmup=1)
-            rows.append(dict(arch=arch, backend=backend, width=width,
-                             batch=batch, sec_per_step=t,
-                             samples_per_sec=batch / t))
-            os.environ.pop("REPRO_CONV_BACKEND", None)
+                    # time full train steps (fwd+bwd+optimizer)
+                    t = time_fn(lambda s=state, b=data: step(s, b)[1]["loss"],
+                                iters=iters, warmup=1)
+                    rows.append(dict(arch=arch, backend=backend, fused=fused,
+                                     width=width, batch=batch, sec_per_step=t,
+                                     samples_per_sec=batch / t))
+                finally:
+                    os.environ.pop("REPRO_CONV_BACKEND", None)
+                    os.environ.pop("REPRO_FUSED_EPILOGUE", None)
     for r in rows:
         base = next(x for x in rows if x["arch"] == r["arch"]
-                    and x["backend"] == "xla")
+                    and x["backend"] == "xla" and x["fused"] == r["fused"])
         r["speedup_vs_library"] = base["sec_per_step"] / r["sec_per_step"]
+        unfused = next(x for x in rows if x["arch"] == r["arch"]
+                       and x["backend"] == r["backend"] and not x["fused"])
+        r["fused_speedup"] = unfused["sec_per_step"] / r["sec_per_step"]
     return rows
 
 
-def main(full: bool = False):
-    rows = run(full=full)
-    cols = ["arch", "backend", "width", "batch", "sec_per_step",
-            "samples_per_sec", "speedup_vs_library"]
+def main(full: bool = False, smoke: bool = False):
+    rows = run(full=full, smoke=smoke, iters=1 if smoke else 2)
+    cols = ["arch", "backend", "fused", "width", "batch", "sec_per_step",
+            "samples_per_sec", "speedup_vs_library", "fused_speedup"]
     print(",".join(cols))
     for r in rows:
         print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
@@ -72,4 +82,4 @@ def main(full: bool = False):
 
 if __name__ == "__main__":
     import sys
-    main(full="--full" in sys.argv)
+    main(full="--full" in sys.argv, smoke="--smoke" in sys.argv)

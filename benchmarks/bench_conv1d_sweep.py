@@ -50,12 +50,17 @@ def _fwd_bwd(backend, dilation):
     return f
 
 
-def run(full: bool = False, iters: int = 3, tuned: bool = False):
+def run(full: bool = False, iters: int = 3, tuned: bool = False,
+        smoke: bool = False):
     rows = []
     qs = Q_SET_FULL if full else Q_SET
     ss = S_SET_FULL if full else S_SET
+    figsets = FIGSETS
+    if smoke:  # CI perf-rot guard: one tiny cell, one figure
+        qs, ss = qs[:1], ss[:1]
+        figsets = dict(list(FIGSETS.items())[:1])
     modes = ("ref", "xla") + (("auto",) if tuned else ())
-    for fig, (dtype_name, C, K, d) in FIGSETS.items():
+    for fig, (dtype_name, C, K, d) in figsets.items():
         dtype = jnp.dtype(dtype_name)
         for S in ss:
             key = jax.random.key(0)
@@ -97,8 +102,9 @@ def run(full: bool = False, iters: int = 3, tuned: bool = False):
     return rows
 
 
-def main(full: bool = False, tuned: bool = False):
-    rows = run(full=full, tuned=tuned)
+def main(full: bool = False, tuned: bool = False, smoke: bool = False):
+    rows = run(full=full, tuned=tuned, smoke=smoke,
+               iters=1 if smoke else 3)
     cols = ["fig", "mode", "dtype", "N", "C", "K", "S", "d", "Q", "sec",
             "gflops", "speedup_vs_library"] + (
                 ["tuned_vs_default", "tuned_src"] if tuned else [])
@@ -111,4 +117,5 @@ def main(full: bool = False, tuned: bool = False):
 
 if __name__ == "__main__":
     import sys
-    main(full="--full" in sys.argv, tuned="--tuned" in sys.argv)
+    main(full="--full" in sys.argv, tuned="--tuned" in sys.argv,
+         smoke="--smoke" in sys.argv)

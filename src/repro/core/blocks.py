@@ -5,15 +5,26 @@ DilatedConv1D layer — the paper's end-to-end training workload.
 and two 1-channel heads (denoised signal regression + peak-call logits).
 Most layers: C=K=15 (16 for bf16), S=51, dilation=8 — the paper's stated
 AtacWorks configuration.
+
+Each residual block is exactly **two fused kernel calls** (DESIGN.md §10):
+
+    r = relu(conv1(h) + b1)            # bias+relu epilogue
+    h = relu(conv2(r) + b2 + h)        # bias+residual+relu epilogue
+
+so the bias-add, the fp32 activation, and the residual-add all happen on
+the kernel's fp32 accumulator — no per-layer ``astype(float32)``
+round-trips through HBM.  ``forward_unfused`` keeps the pre-fusion
+composition (conv → bias → fp32 relu → residual as four XLA ops) as the
+benchmark baseline; ``REPRO_FUSED_EPILOGUE=0`` routes ``forward`` to it.
 """
 from __future__ import annotations
 
-import jax
+import os
+
 import jax.numpy as jnp
 
 from repro.core.conv1d import DilatedConv1D
 from repro.models import common as cm
-
 
 N_RES_BLOCKS = 11  # 1 stem + 11*2 res + 2 heads = 25 conv layers
 
@@ -35,27 +46,62 @@ def init_params(key, cfg):
     return params
 
 
-def forward(params, cfg, x, *, backend=None):
+def _fused_default() -> bool:
+    return os.environ.get("REPRO_FUSED_EPILOGUE", "1") != "0"
+
+
+def forward(params, cfg, x, *, backend=None, fused=None):
     """x: (B, W) noisy coverage track -> (signal (B, W), peak_logits (B, W))."""
+    if fused is None:
+        fused = _fused_default()
+    if not fused:
+        return forward_unfused(params, cfg, x, backend=backend)
     d = cfg.conv_dilation
     h = x[:, None, :]  # (B, 1, W)
-    h = jax.nn.relu(DilatedConv1D.apply(params["stem"], h, dilation=d,
-                                        backend=backend).astype(jnp.float32)).astype(h.dtype)
+    h = DilatedConv1D.apply(params["stem"], h, dilation=d, backend=backend,
+                            activation="relu")
     for blk in params["res"]:
-        r = jax.nn.relu(DilatedConv1D.apply(blk["conv1"], h, dilation=d,
-                                            backend=backend).astype(jnp.float32)).astype(h.dtype)
-        r = DilatedConv1D.apply(blk["conv2"], r, dilation=d, backend=backend)
-        h = jax.nn.relu((h + r).astype(jnp.float32)).astype(h.dtype)
+        r = DilatedConv1D.apply(blk["conv1"], h, dilation=d, backend=backend,
+                                activation="relu")
+        h = DilatedConv1D.apply(blk["conv2"], r, dilation=d, backend=backend,
+                                activation="relu", residual=h)
     signal = DilatedConv1D.apply(params["head_signal"], h, dilation=d,
-                                 backend=backend)[:, 0, :]
+                                 backend=backend, activation="relu",
+                                 out_dtype=jnp.float32)[:, 0, :]
     peak = DilatedConv1D.apply(params["head_peak"], h, dilation=d,
-                               backend=backend)[:, 0, :]
+                               backend=backend,
+                               out_dtype=jnp.float32)[:, 0, :]
+    return signal, peak
+
+
+def forward_unfused(params, cfg, x, *, backend=None):
+    """Pre-fusion baseline: conv, bias-add, fp32 relu round-trip, and
+    residual-add as four separate XLA ops per layer.  Kept only as the
+    fused-vs-unfused comparison arm of ``bench_atacworks_e2e`` — the model
+    itself always trains through ``forward``."""
+    import jax
+
+    def conv_bias(p, h):
+        y = DilatedConv1D.apply({"w": p["w"]}, h, dilation=cfg.conv_dilation,
+                                backend=backend)
+        return y + p["b"][None, :, None].astype(y.dtype)
+
+    h = x[:, None, :]  # (B, 1, W)
+    h = jax.nn.relu(conv_bias(params["stem"], h).astype(jnp.float32)).astype(h.dtype)
+    for blk in params["res"]:
+        r = jax.nn.relu(conv_bias(blk["conv1"], h).astype(jnp.float32)).astype(h.dtype)
+        r = conv_bias(blk["conv2"], r)
+        h = jax.nn.relu((h + r).astype(jnp.float32)).astype(h.dtype)
+    signal = conv_bias(params["head_signal"], h)[:, 0, :]
+    peak = conv_bias(params["head_peak"], h)[:, 0, :]
     return jax.nn.relu(signal.astype(jnp.float32)), peak.astype(jnp.float32)
 
 
-def loss_fn(params, cfg, batch, *, backend=None, peak_weight: float = 1.0):
+def loss_fn(params, cfg, batch, *, backend=None, peak_weight: float = 1.0,
+            fused=None):
     """AtacWorks loss: MSE(denoised signal) + BCE(peak calls)."""
-    signal, peak_logits = forward(params, cfg, batch["noisy"], backend=backend)
+    signal, peak_logits = forward(params, cfg, batch["noisy"], backend=backend,
+                                  fused=fused)
     mse = jnp.mean((signal - batch["clean"].astype(jnp.float32)) ** 2)
     labels = batch["peaks"].astype(jnp.float32)
     bce = jnp.mean(

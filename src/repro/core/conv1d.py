@@ -1,10 +1,14 @@
 """DilatedConv1D — the paper's contribution as a composable JAX layer.
 
 A thin, framework-grade wrapper over ``repro.kernels.ops``: parameter
-init (paper's (S, K, C) forward layout), bias handling (the paper defers
-bias to the framework; we do it here in the layer, outside the kernels,
-exactly as they do), dtype policy, and backend selection
-(pallas | xla | ref).
+init (paper's (S, K, C) forward layout), dtype policy, and backend
+selection (pallas | xla | ref | auto).
+
+Bias is part of the kernel's **fused epilogue** (DESIGN.md §10), not a
+separate layer op: ``apply`` hands ``params['b']`` to ``kops.conv1d``
+together with the optional ``activation``/``residual`` so the whole
+``act(conv + bias + residual)`` evaluates on the kernel's fp32
+accumulator tile.
 """
 from __future__ import annotations
 
@@ -32,15 +36,22 @@ class DilatedConv1D:
     @staticmethod
     def apply(params, x: jax.Array, *, dilation: int = 1,
               padding: kops.Padding = "SAME", backend: str | None = None,
-              wblk: int | None = None, kblk: int | None = None) -> jax.Array:
-        """x: (N, C_in, W) -> (N, C_out, Q).
+              wblk: int | None = None, kblk: int | None = None,
+              activation: str | None = None,
+              residual: jax.Array | None = None,
+              out_dtype=None) -> jax.Array:
+        """x: (N, C_in, W) -> (N, C_out, Q), computing
+        ``act(conv(x) + bias + residual)`` in one fused kernel call.
 
-        ``backend='auto'`` (or ``REPRO_CONV_BACKEND=auto``) lets the tuning
-        subsystem pick the backend and wblk/kblk tiles for this shape from
-        its persistent cache; explicit wblk/kblk args override it.
+        ``activation`` is one of relu/gelu/silu (None = linear);
+        ``residual`` must match the output shape; ``out_dtype`` overrides
+        the output dtype without a separate cast.  ``backend='auto'`` (or
+        ``REPRO_CONV_BACKEND=auto``) lets the tuning subsystem pick the
+        backend and wblk/kblk tiles for this (shape, epilogue) instance
+        from its persistent cache; explicit wblk/kblk args override it.
         """
-        y = kops.conv1d(x, params["w"], dilation=dilation, padding=padding,
-                        backend=backend, wblk=wblk, kblk=kblk)
-        if "b" in params:
-            y = y + params["b"][None, :, None].astype(y.dtype)
-        return y
+        return kops.conv1d(x, params["w"], bias=params.get("b"),
+                           activation=activation, residual=residual,
+                           dilation=dilation, padding=padding,
+                           backend=backend, wblk=wblk, kblk=kblk,
+                           out_dtype=out_dtype)

@@ -21,9 +21,24 @@ Three kernels, mirroring the paper's Algorithms 2-4:
 All kernels accept fp32 or bf16 inputs and accumulate in fp32
 (``preferred_element_type``), matching the AVX-512-BF16 contract.
 
+Every forward kernel supports a **fused epilogue** on the fp32 accumulator
+tile, applied before the output store (DESIGN.md §10):
+
+    y = act(conv + bias + residual)
+
+with ``bias`` broadcast along width, ``residual`` an output-shaped tensor
+staged tile-by-tile, and ``act`` one of ``repro.kernels.epilogue``'s
+activations.  ``save_preact=True`` additionally stores the fp32
+pre-activation ``u = conv + bias + residual`` as a second output — the VJP
+(ops.py) needs it to evaluate ``act'(u)`` for non-ReLU-trivial activations.
+The bwd-weight kernels optionally emit ``dbias`` (the reduction of the
+cotangent over batch and width) as a second output, fused into the same
+sequential-grid accumulation as the weight gradient.
+
 Shape contract (callers — see ops.py — arrange the padding):
   x    : (N, C, Wp)   with Wp = Qp + (S-1)*d, Qp % WBLK == 0
   w    : (S, K, C)    K % kblk == 0
+  bias : (K,)         residual: (N, K, Qp)
   out  : (N, K, Qp)
 """
 from __future__ import annotations
@@ -34,6 +49,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .epilogue import ACTIVATIONS, canon
 
 try:  # TPU compiler params are optional (absent / ignored in interpret mode)
     from jax.experimental.pallas import tpu as pltpu
@@ -77,33 +94,69 @@ def _overlap_spec(block_shape, index_map):
 # ---------------------------------------------------------------------------
 
 
-def _fwd_kernel(x_ref, w_ref, o_ref, *, S: int, dilation: int, wblk: int):
+def _epilogue_on_acc(acc, b_ref, r_ref, activation: str):
+    """Bias + residual + activation on the fp32 accumulator tile.
+
+    Returns (pre-activation u, activated y), both fp32.  b_ref is a
+    (FB, 1) tile broadcast along width; r_ref[0] an output-shaped tile.
+    """
+    if b_ref is not None:
+        acc = acc + b_ref[...].astype(jnp.float32)
+    if r_ref is not None:
+        acc = acc + r_ref[0].astype(jnp.float32)
+    return acc, ACTIVATIONS[activation](acc)
+
+
+def _fwd_kernel(*refs, S: int, dilation: int, wblk: int, activation: str,
+                has_bias: bool, has_residual: bool, save_preact: bool):
     """One (n, k-tile, q-tile) grid cell.
 
     x_ref : (1, C, F)     dilated footprint for this width tile (VMEM)
     w_ref : (S, KB, C)    all taps of this filter tile (VMEM)
+    b_ref : (KB, 1)       bias tile            (iff has_bias)
+    r_ref : (1, KB, WBLK) residual tile        (iff has_residual)
     o_ref : (1, KB, WBLK)
+    u_ref : (1, KB, WBLK) fp32 pre-activation  (iff save_preact)
     """
+    it = iter(refs)
+    x_ref, w_ref = next(it), next(it)
+    b_ref = next(it) if has_bias else None
+    r_ref = next(it) if has_residual else None
+    o_ref = next(it)
+    u_ref = next(it) if save_preact else None
+
     x = x_ref[0]  # (C, F)
     acc = jnp.zeros((w_ref.shape[1], wblk), jnp.float32)
     for s in range(S):  # the BRGEMM batch-reduce dimension (unrolled taps)
         a = w_ref[s]  # (KB, C)
         b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)  # (C, WBLK)
         acc += jnp.dot(a, b, preferred_element_type=jnp.float32)
-    o_ref[0] = acc.astype(o_ref.dtype)
+    u, y = _epilogue_on_acc(acc, b_ref, r_ref, activation)
+    if save_preact:
+        u_ref[0] = u
+    o_ref[0] = y.astype(o_ref.dtype)
 
 
 def conv1d_fwd(
     x: jax.Array,
     w: jax.Array,
     *,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    activation: str | None = None,
+    save_preact: bool = False,
     dilation: int = 1,
     wblk: int = 256,
     kblk: int | None = None,
     out_dtype=None,
     interpret: bool = False,
-) -> jax.Array:
-    """BRGEMM forward pass.  x: (N, C, Qp + (S-1)*d), w: (S, K, C) -> (N, K, Qp)."""
+):
+    """BRGEMM forward pass.  x: (N, C, Qp + (S-1)*d), w: (S, K, C) -> (N, K, Qp).
+
+    Fused epilogue: ``out = act(conv + bias + residual)`` on the fp32
+    accumulator (bias: (K,), residual: (N, K, Qp)).  With ``save_preact``
+    returns ``(out, preact)`` where preact is the fp32 ``conv+bias+residual``.
+    """
     N, C, Wp = x.shape
     S, K, Cw = w.shape
     assert C == Cw, (C, Cw)
@@ -114,20 +167,43 @@ def conv1d_fwd(
     assert K % kblk == 0, (K, kblk)
     grid = (N, K // kblk, Qp // wblk)
     out_dtype = out_dtype or x.dtype
+    activation = canon(activation)
 
-    return pl.pallas_call(
-        functools.partial(_fwd_kernel, S=S, dilation=dilation, wblk=wblk),
+    in_specs = [
+        # overlapping dilated footprint along width: element-indexed
+        _overlap_spec((1, C, F), lambda n, kt, qt: (n, 0, qt * wblk)),
+        pl.BlockSpec((S, kblk, C), lambda n, kt, qt: (0, kt, 0)),
+    ]
+    inputs = [x, w]
+    if bias is not None:
+        assert bias.shape == (K,), (bias.shape, K)
+        in_specs.append(pl.BlockSpec((kblk, 1), lambda n, kt, qt: (kt, 0)))
+        inputs.append(bias.reshape(K, 1))
+    if residual is not None:
+        assert residual.shape == (N, K, Qp), (residual.shape, (N, K, Qp))
+        in_specs.append(pl.BlockSpec((1, kblk, wblk), lambda n, kt, qt: (n, kt, qt)))
+        inputs.append(residual)
+
+    out_spec = pl.BlockSpec((1, kblk, wblk), lambda n, kt, qt: (n, kt, qt))
+    out_specs = [out_spec]
+    out_shape = [jax.ShapeDtypeStruct((N, K, Qp), out_dtype)]
+    if save_preact:
+        out_specs.append(out_spec)
+        out_shape.append(jax.ShapeDtypeStruct((N, K, Qp), jnp.float32))
+
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, S=S, dilation=dilation, wblk=wblk,
+                          activation=activation, has_bias=bias is not None,
+                          has_residual=residual is not None,
+                          save_preact=save_preact),
         grid=grid,
-        in_specs=[
-            # overlapping dilated footprint along width: element-indexed
-            _overlap_spec((1, C, F), lambda n, kt, qt: (n, 0, qt * wblk)),
-            pl.BlockSpec((S, kblk, C), lambda n, kt, qt: (0, kt, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, kblk, wblk), lambda n, kt, qt: (n, kt, qt)),
-        out_shape=jax.ShapeDtypeStruct((N, K, Qp), out_dtype),
+        in_specs=in_specs,
+        out_specs=out_specs if save_preact else out_spec,
+        out_shape=out_shape if save_preact else out_shape[0],
         compiler_params=_compiler_params(("parallel", "parallel", "parallel"), interpret),
         interpret=interpret,
-    )(x, w)
+    )(*inputs)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -135,24 +211,32 @@ def conv1d_fwd(
 # ---------------------------------------------------------------------------
 
 
-def _bwd_w_kernel(x_ref, g_ref, o_ref, *, S: int, dilation: int, wblk: int):
+def _bwd_w_kernel(x_ref, g_ref, o_ref, *dbias_ref, S: int, dilation: int,
+                  wblk: int, with_dbias: bool):
     """Grid (N, Q_tiles), both sequential ("arbitrary"): the (S, K, C) output
     block is revisited every step and accumulated into — the paper's shared
     weight-gradient buffer across width blocks and batch threads.
 
-    x_ref : (1, C, F), g_ref : (1, K, WBLK), o_ref : (S, K, C) fp32
+    x_ref : (1, C, F), g_ref : (1, K, WBLK), o_ref : (S, K, C) fp32,
+    dbias_ref : (K, 1) fp32 (iff with_dbias) — the fused bias-gradient
+    reduction sum_{n,q} g, sharing the cotangent tile already in VMEM.
     """
     first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0)
 
     @pl.when(first)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
+        if with_dbias:
+            dbias_ref[0][...] = jnp.zeros_like(dbias_ref[0])
 
     x = x_ref[0]  # (C, F)
     g = g_ref[0]  # (K, WBLK)
     for s in range(S):  # S small GEMMs per width block (Alg. 4 line 4)
         b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)  # (C, WBLK)
         o_ref[s] += jnp.dot(g, b.T, preferred_element_type=jnp.float32)
+    if with_dbias:
+        dbias_ref[0][...] += jnp.sum(g.astype(jnp.float32), axis=-1,
+                                     keepdims=True)
 
 
 def conv1d_bwd_weight(
@@ -162,27 +246,43 @@ def conv1d_bwd_weight(
     S: int,
     dilation: int = 1,
     wblk: int = 256,
+    with_dbias: bool = False,
     interpret: bool = False,
-) -> jax.Array:
-    """BRGEMM weight gradient.  x: (N, C, Qp+(S-1)d), gout: (N, K, Qp) -> (S, K, C) fp32."""
+):
+    """BRGEMM weight gradient.  x: (N, C, Qp+(S-1)d), gout: (N, K, Qp) -> (S, K, C) fp32.
+
+    ``with_dbias`` fuses the bias gradient (the (K,) reduction of gout over
+    batch and width) into the same pass and returns ``(dw, dbias)``.
+    """
     N, C, Wp = x.shape
     Ng, K, Qp = gout.shape
     assert N == Ng and Qp % wblk == 0 and Wp == Qp + (S - 1) * dilation
     F = wblk + (S - 1) * dilation
     grid = (N, Qp // wblk)
 
-    return pl.pallas_call(
-        functools.partial(_bwd_w_kernel, S=S, dilation=dilation, wblk=wblk),
+    out_specs = pl.BlockSpec((S, K, C), lambda n, qt: (0, 0, 0))
+    out_shape = jax.ShapeDtypeStruct((S, K, C), jnp.float32)
+    if with_dbias:
+        out_specs = [out_specs, pl.BlockSpec((K, 1), lambda n, qt: (0, 0))]
+        out_shape = [out_shape, jax.ShapeDtypeStruct((K, 1), jnp.float32)]
+
+    out = pl.pallas_call(
+        functools.partial(_bwd_w_kernel, S=S, dilation=dilation, wblk=wblk,
+                          with_dbias=with_dbias),
         grid=grid,
         in_specs=[
             _overlap_spec((1, C, F), lambda n, qt: (n, 0, qt * wblk)),
             pl.BlockSpec((1, K, wblk), lambda n, qt: (n, 0, qt)),
         ],
-        out_specs=pl.BlockSpec((S, K, C), lambda n, qt: (0, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((S, K, C), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         compiler_params=_compiler_params(("arbitrary", "arbitrary"), interpret),
         interpret=interpret,
     )(x, gout)
+    if with_dbias:
+        dw, db = out
+        return dw, db.reshape(K)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -190,27 +290,47 @@ def conv1d_bwd_weight(
 # ---------------------------------------------------------------------------
 
 
-def _dw_fwd_kernel(x_ref, w_ref, o_ref, *, S: int, dilation: int, wblk: int):
-    """x_ref: (1, CB, F), w_ref: (S, CB), o_ref: (1, CB, WBLK).  VPU fma chain."""
+def _dw_fwd_kernel(*refs, S: int, dilation: int, wblk: int, activation: str,
+                   has_bias: bool, has_residual: bool, save_preact: bool):
+    """x_ref: (1, CB, F), w_ref: (S, CB), [b_ref: (CB, 1)],
+    [r_ref: (1, CB, WBLK)], o_ref: (1, CB, WBLK), [u_ref].  VPU fma chain."""
+    it = iter(refs)
+    x_ref, w_ref = next(it), next(it)
+    b_ref = next(it) if has_bias else None
+    r_ref = next(it) if has_residual else None
+    o_ref = next(it)
+    u_ref = next(it) if save_preact else None
+
     x = x_ref[0]
     acc = jnp.zeros((x_ref.shape[1], wblk), jnp.float32)
     for s in range(S):
         b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)
         acc += w_ref[s][:, None].astype(jnp.float32) * b.astype(jnp.float32)
-    o_ref[0] = acc.astype(o_ref.dtype)
+    u, y = _epilogue_on_acc(acc, b_ref, r_ref, activation)
+    if save_preact:
+        u_ref[0] = u
+    o_ref[0] = y.astype(o_ref.dtype)
 
 
 def depthwise_conv1d_fwd(
     x: jax.Array,
     w: jax.Array,
     *,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    activation: str | None = None,
+    save_preact: bool = False,
     dilation: int = 1,
     wblk: int = 256,
     cblk: int | None = None,
     out_dtype=None,
     interpret: bool = False,
-) -> jax.Array:
-    """Depthwise forward.  x: (N, C, Qp+(S-1)d), w: (S, C) -> (N, C, Qp)."""
+):
+    """Depthwise forward.  x: (N, C, Qp+(S-1)d), w: (S, C) -> (N, C, Qp).
+
+    Same fused epilogue contract as ``conv1d_fwd`` with bias: (C,) and
+    residual: (N, C, Qp); ``save_preact`` returns ``(out, preact)``.
+    """
     N, C, Wp = x.shape
     S, Cw = w.shape
     assert C == Cw
@@ -221,33 +341,60 @@ def depthwise_conv1d_fwd(
     assert C % cblk == 0, (C, cblk)
     grid = (N, C // cblk, Qp // wblk)
     out_dtype = out_dtype or x.dtype
+    activation = canon(activation)
+
+    in_specs = [
+        _overlap_spec((1, cblk, F), lambda n, ct, qt: (n, ct, qt * wblk)),
+        pl.BlockSpec((S, cblk), lambda n, ct, qt: (0, ct)),
+    ]
+    inputs = [x, w]
+    if bias is not None:
+        assert bias.shape == (C,), (bias.shape, C)
+        in_specs.append(pl.BlockSpec((cblk, 1), lambda n, ct, qt: (ct, 0)))
+        inputs.append(bias.reshape(C, 1))
+    if residual is not None:
+        assert residual.shape == (N, C, Qp), (residual.shape, (N, C, Qp))
+        in_specs.append(pl.BlockSpec((1, cblk, wblk), lambda n, ct, qt: (n, ct, qt)))
+        inputs.append(residual)
+
+    out_spec = pl.BlockSpec((1, cblk, wblk), lambda n, ct, qt: (n, ct, qt))
+    out_specs = [out_spec]
+    out_shape = [jax.ShapeDtypeStruct((N, C, Qp), out_dtype)]
+    if save_preact:
+        out_specs.append(out_spec)
+        out_shape.append(jax.ShapeDtypeStruct((N, C, Qp), jnp.float32))
 
     return pl.pallas_call(
-        functools.partial(_dw_fwd_kernel, S=S, dilation=dilation, wblk=wblk),
+        functools.partial(_dw_fwd_kernel, S=S, dilation=dilation, wblk=wblk,
+                          activation=activation, has_bias=bias is not None,
+                          has_residual=residual is not None,
+                          save_preact=save_preact),
         grid=grid,
-        in_specs=[
-            _overlap_spec((1, cblk, F), lambda n, ct, qt: (n, ct, qt * wblk)),
-            pl.BlockSpec((S, cblk), lambda n, ct, qt: (0, ct)),
-        ],
-        out_specs=pl.BlockSpec((1, cblk, wblk), lambda n, ct, qt: (n, ct, qt)),
-        out_shape=jax.ShapeDtypeStruct((N, C, Qp), out_dtype),
+        in_specs=in_specs,
+        out_specs=out_specs if save_preact else out_spec,
+        out_shape=out_shape if save_preact else out_shape[0],
         compiler_params=_compiler_params(("parallel", "parallel", "parallel"), interpret),
         interpret=interpret,
-    )(x, w)
+    )(*inputs)
 
 
-def _dw_bwd_w_kernel(x_ref, g_ref, o_ref, *, S: int, dilation: int, wblk: int):
-    first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0) & (pl.program_id(2) == 0)
+def _dw_bwd_w_kernel(x_ref, g_ref, o_ref, *dbias_ref, S: int, dilation: int,
+                     wblk: int, with_dbias: bool):
+    first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0)
 
     @pl.when(first)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
+        if with_dbias:
+            dbias_ref[0][...] = jnp.zeros_like(dbias_ref[0])
 
     x = x_ref[0]
     g = g_ref[0].astype(jnp.float32)  # (CB, WBLK)
     for s in range(S):
         b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)
         o_ref[s] += jnp.sum(g * b.astype(jnp.float32), axis=-1)
+    if with_dbias:
+        dbias_ref[0][...] += jnp.sum(g, axis=-1, keepdims=True)
 
 
 def depthwise_conv1d_bwd_weight(
@@ -258,9 +405,14 @@ def depthwise_conv1d_bwd_weight(
     dilation: int = 1,
     wblk: int = 256,
     cblk: int | None = None,
+    with_dbias: bool = False,
     interpret: bool = False,
-) -> jax.Array:
-    """Depthwise weight gradient -> (S, C) fp32."""
+):
+    """Depthwise weight gradient -> (S, C) fp32.
+
+    ``with_dbias`` fuses the (C,) bias-gradient reduction into the same
+    sequential-grid pass and returns ``(dw, dbias)``.
+    """
     N, C, Wp = x.shape
     Ng, Cg, Qp = gout.shape
     assert N == Ng and C == Cg and Qp % wblk == 0
@@ -269,15 +421,26 @@ def depthwise_conv1d_bwd_weight(
     assert C % cblk == 0
     grid = (N, Qp // wblk, C // cblk)
 
-    return pl.pallas_call(
-        functools.partial(_dw_bwd_w_kernel, S=S, dilation=dilation, wblk=wblk),
+    out_specs = pl.BlockSpec((S, cblk), lambda n, qt, ct: (0, ct))
+    out_shape = jax.ShapeDtypeStruct((S, C), jnp.float32)
+    if with_dbias:
+        out_specs = [out_specs, pl.BlockSpec((cblk, 1), lambda n, qt, ct: (ct, 0))]
+        out_shape = [out_shape, jax.ShapeDtypeStruct((C, 1), jnp.float32)]
+
+    out = pl.pallas_call(
+        functools.partial(_dw_bwd_w_kernel, S=S, dilation=dilation, wblk=wblk,
+                          with_dbias=with_dbias),
         grid=grid,
         in_specs=[
             _overlap_spec((1, cblk, F), lambda n, qt, ct: (n, ct, qt * wblk)),
             pl.BlockSpec((1, cblk, wblk), lambda n, qt, ct: (n, ct, qt)),
         ],
-        out_specs=pl.BlockSpec((S, cblk), lambda n, qt, ct: (0, ct)),
-        out_shape=jax.ShapeDtypeStruct((S, C), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         compiler_params=_compiler_params(("arbitrary", "arbitrary", "arbitrary"), interpret),
         interpret=interpret,
     )(x, gout)
+    if with_dbias:
+        dw, db = out
+        return dw, db.reshape(C)
+    return out

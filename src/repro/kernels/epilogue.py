@@ -1,0 +1,86 @@
+"""Epilogue vocabulary shared by the Pallas kernels, the oracle, the ops
+layer, and the tuner.
+
+The paper's layer (like Georganas et al.'s 2D BRGEMM convolutions) gets its
+efficiency from applying the layer's pointwise work — bias-add, activation,
+residual-add — on the hot fp32 accumulator tile *inside* the kernel epilogue
+instead of as separate framework ops.  This module is the single source of
+truth for
+
+  * the supported activations (``ACTIVATIONS``; applied on fp32 values, the
+    same jnp functions inside the Pallas kernel and in the oracle, so the
+    two paths are bit-comparable up to accumulation order);
+  * the epilogue evaluation order: ``y = act(conv + bias + residual)``;
+  * the canonical *signature string* (``signature`` / ``parse``) the tuning
+    subsystem keys its cache on, so fused and unfused instances of the same
+    conv shape tune independently.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Applied on the fp32 accumulator.  jax.nn.gelu keeps its default tanh
+# approximation — kernels and oracle must call the *same* function.
+ACTIVATIONS = {
+    "none": lambda u: u,
+    "relu": lambda u: jnp.maximum(u, 0.0),
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+}
+
+
+def canon(activation: str | None) -> str:
+    """Normalise an activation spec to an ``ACTIVATIONS`` key."""
+    act = "none" if activation is None else str(activation).lower()
+    if act not in ACTIVATIONS:
+        raise ValueError(
+            f"unknown epilogue activation {activation!r}; "
+            f"expected one of {sorted(ACTIVATIONS)}")
+    return act
+
+
+def signature(has_bias: bool, activation: str | None,
+              has_residual: bool) -> str:
+    """Canonical epilogue signature, e.g. ``'b+relu+r'``.
+
+    The unfused conv is ``'none'`` — by construction this is also the tuner
+    cache's *legacy* key form (no epilogue suffix), so caches written before
+    epilogues existed keep resolving unfused shapes (DESIGN.md §10).
+    """
+    act = canon(activation)
+    parts = ([*("b",) * has_bias]
+             + ([act] if act != "none" else [])
+             + [*("r",) * has_residual])
+    return "+".join(parts) if parts else "none"
+
+
+def parse(sig: str) -> tuple[bool, str, bool]:
+    """Inverse of ``signature``: -> (has_bias, activation, has_residual)."""
+    if sig in ("", "none", None):
+        return False, "none", False
+    parts = sig.split("+")
+    has_bias = "b" in parts
+    has_residual = "r" in parts
+    acts = [p for p in parts if p not in ("b", "r")]
+    if len(acts) > 1 or any(a not in ACTIVATIONS for a in acts):
+        raise ValueError(f"bad epilogue signature {sig!r}")
+    return has_bias, acts[0] if acts else "none", has_residual
+
+
+def apply_ref(u: jax.Array, *, bias: jax.Array | None = None,
+              residual: jax.Array | None = None,
+              activation: str | None = None) -> jax.Array:
+    """Oracle epilogue: fp32 math in the kernel's order, fp32 result.
+
+    u: (N, F, Q) pre-epilogue conv output (F = K dense, C depthwise);
+    bias: (F,); residual: (N, F, Q).  The caller casts to the output dtype —
+    keeping this fp32 end-to-end mirrors the kernel applying the epilogue on
+    the accumulator *before* the output store.
+    """
+    u = u.astype(jnp.float32)
+    if bias is not None:
+        u = u + bias.astype(jnp.float32)[None, :, None]
+    if residual is not None:
+        u = u + residual.astype(jnp.float32)
+    return ACTIVATIONS[canon(activation)](u)

@@ -2,14 +2,24 @@
 
 ``conv1d`` / ``depthwise_conv1d`` are the layer-facing entry points:
   * padding modes VALID (paper's pre-padded contract), SAME, CAUSAL
+  * a **fused epilogue** ``y = act(conv + bias + residual)`` applied on the
+    kernel's fp32 accumulator tile (DESIGN.md §10) — bias-add, activation
+    (relu/gelu/silu), and residual-add never round-trip through HBM as
+    separate ops
   * backend dispatch: 'pallas' (TPU target / interpret on CPU),
     'xla' (lax.conv_general_dilated — the vendor-library baseline and the
-    fast CPU path), 'ref' (readable oracle), 'auto' (per-shape choice of
-    backend AND tile sizes via the tuning subsystem, repro.tune)
+    fast CPU path; the epilogue is applied as fp32 jnp ops, same math),
+    'ref' (readable oracle), 'auto' (per-shape choice of backend AND tile
+    sizes via the tuning subsystem, repro.tune — fused and unfused
+    instances of a shape tune independently, keyed by the epilogue
+    signature)
   * a ``jax.custom_vjp`` that binds the paper's Alg. 3 (bwd-data via the fwd
     BRGEMM kernel on flipped+transposed weights) and Alg. 4 (bwd-weight
-    kernel) into autodiff, so ``jax.grad`` of a model using this layer
-    executes exactly the paper's three kernels.
+    kernel) into autodiff, extended for the epilogue: the activation
+    gradient masks the cotangent (against the fp32 pre-activation saved by
+    the forward when the activation is non-trivial), ``dbias`` is a fused
+    reduction inside the bwd-weight kernel, and ``dresidual`` is the masked
+    cotangent passed through.
 
 Blocking bookkeeping lives here: width is padded up to a multiple of the
 width tile WBLK and sliced back, mirroring the paper's "block length 64"
@@ -19,17 +29,24 @@ from __future__ import annotations
 
 import functools
 import os
-from typing import Literal
+from typing import Literal, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from . import conv1d_brgemm as _k
+from . import epilogue as _ep
 from . import ref as _ref
 
 Padding = Literal["VALID", "SAME", "CAUSAL"]
 
 _INTERPRET = jax.default_backend() != "tpu"
+
+# Per-channel-row VMEM footprint cap for the static tile ladder: one width
+# tile stages F = WBLK + (S-1)*d elements per channel row (16 KiB fp32 at
+# 4096).  ``repro.tune.space`` imports this so the tuner's legality filter
+# and the untuned ladder agree on what "fits".
+MAX_FOOTPRINT_ELEMS = 4096
 
 
 def default_backend() -> str:
@@ -41,20 +58,24 @@ def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
-def _resolve_auto(x, *, C, K, S, dilation, padding, wblk, kblk, depthwise):
+def _resolve_auto(x, *, C, K, S, dilation, padding, wblk, kblk, depthwise,
+                  epilogue="none"):
     """backend='auto': ask the tuner (repro.tune) for backend + tile sizes.
 
     Runs at trace time on static shape info only.  Cache hit -> cached
     winner; miss -> measured search iff REPRO_TUNE=1, else the pick_wblk
     heuristic on the platform-default backend.  Explicit wblk/kblk args
-    still win over the tuner's choice.
+    still win over the tuner's choice.  ``epilogue`` is the fusion
+    signature (epilogue.signature) — part of the cache key, so a fused
+    conv never reuses the unfused instance's tiles.
     """
     from repro import tune  # late import: tune.measure calls back into ops
 
     N = x.shape[0]
     Q = x.shape[-1] - (S - 1) * dilation
     cfg = tune.get_config(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
-                          dtype=x.dtype, padding=padding, depthwise=depthwise)
+                          dtype=x.dtype, padding=padding, depthwise=depthwise,
+                          epilogue=epilogue)
     return cfg.backend, wblk or cfg.wblk, kblk or cfg.kblk
 
 
@@ -76,13 +97,41 @@ def _round_up(x: int, m: int) -> int:
 def pick_wblk(Q: int, S: int, dilation: int) -> int:
     """Width-tile choice (the paper's 'block length' adapted to TPU lanes).
 
-    Keep the footprint F = WBLK + (S-1)d plus the output tile within a small
-    VMEM budget while making WBLK a multiple of the 128-lane tile.
+    Largest multiple of the 128-lane tile that (a) the problem width fills
+    and (b) keeps the dilated footprint ``F = WBLK + (S-1)*d`` under the
+    per-row VMEM cap shared with ``tune.space`` (MAX_FOOTPRINT_ELEMS) —
+    huge spans fall through to the 128 floor rather than staging
+    multi-MiB windows per channel row.
     """
+    span = (S - 1) * dilation
     for cand in (512, 256, 128):
-        if Q >= cand:
+        if Q >= cand and cand + span <= MAX_FOOTPRINT_ELEMS:
             return cand
     return 128
+
+
+def _dtype_name(a) -> str | None:
+    return None if a is None else jnp.dtype(a.dtype).name
+
+
+class _FusedSpec(NamedTuple):
+    """Static (hashable) configuration of one fused conv instance — the
+    nondiff argument of the custom_vjp s.  ``blk2`` is kblk for the dense
+    path, cblk for the depthwise path.  Dtypes travel as names so the spec
+    stays hashable; bias_dtype/residual_dtype double as has-bias/has-residual
+    flags for the bwd rule."""
+    dilation: int
+    wblk: int
+    blk2: int | None
+    interpret: bool
+    activation: str
+    bias_dtype: str | None
+    residual_dtype: str | None
+    out_dtype: str | None
+
+    @property
+    def out_jnp_dtype(self):
+        return jnp.dtype(self.out_dtype) if self.out_dtype else None
 
 
 # ---------------------------------------------------------------------------
@@ -90,9 +139,10 @@ def pick_wblk(Q: int, S: int, dilation: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _pallas_fwd_padded(x, w, dilation, wblk, kblk, interpret):
-    """x: (N, C, W) already logically padded; returns (N, K, Q) via the
-    Pallas kernel, handling width round-up to the tile size."""
+def _plain_fwd_padded(x, w, dilation, wblk, kblk, interpret):
+    """Epilogue-free forward: x (N, C, W) already logically padded; returns
+    (N, K, Q) via the Pallas kernel, handling width round-up to the tile
+    size.  Also the bwd-data engine (Alg. 3)."""
     N, C, W = x.shape
     S, K, _ = w.shape
     span = (S - 1) * dilation
@@ -105,36 +155,111 @@ def _pallas_fwd_padded(x, w, dilation, wblk, kblk, interpret):
     return out[:, :, :Q]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _conv1d_pallas(x, w, dilation, wblk, kblk, interpret):
-    return _pallas_fwd_padded(x, w, dilation, wblk, kblk, interpret)
+def _fused_fwd_padded(spec: _FusedSpec, x, w, bias, residual,
+                      save_preact: bool = False):
+    """Fused forward with width round-up: pads x (and the residual) to the
+    tile multiple, runs the kernel, slices back.  With ``save_preact``
+    returns (y, fp32 preact) for the VJP's activation gradient."""
+    N, C, W = x.shape
+    S, K, _ = w.shape
+    span = (S - 1) * spec.dilation
+    Q = W - span
+    Qp = _round_up(Q, spec.wblk)
+    if Qp + span > W:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
+    if residual is not None and Qp > Q:
+        residual = jnp.pad(residual, ((0, 0), (0, 0), (0, Qp - Q)))
+    out = _k.conv1d_fwd(
+        x, w, bias=bias, residual=residual, activation=spec.activation,
+        save_preact=save_preact, dilation=spec.dilation, wblk=spec.wblk,
+        kblk=spec.blk2, out_dtype=spec.out_jnp_dtype, interpret=spec.interpret)
+    if save_preact:
+        y, u = out
+        return y[:, :, :Q], u[:, :, :Q]
+    return out[:, :, :Q]
 
 
-def _conv1d_pallas_fwd(x, w, dilation, wblk, kblk, interpret):
-    return _pallas_fwd_padded(x, w, dilation, wblk, kblk, interpret), (x, w)
+def _needs_preact(activation: str) -> bool:
+    """ReLU's gradient mask is derivable from the (already materialised)
+    output — only curved activations (gelu/silu) need the fp32
+    pre-activation stored as a second kernel output."""
+    return activation not in ("none", "relu")
 
 
-def _conv1d_pallas_bwd(dilation, wblk, kblk, interpret, res, gout):
-    x, w = res
+def _vjp_fwd_saved(spec: _FusedSpec, y, u):
+    """What the fwd rule saves for the activation gradient: nothing for a
+    linear epilogue, the output itself for relu, the fp32 preact otherwise."""
+    if spec.activation == "none":
+        return None
+    return y if spec.activation == "relu" else u
+
+
+def _epilogue_cotangent(spec: _FusedSpec, saved, gout):
+    """du = act'(·) * gout, elementwise, in gout's dtype.  ``saved`` is
+    ``_vjp_fwd_saved``'s tensor; identity when the epilogue is linear."""
+    if spec.activation == "none":
+        return gout
+    if spec.activation == "relu":
+        return jnp.where(saved > 0, gout, jnp.zeros_like(gout))
+    _, act_vjp = jax.vjp(_ep.ACTIVATIONS[spec.activation], saved)
+    (du,) = act_vjp(gout.astype(saved.dtype))
+    return du.astype(gout.dtype)
+
+
+def _epilogue_param_grads(spec: _FusedSpec, dwout, du):
+    """Unpack the bwd-weight kernel result into (dw, dbias) in the primal
+    dtypes, and derive dresidual (the masked cotangent passed through)."""
+    if spec.bias_dtype is not None:
+        dw, db = dwout
+        dbias = db.astype(jnp.dtype(spec.bias_dtype))
+    else:
+        dw, dbias = dwout, None
+    dres = (du.astype(jnp.dtype(spec.residual_dtype))
+            if spec.residual_dtype is not None else None)
+    return dw, dbias, dres
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _conv1d_pallas(spec: _FusedSpec, x, w, bias, residual):
+    return _fused_fwd_padded(spec, x, w, bias, residual)
+
+
+def _conv1d_pallas_fwd(spec, x, w, bias, residual):
+    # (bias and residual themselves are not saved: dbias/dresidual depend
+    # only on the masked cotangent.)
+    if _needs_preact(spec.activation):
+        y, u = _fused_fwd_padded(spec, x, w, bias, residual, save_preact=True)
+    else:
+        y, u = _fused_fwd_padded(spec, x, w, bias, residual), None
+    return y, (x, w, _vjp_fwd_saved(spec, y, u))
+
+
+def _conv1d_pallas_bwd(spec, res, gout):
+    x, w, saved = res
     S, K, C = w.shape
-    span = (S - 1) * dilation
-    # --- Alg. 3: bwd-data = fwd BRGEMM on zero-padded gout with flipped,
+    d = spec.dilation
+    span = (S - 1) * d
+    # --- epilogue gradient (identity when the epilogue has no activation)
+    du = _epilogue_cotangent(spec, saved, gout)
+    # --- Alg. 3: bwd-data = fwd BRGEMM on zero-padded du with flipped,
     # transposed weights (the paper's (S, C, K) layout).
-    g_pad = jnp.pad(gout, ((0, 0), (0, 0), (span, span)))
+    g_pad = jnp.pad(du, ((0, 0), (0, 0), (span, span)))
     w_flip = w[::-1].transpose(0, 2, 1)  # (S, C, K)
     # kblk tuned for K need not divide C (the bwd-data filter count)
-    dx = _pallas_fwd_padded(g_pad, w_flip, dilation, wblk, None, interpret)
+    dx = _plain_fwd_padded(g_pad, w_flip, d, spec.wblk, None, spec.interpret)
     dx = dx.astype(x.dtype)
-    # --- Alg. 4: bwd-weight kernel (fp32 accumulation).
+    # --- Alg. 4: bwd-weight kernel (fp32 accumulation), with the bias
+    # gradient fused into the same sequential-grid pass when bias exists.
     N, Cx, W = x.shape
     Q = W - span
-    Qp = _round_up(Q, wblk)
+    Qp = _round_up(Q, spec.wblk)
     xp = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W))) if Qp + span > W else x
-    gp = jnp.pad(gout, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else gout
-    dw = _k.conv1d_bwd_weight(
-        xp, gp, S=S, dilation=dilation, wblk=wblk, interpret=interpret
-    )
-    return dx, dw.astype(w.dtype)
+    gp = jnp.pad(du, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else du
+    dwout = _k.conv1d_bwd_weight(
+        xp, gp, S=S, dilation=d, wblk=spec.wblk,
+        with_dbias=spec.bias_dtype is not None, interpret=spec.interpret)
+    dw, dbias, dres = _epilogue_param_grads(spec, dwout, du)
+    return dx, dw.astype(w.dtype), dbias, dres
 
 
 _conv1d_pallas.defvjp(_conv1d_pallas_fwd, _conv1d_pallas_bwd)
@@ -144,39 +269,64 @@ def conv1d(
     x: jax.Array,
     w: jax.Array,
     *,
+    bias: jax.Array | None = None,
+    activation: str | None = None,
+    residual: jax.Array | None = None,
     dilation: int = 1,
     padding: Padding = "SAME",
     backend: str | None = None,
     wblk: int | None = None,
     kblk: int | None = None,
+    out_dtype=None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """1D dilated convolution, paper semantics.
+    """1D dilated convolution with fused epilogue, paper semantics.
 
     x: (N, C, W), w: (S, K, C) -> (N, K, Q); Q == W for SAME/CAUSAL,
     Q = W - (S-1)*dilation for VALID.
 
+    Epilogue (all optional, applied on the fp32 accumulator in this order):
+    ``y = act(conv + bias + residual)`` with bias (K,), activation one of
+    relu/gelu/silu, residual (N, K, Q).  ``out_dtype`` overrides the output
+    dtype (default x.dtype) without an extra cast op.
+
     backend='auto' asks the tuning subsystem (``repro.tune``) to pick the
-    backend and tile sizes for this exact shape; see ``_resolve_auto``.
+    backend and tile sizes for this exact (shape, epilogue) instance; see
+    ``_resolve_auto``.
     """
     backend = backend or default_backend()
+    activation = _ep.canon(activation)
     S, K, C = w.shape
     lo, hi = _pad_amounts(S, dilation, padding)
     if lo or hi:
         x = jnp.pad(x, ((0, 0), (0, 0), (lo, hi)))
+    Q = x.shape[-1] - (S - 1) * dilation
+    if bias is not None:
+        assert bias.shape == (K,), (bias.shape, K)
+    if residual is not None:
+        assert residual.shape == (x.shape[0], K, Q), \
+            (residual.shape, (x.shape[0], K, Q))
     if backend == "auto":
         backend, wblk, kblk = _resolve_auto(
             x, C=C, K=K, S=S, dilation=dilation, padding=padding,
-            wblk=wblk, kblk=kblk, depthwise=False)
+            wblk=wblk, kblk=kblk, depthwise=False,
+            epilogue=_ep.signature(bias is not None, activation,
+                                   residual is not None))
     if backend == "ref":
-        return _ref.conv1d_ref(x, w, dilation=dilation)
+        return _ref.conv1d_fused_ref(x, w, dilation=dilation, bias=bias,
+                                     activation=activation, residual=residual,
+                                     out_dtype=out_dtype)
     if backend == "xla":
-        return _ref.xla_conv1d(x, w, dilation=dilation)
+        u = _ep.apply_ref(_ref._xla_conv1d_f32(x, w, dilation), bias=bias,
+                          residual=residual, activation=activation)
+        return u.astype(out_dtype or x.dtype)
     if backend == "pallas":
-        Q = x.shape[-1] - (S - 1) * dilation
         wblk = wblk or pick_wblk(Q, S, dilation)
         interpret = _INTERPRET if interpret is None else interpret
-        return _conv1d_pallas(x, w, dilation, wblk, kblk, interpret)
+        spec = _FusedSpec(dilation, wblk, kblk, interpret, activation,
+                          _dtype_name(bias), _dtype_name(residual),
+                          jnp.dtype(out_dtype).name if out_dtype else None)
+        return _conv1d_pallas(spec, x, w, bias, residual)
     raise ValueError(f"unknown conv backend {backend!r}")
 
 
@@ -185,7 +335,7 @@ def conv1d(
 # ---------------------------------------------------------------------------
 
 
-def _dw_pallas_fwd_padded(x, w, dilation, wblk, cblk, interpret):
+def _dw_plain_fwd_padded(x, w, dilation, wblk, cblk, interpret):
     N, C, W = x.shape
     S, _ = w.shape
     span = (S - 1) * dilation
@@ -198,31 +348,60 @@ def _dw_pallas_fwd_padded(x, w, dilation, wblk, cblk, interpret):
     return out[:, :, :Q]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
-def _dw_conv1d_pallas(x, w, dilation, wblk, cblk, interpret):
-    return _dw_pallas_fwd_padded(x, w, dilation, wblk, cblk, interpret)
+def _dw_fused_fwd_padded(spec: _FusedSpec, x, w, bias, residual,
+                         save_preact: bool = False):
+    N, C, W = x.shape
+    S, _ = w.shape
+    span = (S - 1) * spec.dilation
+    Q = W - span
+    Qp = _round_up(Q, spec.wblk)
+    if Qp + span > W:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
+    if residual is not None and Qp > Q:
+        residual = jnp.pad(residual, ((0, 0), (0, 0), (0, Qp - Q)))
+    out = _k.depthwise_conv1d_fwd(
+        x, w, bias=bias, residual=residual, activation=spec.activation,
+        save_preact=save_preact, dilation=spec.dilation, wblk=spec.wblk,
+        cblk=spec.blk2, out_dtype=spec.out_jnp_dtype, interpret=spec.interpret)
+    if save_preact:
+        y, u = out
+        return y[:, :, :Q], u[:, :, :Q]
+    return out[:, :, :Q]
 
 
-def _dw_conv1d_pallas_fwd(x, w, dilation, wblk, cblk, interpret):
-    return _dw_pallas_fwd_padded(x, w, dilation, wblk, cblk, interpret), (x, w)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _dw_conv1d_pallas(spec: _FusedSpec, x, w, bias, residual):
+    return _dw_fused_fwd_padded(spec, x, w, bias, residual)
 
 
-def _dw_conv1d_pallas_bwd(dilation, wblk, cblk, interpret, res, gout):
-    x, w = res
+def _dw_conv1d_pallas_fwd(spec, x, w, bias, residual):
+    if _needs_preact(spec.activation):
+        y, u = _dw_fused_fwd_padded(spec, x, w, bias, residual,
+                                    save_preact=True)
+    else:
+        y, u = _dw_fused_fwd_padded(spec, x, w, bias, residual), None
+    return y, (x, w, _vjp_fwd_saved(spec, y, u))
+
+
+def _dw_conv1d_pallas_bwd(spec, res, gout):
+    x, w, saved = res
     S, C = w.shape
-    span = (S - 1) * dilation
-    g_pad = jnp.pad(gout, ((0, 0), (0, 0), (span, span)))
-    dx = _dw_pallas_fwd_padded(g_pad, w[::-1], dilation, wblk, cblk,
-                               interpret).astype(x.dtype)
+    d = spec.dilation
+    span = (S - 1) * d
+    du = _epilogue_cotangent(spec, saved, gout)
+    g_pad = jnp.pad(du, ((0, 0), (0, 0), (span, span)))
+    dx = _dw_plain_fwd_padded(g_pad, w[::-1], d, spec.wblk, spec.blk2,
+                              spec.interpret).astype(x.dtype)
     N, _, W = x.shape
     Q = W - span
-    Qp = _round_up(Q, wblk)
+    Qp = _round_up(Q, spec.wblk)
     xp = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W))) if Qp + span > W else x
-    gp = jnp.pad(gout, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else gout
-    dw = _k.depthwise_conv1d_bwd_weight(
-        xp, gp, S=S, dilation=dilation, wblk=wblk, cblk=cblk, interpret=interpret
-    )
-    return dx, dw.astype(w.dtype)
+    gp = jnp.pad(du, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else du
+    dwout = _k.depthwise_conv1d_bwd_weight(
+        xp, gp, S=S, dilation=d, wblk=spec.wblk, cblk=spec.blk2,
+        with_dbias=spec.bias_dtype is not None, interpret=spec.interpret)
+    dw, dbias, dres = _epilogue_param_grads(spec, dwout, du)
+    return dx, dw.astype(w.dtype), dbias, dres
 
 
 _dw_conv1d_pallas.defvjp(_dw_conv1d_pallas_fwd, _dw_conv1d_pallas_bwd)
@@ -232,41 +411,56 @@ def depthwise_conv1d(
     x: jax.Array,
     w: jax.Array,
     *,
+    bias: jax.Array | None = None,
+    activation: str | None = None,
+    residual: jax.Array | None = None,
     dilation: int = 1,
     padding: Padding = "CAUSAL",
     backend: str | None = None,
     wblk: int | None = None,
     cblk: int | None = None,
+    out_dtype=None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Depthwise 1D conv.  x: (N, C, W), w: (S, C) -> (N, C, Q).
+    """Depthwise 1D conv with fused epilogue.  x: (N, C, W), w: (S, C)
+    -> (N, C, Q); bias (C,), residual (N, C, Q), same epilogue order as
+    ``conv1d``.  All backends follow one dtype rule: fp32 accumulation /
+    epilogue math, output in ``out_dtype`` or x.dtype (whatever the weight
+    dtype — the mixed-dtype contract shared with the dense path).
 
     backend='auto' defers to the tuning subsystem, as in ``conv1d``.
     """
     backend = backend or default_backend()
+    activation = _ep.canon(activation)
     S, C = w.shape
     lo, hi = _pad_amounts(S, dilation, padding)
     if lo or hi:
         x = jnp.pad(x, ((0, 0), (0, 0), (lo, hi)))
+    Q = x.shape[-1] - (S - 1) * dilation
+    if bias is not None:
+        assert bias.shape == (C,), (bias.shape, C)
+    if residual is not None:
+        assert residual.shape == (x.shape[0], C, Q), \
+            (residual.shape, (x.shape[0], C, Q))
     if backend == "auto":
         backend, wblk, cblk = _resolve_auto(
             x, C=C, K=C, S=S, dilation=dilation, padding=padding,
-            wblk=wblk, kblk=cblk, depthwise=True)
+            wblk=wblk, kblk=cblk, depthwise=True,
+            epilogue=_ep.signature(bias is not None, activation,
+                                   residual is not None))
     if backend == "ref":
-        return _ref.depthwise_conv1d_ref(x, w, dilation=dilation)
+        return _ref.depthwise_conv1d_fused_ref(
+            x, w, dilation=dilation, bias=bias, activation=activation,
+            residual=residual, out_dtype=out_dtype)
     if backend == "xla":
-        # grouped conv via feature_group_count; compute in fp32 throughout
-        # so the AD transpose sees consistent dtypes (bf16 params)
-        w_oiw = w.T[:, None, :].astype(jnp.float32)  # (C, 1, S)
-        return jax.lax.conv_general_dilated(
-            x.astype(jnp.float32), w_oiw, (1,), "VALID",
-            rhs_dilation=(dilation,),
-            dimension_numbers=("NCW", "OIW", "NCW"),
-            feature_group_count=C,
-        ).astype(x.dtype)
+        u = _ep.apply_ref(_ref._xla_depthwise_conv1d_f32(x, w, dilation),
+                          bias=bias, residual=residual, activation=activation)
+        return u.astype(out_dtype or x.dtype)
     if backend == "pallas":
-        Q = x.shape[-1] - (S - 1) * dilation
         wblk = wblk or pick_wblk(Q, S, dilation)
         interpret = _INTERPRET if interpret is None else interpret
-        return _dw_conv1d_pallas(x, w, dilation, wblk, cblk, interpret)
+        spec = _FusedSpec(dilation, wblk, cblk, interpret, activation,
+                          _dtype_name(bias), _dtype_name(residual),
+                          jnp.dtype(out_dtype).name if out_dtype else None)
+        return _dw_conv1d_pallas(spec, x, w, bias, residual)
     raise ValueError(f"unknown conv backend {backend!r}")

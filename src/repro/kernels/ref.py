@@ -13,14 +13,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from . import epilogue as _ep
 
-def conv1d_ref(x: jax.Array, w: jax.Array, *, dilation: int = 1) -> jax.Array:
-    """Direct evaluation of eq. (2): Out[k,q] = sum_{c,s} In[c, q+d*s] W[s,k,c].
 
-    Implemented exactly as the paper's Algorithm 1 — a series of S GEMMs over
-    width-shifted slices of the input — so it doubles as the readable spec of
-    the BRGEMM formulation.
-    """
+def _conv1d_f32(x: jax.Array, w: jax.Array, dilation: int) -> jax.Array:
+    """Alg. 1 body in fp32 (no output cast) — shared by the plain and the
+    fused oracle so the fused path sees the un-rounded accumulator, exactly
+    as the kernel's epilogue does."""
     S, K, C = w.shape
     N, Cx, W = x.shape
     assert C == Cx, (C, Cx)
@@ -32,7 +31,29 @@ def conv1d_ref(x: jax.Array, w: jax.Array, *, dilation: int = 1) -> jax.Array:
         out = out + jnp.einsum(
             "kc,ncq->nkq", w[s].astype(jnp.float32), xs.astype(jnp.float32)
         )
-    return out.astype(x.dtype)
+    return out
+
+
+def conv1d_ref(x: jax.Array, w: jax.Array, *, dilation: int = 1) -> jax.Array:
+    """Direct evaluation of eq. (2): Out[k,q] = sum_{c,s} In[c, q+d*s] W[s,k,c].
+
+    Implemented exactly as the paper's Algorithm 1 — a series of S GEMMs over
+    width-shifted slices of the input — so it doubles as the readable spec of
+    the BRGEMM formulation.
+    """
+    return _conv1d_f32(x, w, dilation).astype(x.dtype)
+
+
+def conv1d_fused_ref(x: jax.Array, w: jax.Array, *, dilation: int = 1,
+                     bias: jax.Array | None = None,
+                     activation: str | None = None,
+                     residual: jax.Array | None = None,
+                     out_dtype=None) -> jax.Array:
+    """Oracle for the fused-epilogue forward: act(conv + bias + residual),
+    all epilogue math on the fp32 accumulator (DESIGN.md §10)."""
+    u = _ep.apply_ref(_conv1d_f32(x, w, dilation), bias=bias,
+                      residual=residual, activation=activation)
+    return u.astype(out_dtype or x.dtype)
 
 
 def conv1d_bwd_data_ref(
@@ -65,14 +86,7 @@ def conv1d_bwd_weight_ref(
     return jnp.stack(taps, axis=0)  # (S, K, C) fp32
 
 
-def depthwise_conv1d_ref(
-    x: jax.Array, w: jax.Array, *, dilation: int = 1
-) -> jax.Array:
-    """Grouped (depthwise) variant: Out[c,q] = sum_s In[c, q+d*s] * W[s,c].
-
-    This is the paper's kernel with groups == C == K (the Mamba2 causal-conv
-    case).  x: (N, C, W), w: (S, C) -> (N, C, Q).
-    """
+def _depthwise_conv1d_f32(x: jax.Array, w: jax.Array, dilation: int) -> jax.Array:
     S, C = w.shape
     N, Cx, W = x.shape
     assert C == Cx
@@ -81,16 +95,33 @@ def depthwise_conv1d_ref(
     for s in range(S):
         xs = jax.lax.dynamic_slice_in_dim(x, s * dilation, Q, axis=2)
         out = out + w[s].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
-    return out.astype(x.dtype)
+    return out
 
 
-def xla_conv1d(x: jax.Array, w: jax.Array, *, dilation: int = 1) -> jax.Array:
-    """The vendor-library general convolution (XLA's built-in conv).
+def depthwise_conv1d_ref(
+    x: jax.Array, w: jax.Array, *, dilation: int = 1
+) -> jax.Array:
+    """Grouped (depthwise) variant: Out[c,q] = sum_s In[c, q+d*s] * W[s,c].
 
-    Plays the role oneDNN plays in the paper: the generic library baseline the
-    BRGEMM formulation is compared against.  Same (VALID, pre-padded) contract
-    as conv1d_ref.
+    This is the paper's kernel with groups == C == K (the Mamba2 causal-conv
+    case).  x: (N, C, W), w: (S, C) -> (N, C, Q).
     """
+    return _depthwise_conv1d_f32(x, w, dilation).astype(x.dtype)
+
+
+def depthwise_conv1d_fused_ref(x: jax.Array, w: jax.Array, *,
+                               dilation: int = 1,
+                               bias: jax.Array | None = None,
+                               activation: str | None = None,
+                               residual: jax.Array | None = None,
+                               out_dtype=None) -> jax.Array:
+    """Fused-epilogue oracle for the depthwise variant."""
+    u = _ep.apply_ref(_depthwise_conv1d_f32(x, w, dilation), bias=bias,
+                      residual=residual, activation=activation)
+    return u.astype(out_dtype or x.dtype)
+
+
+def _xla_conv1d_f32(x: jax.Array, w: jax.Array, dilation: int) -> jax.Array:
     S, K, C = w.shape
     # lax wants (N, C, W) x (K, C, S) with NCW/OIW numbers; fp32 math so the
     # AD transpose sees consistent dtypes under bf16 params.
@@ -102,4 +133,36 @@ def xla_conv1d(x: jax.Array, w: jax.Array, *, dilation: int = 1) -> jax.Array:
         padding="VALID",
         rhs_dilation=(dilation,),
         dimension_numbers=("NCW", "OIW", "NCW"),
-    ).astype(x.dtype)
+    )
+
+
+def xla_conv1d(x: jax.Array, w: jax.Array, *, dilation: int = 1) -> jax.Array:
+    """The vendor-library general convolution (XLA's built-in conv).
+
+    Plays the role oneDNN plays in the paper: the generic library baseline the
+    BRGEMM formulation is compared against.  Same (VALID, pre-padded) contract
+    as conv1d_ref.  Dtype policy (shared with the depthwise variant below):
+    compute in fp32, return x.dtype regardless of the weight dtype.
+    """
+    return _xla_conv1d_f32(x, w, dilation).astype(x.dtype)
+
+
+def _xla_depthwise_conv1d_f32(x: jax.Array, w: jax.Array,
+                              dilation: int) -> jax.Array:
+    S, C = w.shape
+    # grouped conv via feature_group_count; same fp32-compute rule as the
+    # dense vendor path so the AD transpose sees consistent dtypes.
+    w_oiw = w.T[:, None, :].astype(jnp.float32)  # (C, 1, S)
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w_oiw, (1,), "VALID",
+        rhs_dilation=(dilation,),
+        dimension_numbers=("NCW", "OIW", "NCW"),
+        feature_group_count=C,
+    )
+
+
+def xla_depthwise_conv1d(x: jax.Array, w: jax.Array, *,
+                         dilation: int = 1) -> jax.Array:
+    """Vendor-library depthwise conv, same dtype policy as ``xla_conv1d``:
+    fp32 compute, output in x.dtype whatever the weight dtype."""
+    return _xla_depthwise_conv1d_f32(x, w, dilation).astype(x.dtype)

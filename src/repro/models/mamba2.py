@@ -57,11 +57,13 @@ def _split_proj(cfg, zxbcdt):
 
 
 def _conv(p, xBC, cfg):
-    """Causal depthwise conv over time via the paper's BRGEMM kernel stack."""
+    """Causal depthwise conv over time via the paper's BRGEMM kernel stack,
+    with bias + SiLU fused into the kernel epilogue on the fp32 accumulator
+    (DESIGN.md §10); out_dtype=fp32 feeds the SSD scan without a cast."""
     y = kops.depthwise_conv1d(
-        xBC.transpose(0, 2, 1), p["conv_w"], dilation=1, padding="CAUSAL"
-    ).transpose(0, 2, 1)
-    return jax.nn.silu((y + p["conv_b"]).astype(jnp.float32))
+        xBC.transpose(0, 2, 1), p["conv_w"], dilation=1, padding="CAUSAL",
+        bias=p["conv_b"], activation="silu", out_dtype=jnp.float32)
+    return y.transpose(0, 2, 1)
 
 
 def ssd_chunked(x, dt, A, B, C, chunk):

@@ -37,11 +37,12 @@ def init_frontend(key, cfg, dtype):
 
 
 def conv_frontend(p, mel, cfg):
-    """mel: (B, N_MELS, T) -> (B, T//2, D) frame embeddings."""
-    h = kops.conv1d(mel, p["conv1_w"], padding="SAME")
-    h = jax.nn.gelu((h + p["conv1_b"][None, :, None]).astype(jnp.float32)).astype(mel.dtype)
-    h = kops.conv1d(h, p["conv2_w"], padding="SAME")[:, :, ::2]  # stride 2
-    h = jax.nn.gelu((h + p["conv2_b"][None, :, None]).astype(jnp.float32))
+    """mel: (B, N_MELS, T) -> (B, T//2, D) frame embeddings.  Bias + GELU
+    run in the conv kernel's fused epilogue (DESIGN.md §10)."""
+    h = kops.conv1d(mel, p["conv1_w"], bias=p["conv1_b"], activation="gelu",
+                    padding="SAME")
+    h = kops.conv1d(h, p["conv2_w"], bias=p["conv2_b"], activation="gelu",
+                    padding="SAME")[:, :, ::2]  # stride 2
     return h.astype(mel.dtype).transpose(0, 2, 1)
 
 

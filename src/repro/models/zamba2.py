@@ -8,7 +8,8 @@ Zamba2 are omitted (noted in DESIGN.md §8) — they are <0.1% of params and
 orthogonal to the systems work here.
 
 The causal conv inside each Mamba2 block uses the paper's BRGEMM depthwise
-kernel (see models/mamba2.py).
+kernel with the fused bias+SiLU epilogue (see models/mamba2.py and
+DESIGN.md §10).
 """
 from __future__ import annotations
 

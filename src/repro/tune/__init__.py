@@ -59,10 +59,11 @@ def measurement_enabled() -> bool:
     return os.environ.get(ENV_TUNE) == "1"
 
 
-def _problem_key(*, N, C, K, S, dilation, Q, dtype, padding, depthwise):
+def _problem_key(*, N, C, K, S, dilation, Q, dtype, padding, depthwise,
+                 epilogue="none"):
     return cache_key(device_kind=device_kind(), dtype=str(jax.numpy.dtype(dtype)),
                      N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
-                     padding=padding, depthwise=depthwise)
+                     padding=padding, depthwise=depthwise, epilogue=epilogue)
 
 
 def _default_config(Q: int, S: int, dilation: int) -> TunedConfig:
@@ -74,29 +75,33 @@ def _default_config(Q: int, S: int, dilation: int) -> TunedConfig:
 
 def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
          padding: str = "VALID", depthwise: bool = False,
+         epilogue: str = "none",
          cache: TuneCache | None = None, measure: bool = True,
          top_k: int = 4, iters: int = 5, warmup: int = 2) -> TunedConfig:
     """Search the candidate space for one problem and persist the winner.
 
     With ``measure=False`` the analytic cost model alone picks (source
     'cost'); otherwise the cost-ranked top-k candidates are wall-clock
-    timed and the median-fastest wins (source 'measured').
+    timed and the median-fastest wins (source 'measured').  ``epilogue``
+    is the fusion signature (``repro.kernels.epilogue.signature``): it
+    shapes the candidate space (residual tile VMEM), the cost model
+    (epilogue traffic), the timed call, and the cache key.
     """
     if cache is None:  # NOT `or`: an empty TuneCache is falsy (__len__)
         cache = get_default_cache()
     dtype_bytes = jax.numpy.dtype(dtype).itemsize
     cands = _space.enumerate_candidates(
         C=C, K=K, S=S, dilation=dilation, Q=Q, dtype_bytes=dtype_bytes,
-        depthwise=depthwise)
+        depthwise=depthwise, epilogue=epilogue)
     ranked = _cost.rank(cands, N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
                         dtype_bytes=dtype_bytes, device_kind=device_kind(),
-                        depthwise=depthwise)
+                        depthwise=depthwise, epilogue=epilogue)
     if measure:
         timed = [(
             _measure.time_candidate(c, N=N, C=C, K=K, S=S, dilation=dilation,
                                     Q=Q, dtype=dtype, padding=padding,
                                     iters=iters, warmup=warmup,
-                                    depthwise=depthwise), c)
+                                    depthwise=depthwise, epilogue=epilogue), c)
             for c in ranked[:top_k]]
         sec, best = min(timed, key=lambda t: t[0])
         cfg = TunedConfig(best.backend, best.wblk, best.kblk, "measured", sec)
@@ -104,7 +109,8 @@ def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
         best = ranked[0]
         cfg = TunedConfig(best.backend, best.wblk, best.kblk, "cost")
     key = _problem_key(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
-                       dtype=dtype, padding=padding, depthwise=depthwise)
+                       dtype=dtype, padding=padding, depthwise=depthwise,
+                       epilogue=epilogue)
     cache.put(key, {"backend": cfg.backend, "wblk": cfg.wblk,
                     "kblk": cfg.kblk, "source": cfg.source, "sec": cfg.sec})
     return cfg
@@ -112,6 +118,7 @@ def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
 
 def get_config(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
                dtype, padding: str = "VALID", depthwise: bool = False,
+               epilogue: str = "none",
                cache: TuneCache | None = None,
                allow_measure: bool | None = None) -> TunedConfig:
     """Resolve the config for one problem: cache -> (maybe) tune -> default.
@@ -119,12 +126,14 @@ def get_config(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
     A cache hit never re-measures.  On a miss, a measured search runs only
     when allowed (``REPRO_TUNE=1`` or ``allow_measure=True``); otherwise the
     heuristic default is returned and the cache is left untouched, so a
-    later real tuning run can still fill it.
+    later real tuning run can still fill it.  Fused and unfused instances
+    of the same shape resolve independently (``epilogue`` is in the key).
     """
     if cache is None:  # NOT `or`: an empty TuneCache is falsy (__len__)
         cache = get_default_cache()
     key = _problem_key(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
-                       dtype=dtype, padding=padding, depthwise=depthwise)
+                       dtype=dtype, padding=padding, depthwise=depthwise,
+                       epilogue=epilogue)
     hit = cache.get(key)
     if hit is not None:
         return TunedConfig(hit["backend"], hit.get("wblk"), hit.get("kblk"),
@@ -133,7 +142,8 @@ def get_config(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
         allow_measure = measurement_enabled()
     if allow_measure:
         return tune(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q, dtype=dtype,
-                    padding=padding, depthwise=depthwise, cache=cache)
+                    padding=padding, depthwise=depthwise, epilogue=epilogue,
+                    cache=cache)
     return _default_config(Q, S, dilation)
 
 

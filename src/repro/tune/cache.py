@@ -3,7 +3,8 @@
 One entry per problem instance, keyed by everything that changes the best
 (backend, wblk, kblk) choice:
 
-    (device_kind, dtype, N, C, K, S, dilation, Q, padding[, depthwise])
+    (device_kind, dtype, N, C, K, S, dilation, Q, padding[, depthwise]
+     [, epilogue])
 
 The cache is a flat JSON object mapping the canonical key string to the
 winning entry, e.g.::
@@ -11,6 +12,12 @@ winning entry, e.g.::
     {"TPU v5e|float32|N4|C15|K15|S5|d8|Q5000|VALID|dense":
         {"backend": "pallas", "wblk": 512, "kblk": 15,
          "source": "measured", "sec": 1.7e-4}}
+
+Key versioning: a fused instance appends its epilogue signature
+(``|ep:b+relu+r``, see ``repro.kernels.epilogue.signature``); the unfused
+signature appends nothing, so keys written before epilogue fusion existed
+keep resolving exactly the instances they were measured for, and fused
+shapes always get distinct entries.
 
 Path resolution: explicit argument > ``REPRO_TUNE_CACHE`` env var >
 ``~/.cache/repro/tune_cache.json``.  Writes are atomic (tmp file + rename)
@@ -35,10 +42,12 @@ def default_cache_path() -> str:
 
 def cache_key(*, device_kind: str, dtype: str, N: int, C: int, K: int,
               S: int, dilation: int, Q: int, padding: str,
-              depthwise: bool = False) -> str:
+              depthwise: bool = False, epilogue: str = "none") -> str:
     kind = "dw" if depthwise else "dense"
-    return (f"{device_kind}|{dtype}|N{N}|C{C}|K{K}|S{S}|d{dilation}"
+    base = (f"{device_kind}|{dtype}|N{N}|C{C}|K{K}|S{S}|d{dilation}"
             f"|Q{Q}|{padding}|{kind}")
+    # unfused -> legacy key form (pre-epilogue caches stay readable)
+    return base if epilogue in (None, "", "none") else f"{base}|ep:{epilogue}"
 
 
 class TuneCache:

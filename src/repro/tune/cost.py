@@ -22,6 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.kernels import epilogue as _epi
 from repro.roofline.flops import conv1d_flops, conv1d_min_bytes
 
 from .space import Candidate, round_up
@@ -65,16 +66,25 @@ def peaks_for(device_kind: str) -> Peaks:
 def estimate_seconds(cand: Candidate, *, N: int, C: int, K: int, S: int,
                      dilation: int, Q: int, dtype_bytes: int,
                      device_kind: str = "cpu",
-                     depthwise: bool = False) -> float:
+                     depthwise: bool = False,
+                     epilogue: str = "none") -> float:
     peaks = peaks_for(device_kind)
     is_tpu = "tpu" in device_kind.lower() or device_kind.lower().startswith("v")
     n_filters = C if depthwise else K
+    has_bias, act, has_residual = _epi.parse(epilogue)
     # depthwise is one MAC chain per channel: K plays no contraction role
     flops = conv1d_flops(N, C, 1 if depthwise else K, S, Q)
+    out_elems = N * n_filters * Q
 
     if cand.backend != "pallas":
         eff = EFF_XLA_TPU if is_tpu else EFF_XLA_HOST
         mem = conv1d_min_bytes(N, C, n_filters, S, Q, dilation, dtype_bytes)
+        # ops.conv1d applies the epilogue as jnp ops inside the same jit, so
+        # XLA fuses it too: like the Pallas kernel, the only extra HBM
+        # traffic is the residual operand read (+ the bias vector, noise).
+        # Charging per-op passes here would mis-rank xla vs pallas relative
+        # to what measure.time_candidate actually times.
+        mem += dtype_bytes * (has_residual * out_elems + has_bias * n_filters)
         # the derate applies to the whole pass: a generic library misses
         # peak on both the compute and the traffic axis
         return max(flops / peaks.flops_per_s, mem / peaks.bytes_per_s) / eff
@@ -91,7 +101,10 @@ def estimate_seconds(cand: Candidate, *, N: int, C: int, K: int, S: int,
         x_traffic = N * k_tiles * q_tiles * C * F             # C rows per cell
     w_traffic = S * n_filters * (1 if depthwise else C)
     out_traffic = N * n_filters * Qp
-    mem = dtype_bytes * (x_traffic + w_traffic + out_traffic)
+    # fused epilogue rides the hot accumulator: only the residual operand
+    # adds HBM traffic (one read per output tile); bias is noise
+    ep_traffic = (has_residual * N * n_filters * Qp) + has_bias * n_filters
+    mem = dtype_bytes * (x_traffic + w_traffic + out_traffic + ep_traffic)
     cells = N * k_tiles * q_tiles
     eff = EFF_PALLAS_TPU if is_tpu else EFF_PALLAS_INTERPRET
     return (max(flops / peaks.flops_per_s, mem / peaks.bytes_per_s) / eff

@@ -33,22 +33,31 @@ def median_time(fn, *args, iters: int = 5, warmup: int = 2) -> float:
 def time_candidate(cand: Candidate, *, N: int, C: int, K: int, S: int,
                    dilation: int, Q: int, dtype, padding: str = "VALID",
                    iters: int = 5, warmup: int = 2, depthwise: bool = False,
-                   seed: int = 0) -> float:
+                   epilogue: str = "none", seed: int = 0) -> float:
     """Seconds per forward pass of one candidate on a random problem
     instance.  The input width is chosen so the output width is Q under the
-    given padding mode (VALID gets the pre-padded kernel contract)."""
+    given padding mode (VALID gets the pre-padded kernel contract).
+    ``epilogue`` (a ``repro.kernels.epilogue`` signature) makes the timed
+    call carry the same fused bias/activation/residual as the instance
+    being tuned."""
+    from repro.kernels import epilogue as _ep
     from repro.kernels import ops  # late import: ops dispatches into tune
 
+    has_bias, activation, has_residual = _ep.parse(epilogue)
+    n_filters = C if depthwise else K
     W = Q + (S - 1) * dilation if padding == "VALID" else Q
     kx, kw = jax.random.split(jax.random.key(seed))
     x = (jax.random.normal(kx, (N, C, W), jnp.float32)).astype(dtype)
+    bias = jnp.zeros((n_filters,), dtype) if has_bias else None
+    residual = (jnp.zeros((N, n_filters, Q), dtype) if has_residual else None)
     if depthwise:
         w = (jax.random.normal(kw, (S, C), jnp.float32) * 0.1).astype(dtype)
 
         @jax.jit
         def f(x, w):
             return ops.depthwise_conv1d(
-                x, w, dilation=dilation, padding=padding,
+                x, w, bias=bias, activation=activation, residual=residual,
+                dilation=dilation, padding=padding,
                 backend=cand.backend, wblk=cand.wblk, cblk=cand.kblk)
     else:
         w = (jax.random.normal(kw, (S, K, C), jnp.float32) * 0.1).astype(dtype)
@@ -56,7 +65,8 @@ def time_candidate(cand: Candidate, *, N: int, C: int, K: int, S: int,
         @jax.jit
         def f(x, w):
             return ops.conv1d(
-                x, w, dilation=dilation, padding=padding,
+                x, w, bias=bias, activation=activation, residual=residual,
+                dilation=dilation, padding=padding,
                 backend=cand.backend, wblk=cand.wblk, kblk=cand.kblk)
 
     return median_time(f, x, w, iters=iters, warmup=warmup)

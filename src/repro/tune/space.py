@@ -12,15 +12,23 @@ Legality for the Pallas kernel (the shape contract of
   * wblk is a multiple of the 128-lane TPU tile;
   * K % kblk == 0 (C % cblk == 0 for depthwise);
   * the VMEM working set — input footprint ``F = WBLK + (S-1)*d``, all S
-    weight taps of the filter tile, the output tile, and the fp32
-    accumulator — fits a per-core budget (half of the ~16 MiB VMEM, leaving
-    room for double buffering);
+    weight taps of the filter tile, the output tile, the fp32
+    accumulator, and the epilogue operands (bias tile + residual tile when
+    the instance is fused, see ``repro.kernels.epilogue``) — fits a
+    per-core budget (half of the ~16 MiB VMEM, leaving room for double
+    buffering);
+  * the per-row footprint F stays under ``ops.MAX_FOOTPRINT_ELEMS`` — the
+    same cap the untuned ``pick_wblk`` ladder enforces, so tuned and
+    default choices agree on what fits;
   * the width round-up waste ``round_up(Q, wblk)/Q`` is bounded, so a tiny
     problem never burns >2x its useful compute in padding.
 """
 from __future__ import annotations
 
 import dataclasses
+
+from repro.kernels import epilogue as _ep
+from repro.kernels.ops import MAX_FOOTPRINT_ELEMS
 
 LANE = 128                      # TPU lane tile; wblk must be a multiple
 WBLK_CHOICES = (128, 256, 512, 1024)
@@ -45,31 +53,44 @@ def round_up(x: int, m: int) -> int:
 
 def vmem_footprint_bytes(*, C: int, S: int, dilation: int, wblk: int,
                          kblk: int, dtype_bytes: int,
-                         depthwise: bool = False) -> int:
-    """VMEM working set of one grid cell of the forward kernel."""
+                         depthwise: bool = False,
+                         epilogue: str = "none") -> int:
+    """VMEM working set of one grid cell of the forward kernel.
+
+    A fused instance additionally stages its epilogue operands: the bias
+    tile (one element per filter row) and the output-shaped residual tile.
+    """
+    has_bias, _, has_residual = _ep.parse(epilogue)
     F = wblk + (S - 1) * dilation
+    nb = kblk  # filter rows per cell (cblk plays kblk's role if depthwise)
+    ep_bytes = dtype_bytes * (nb * has_bias + nb * wblk * has_residual)
     if depthwise:               # x tile (cblk, F), w (S, cblk), out + fp32 acc
         cblk = kblk
-        return dtype_bytes * (cblk * F + S * cblk + cblk * wblk) + 4 * cblk * wblk
+        return (dtype_bytes * (cblk * F + S * cblk + cblk * wblk)
+                + 4 * cblk * wblk + ep_bytes)
     return (dtype_bytes * (C * F + S * kblk * C + kblk * wblk)
-            + 4 * kblk * wblk)  # fp32 accumulator
+            + 4 * kblk * wblk + ep_bytes)  # fp32 accumulator
 
 
 def legal_tile_choices(*, C: int, K: int, S: int, dilation: int, Q: int,
                        dtype_bytes: int, depthwise: bool = False,
+                       epilogue: str = "none",
                        budget: int = VMEM_BUDGET_BYTES) -> list[tuple[int, int]]:
     """All (wblk, kblk) pairs legal under the kernel contract + VMEM budget."""
     n_filters = C if depthwise else K
     kblks = sorted({k for k in KBLK_CHOICES if n_filters % k == 0}
                    | {n_filters})
+    span = (S - 1) * dilation
     out = []
     for wblk in WBLK_CHOICES:
         if round_up(Q, wblk) > MAX_PAD_WASTE * Q and wblk != min(WBLK_CHOICES):
             continue            # padding would dominate; keep only the floor
+        if wblk + span > MAX_FOOTPRINT_ELEMS and wblk != min(WBLK_CHOICES):
+            continue            # same per-row cap as ops.pick_wblk
         for kblk in kblks:
             fp = vmem_footprint_bytes(C=C, S=S, dilation=dilation, wblk=wblk,
                                       kblk=kblk, dtype_bytes=dtype_bytes,
-                                      depthwise=depthwise)
+                                      depthwise=depthwise, epilogue=epilogue)
             if fp <= budget:
                 out.append((wblk, kblk))
     if not out:                 # degenerate giant shape: smallest legal tiles
@@ -79,12 +100,14 @@ def legal_tile_choices(*, C: int, K: int, S: int, dilation: int, Q: int,
 
 def enumerate_candidates(*, C: int, K: int, S: int, dilation: int, Q: int,
                          dtype_bytes: int, depthwise: bool = False,
+                         epilogue: str = "none",
                          budget: int = VMEM_BUDGET_BYTES) -> list[Candidate]:
     """The full search space for one problem instance: every legal Pallas
     tiling plus the vendor-library backend."""
     cands = [Candidate("pallas", wblk, kblk)
              for wblk, kblk in legal_tile_choices(
                  C=C, K=K, S=S, dilation=dilation, Q=Q,
-                 dtype_bytes=dtype_bytes, depthwise=depthwise, budget=budget)]
+                 dtype_bytes=dtype_bytes, depthwise=depthwise,
+                 epilogue=epilogue, budget=budget)]
     cands.append(Candidate("xla"))
     return cands

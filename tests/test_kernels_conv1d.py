@@ -99,6 +99,41 @@ def test_custom_vjp_matches_autodiff_of_oracle(N, C, K, S, d, Q, wblk):
     np.testing.assert_allclose(gw, gw_r, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("padding", ["SAME", "CAUSAL", "VALID"])
+def test_custom_vjp_padding_modes(padding, dtype):
+    """jax.grad through the Pallas custom_vjp for every padding mode (the
+    SAME/CAUSAL pads happen outside the kernels — the VJP must still match
+    autodiff-through-the-oracle on the *unpadded* inputs)."""
+    rng = np.random.default_rng(9)
+    N, C, K, S, d, W = 2, 8, 8, 5, 2, 200
+    x = _rand(rng, (N, C, W), dtype)
+    w = _rand(rng, (S, K, C), dtype)
+    lo, hi = ops._pad_amounts(S, d, padding)
+    Q = W if padding != "VALID" else W - (S - 1) * d
+    cot = _rand(rng, (N, K, Q), dtype)
+
+    def f_pallas(x, w):
+        y = ops.conv1d(x, w, dilation=d, padding=padding, backend="pallas",
+                       interpret=True)
+        return jnp.vdot(y.astype(jnp.float32), cot.astype(jnp.float32))
+
+    def f_ref(x, w):
+        xp = jnp.pad(x, ((0, 0), (0, 0), (lo, hi)))
+        return jnp.vdot(ref.conv1d_ref(xp, w, dilation=d).astype(jnp.float32),
+                        cot.astype(jnp.float32))
+
+    gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gx_r, gw_r = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    # bf16 cotangents round differently under the two accumulation orders
+    tol = (dict(rtol=5e-2, atol=8e-2) if dtype == jnp.bfloat16
+           else dict(rtol=1e-4, atol=1e-4))
+    np.testing.assert_allclose(np.asarray(gx, np.float32),
+                               np.asarray(gx_r, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(gw, np.float32),
+                               np.asarray(gw_r, np.float32), **tol)
+
+
 def test_bwd_weight_kernel_direct():
     rng = np.random.default_rng(4)
     N, C, K, S, d, Q, wblk = 2, 8, 16, 5, 2, 256, 128
