@@ -17,8 +17,17 @@ cell plus a tuned-vs-default column; pre-populate the cache first with
 an all-'default' run means the cache never matched and the tuned column is
 just the fallback path re-measured.
 
+``--grad`` switches to the training-path sweep: per cell it times the
+forward AND the full fwd+bwd (``jax.grad``) wall clock for the library
+default vs ``backend='auto'``, and reports how each of the three passes
+resolved (``src_fwd``/``src_bwd_data``/``src_bwd_weight`` — the per-pass
+cache-resolution source from ``tune.get_plan``).  This is the view the
+pass-aware tuner exists for: ~2/3 of training FLOPs are backward.
+
 Emits CSV: fig,mode,dtype,N,C,K,S,d,Q,sec,gflops,speedup_vs_library,
-tuned_vs_default,tuned_src
+tuned_vs_default,tuned_src — or with --grad:
+fig,mode,dtype,N,C,K,S,d,Q,sec_fwd,sec_fwdbwd,gflops,tuned_vs_default,
+src_fwd,src_bwd_data,src_bwd_weight
 """
 from __future__ import annotations
 
@@ -29,7 +38,7 @@ from benchmarks.common import conv1d_flops, time_fn
 from repro import tune
 from repro.kernels import ops as kops
 from repro.tune.presets import (  # single source of truth with scripts/tune.py
-    FIGSETS, N, Q_SET, Q_SET_FULL, S_SET, S_SET_FULL)
+    FIGSETS, N, Q_SET, Q_SET_FULL, S_SET, S_SET_FULL, SMOKE)
 
 
 def _fwd(backend, w, dilation):
@@ -102,12 +111,68 @@ def run(full: bool = False, iters: int = 3, tuned: bool = False,
     return rows
 
 
-def main(full: bool = False, tuned: bool = False, smoke: bool = False):
-    rows = run(full=full, tuned=tuned, smoke=smoke,
-               iters=1 if smoke else 3)
-    cols = ["fig", "mode", "dtype", "N", "C", "K", "S", "d", "Q", "sec",
-            "gflops", "speedup_vs_library"] + (
-                ["tuned_vs_default", "tuned_src"] if tuned else [])
+def _grad_cells(full: bool, smoke: bool):
+    """(fig, dtype_name, batch, C, K, d, S, Q) cells for the grad sweep.
+    Smoke runs the tiny ``presets.SMOKE`` instance — the *same* cell
+    ``scripts/tune.py --smoke`` pre-populates (all three passes), so a CI
+    run against a shared cache demonstrates per-pass cache resolution."""
+    if smoke:
+        p = SMOKE
+        return [("smoke", p["dtype"], p["N"], p["C"], p["K"], p["dilation"],
+                 p["S"], p["Q"])]
+    qs = Q_SET_FULL if full else Q_SET
+    ss = S_SET_FULL if full else S_SET
+    return [(fig, dtype_name, N, C, K, d, S, Q)
+            for fig, (dtype_name, C, K, d) in FIGSETS.items()
+            for S in ss for Q in qs]
+
+
+def run_grad(full: bool = False, iters: int = 3, smoke: bool = False):
+    """--grad: fwd and fwd+bwd wall clock, default-vs-auto, with the
+    per-pass resolution source of each cell's plan."""
+    rows = []
+    for fig, dtype_name, batch, C, K, d, S, Q in _grad_cells(full, smoke):
+        dtype = jnp.dtype(dtype_name)
+        key = jax.random.key(0)
+        w = (jax.random.normal(key, (S, K, C), jnp.float32) * 0.05).astype(dtype)
+        x = jax.random.normal(jax.random.key(1), (batch, C, Q), jnp.float32).astype(dtype)
+        flops = conv1d_flops(batch, C, K, S, Q)
+        plan = tune.get_plan(N=batch, C=C, K=K, S=S, dilation=d, Q=Q,
+                             dtype=dtype, padding="SAME",
+                             allow_measure=False)
+        res = {}
+        for mode in ("xla", "auto"):
+            tf = time_fn(_fwd(mode, w, d), x, iters=iters, warmup=1)
+            tb = time_fn(_fwd_bwd(mode, d), x, w, iters=iters, warmup=1)
+            res[mode] = tb
+            rows.append(dict(
+                fig=fig, mode=f"grad-{mode}", dtype=dtype_name, N=batch,
+                C=C, K=K, S=S, d=d, Q=Q, sec_fwd=tf, sec_fwdbwd=tb,
+                gflops=3 * flops / tb / 1e9,
+                src_fwd=plan["fwd"].source,
+                src_bwd_data=plan["bwd_data"].source,
+                src_bwd_weight=plan["bwd_weight"].source))
+        for r in rows[-2:]:
+            r["tuned_vs_default"] = res["xla"] / res["auto"]
+    return rows
+
+
+GRAD_COLS = ["fig", "mode", "dtype", "N", "C", "K", "S", "d", "Q",
+             "sec_fwd", "sec_fwdbwd", "gflops", "tuned_vs_default",
+             "src_fwd", "src_bwd_data", "src_bwd_weight"]
+
+
+def main(full: bool = False, tuned: bool = False, smoke: bool = False,
+         grad: bool = False):
+    if grad:
+        rows = run_grad(full=full, smoke=smoke, iters=1 if smoke else 3)
+        cols = GRAD_COLS
+    else:
+        rows = run(full=full, tuned=tuned, smoke=smoke,
+                   iters=1 if smoke else 3)
+        cols = ["fig", "mode", "dtype", "N", "C", "K", "S", "d", "Q", "sec",
+                "gflops", "speedup_vs_library"] + (
+                    ["tuned_vs_default", "tuned_src"] if tuned else [])
     print(",".join(cols))
     for r in rows:
         print(",".join(f"{r.get(c, '')}" if not isinstance(r.get(c), float)
@@ -118,4 +183,4 @@ def main(full: bool = False, tuned: bool = False, smoke: bool = False):
 if __name__ == "__main__":
     import sys
     main(full="--full" in sys.argv, tuned="--tuned" in sys.argv,
-         smoke="--smoke" in sys.argv)
+         smoke="--smoke" in sys.argv, grad="--grad" in sys.argv)

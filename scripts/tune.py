@@ -1,17 +1,21 @@
-"""Pre-populate the conv1d tuning cache over the paper's figure shapes.
+"""Pre-populate the conv1d tuning cache over the paper's figure shapes —
+all three passes (fwd, bwd_data, bwd_weight) per shape.
 
     PYTHONPATH=src python scripts/tune.py --figset fig4            # cost-model only
     PYTHONPATH=src python scripts/tune.py --figset all --measure   # wall-clock search
     PYTHONPATH=src python scripts/tune.py --figset fig5 --full --cache /tmp/tc.json
+    PYTHONPATH=src python scripts/tune.py --smoke                  # CI: tiny shape, 3 passes
 
-Writes one cache entry per (S, Q) cell of the selected figure(s) —
+Writes one cache entry per (S, Q, pass) cell of the selected figure(s) —
 ``repro.tune.presets`` mirrors the sweep benchmark, so afterwards
-``benchmarks/bench_conv1d_sweep.py --tuned`` and any ``backend="auto"``
-call on those shapes hit the cache with no re-measurement.
+``benchmarks/bench_conv1d_sweep.py --tuned`` / ``--grad`` and any
+``backend="auto"`` call (forward *or* ``jax.grad``) on those shapes hits
+the cache with no re-measurement.
 
 Default is the analytic cost model (fast, deterministic); ``--measure``
 runs the median-of-k wall-clock search instead (slow off-TPU: Pallas
-candidates execute in interpret mode).
+candidates execute in interpret mode; backward passes time a ``jax.vjp``
+instance).  ``--passes`` restricts which passes are tuned.
 """
 from __future__ import annotations
 
@@ -20,7 +24,8 @@ import argparse
 import jax.numpy as jnp
 
 from repro import tune
-from repro.tune.presets import FIGSETS, figset_shapes
+from repro.tune.presets import FIGSETS, figset_shapes, smoke_shapes
+from repro.tune.problem import PASSES
 
 
 def main(argv=None):
@@ -32,6 +37,11 @@ def main(argv=None):
                     help="full S/Q grid instead of the CI-sized subset")
     ap.add_argument("--measure", action="store_true",
                     help="wall-clock search (default: cost model only)")
+    ap.add_argument("--passes", default="all",
+                    help="comma list of passes to tune "
+                         f"({','.join(PASSES)}; default all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: one tiny shape, all three passes")
     ap.add_argument("--cache", default=None,
                     help="cache file (default: $REPRO_TUNE_CACHE or "
                          "~/.cache/repro/tune_cache.json)")
@@ -40,20 +50,31 @@ def main(argv=None):
                     help="measured candidates per shape (cost-ranked)")
     args = ap.parse_args(argv)
 
+    passes = list(PASSES) if args.passes == "all" else args.passes.split(",")
+    for p in passes:
+        if p not in PASSES:
+            ap.error(f"unknown pass {p!r}; expected one of {PASSES}")
+
     cache = tune.TuneCache(args.cache) if args.cache else tune.get_default_cache()
-    names = list(FIGSETS) if args.figset == "all" else [args.figset]
+    if args.smoke:
+        work = [("smoke", prob) for prob in smoke_shapes()]
+    else:
+        names = list(FIGSETS) if args.figset == "all" else [args.figset]
+        work = [(name, prob) for name in names
+                for prob in figset_shapes(name, full=args.full)]
     n = 0
-    for name in names:
-        for prob in figset_shapes(name, full=args.full):
-            dtype = jnp.dtype(prob.pop("dtype"))
-            cfg = tune.tune(**prob, dtype=dtype, cache=cache,
+    for name, prob in work:
+        prob = dict(prob)
+        dtype = jnp.dtype(prob.pop("dtype"))
+        for pass_ in passes:
+            cfg = tune.tune(**prob, dtype=dtype, pass_=pass_, cache=cache,
                             measure=args.measure, iters=args.iters,
                             top_k=args.top_k)
             n += 1
             sec = f" {cfg.sec:.3e}s" if cfg.sec is not None else ""
-            print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype}: "
-                  f"{cfg.backend} wblk={cfg.wblk} kblk={cfg.kblk} "
-                  f"[{cfg.source}]{sec}")
+            print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype} "
+                  f"{pass_:>10}: {cfg.backend} wblk={cfg.wblk} "
+                  f"kblk={cfg.kblk} [{cfg.source}]{sec}")
     print(f"\n{n} entries -> {cache.path} ({len(cache)} total)")
 
 

@@ -47,8 +47,11 @@ class DilatedConv1D:
         ``residual`` must match the output shape; ``out_dtype`` overrides
         the output dtype without a separate cast.  ``backend='auto'`` (or
         ``REPRO_CONV_BACKEND=auto``) lets the tuning subsystem pick the
-        backend and wblk/kblk tiles for this (shape, epilogue) instance
-        from its persistent cache; explicit wblk/kblk args override it.
+        backend and tiles for this (shape, epilogue) instance from its
+        persistent cache — **per pass**: under ``jax.grad`` the layer's
+        backward-data and backward-weight kernels each run their own
+        resolved config (DESIGN.md §11), not the forward's tiles.
+        Explicit wblk/kblk args override the forward's choice.
         """
         return kops.conv1d(x, params["w"], bias=params.get("b"),
                            activation=activation, residual=residual,

@@ -8,7 +8,8 @@ tiling (block = WBLK, a multiple of the 128-lane TPU tile) with the *dilated
 footprint* ``F = WBLK + (S-1)*d`` staged HBM->VMEM once per tile via
 overlapping-window (element-indexed) BlockSpecs and reused by all S taps.
 
-Three kernels, mirroring the paper's Algorithms 2-4:
+Three kernels behind one plan-driven entry (``conv1d_pass``), mirroring
+the paper's Algorithms 2-4:
   * ``conv1d_fwd``          - Alg. 2 (also used for Alg. 3 / bwd-data with
                               flipped+transposed weights, see ops.py)
   * ``conv1d_bwd_weight``   - Alg. 4 (sequential-grid accumulation, the TPU
@@ -56,6 +57,27 @@ try:  # TPU compiler params are optional (absent / ignored in interpret mode)
     from jax.experimental.pallas import tpu as pltpu
 except ImportError:  # pragma: no cover
     pltpu = None
+
+
+def conv1d_pass(pass_: str, *args, depthwise: bool = False, **kw):
+    """Single plan-driven entry over the three kernels (Algs. 2-4).
+
+    ``pass_`` ∈ {'fwd', 'bwd_data', 'bwd_weight'} selects the kernel for
+    the dense or (``depthwise=True``) grouped variant; everything else is
+    forwarded verbatim.  bwd-data reuses the forward BRGEMM — Alg. 3 *is*
+    Alg. 2 on the zero-padded cotangent with flipped, transposed weights;
+    the caller (ops.py) arranges that operand transform.  Per-pass tile
+    configs resolved by ``repro.tune`` (wblk + kblk/cblk) arrive here as
+    plain kwargs, so the tuner, the ops-layer VJP, and a direct caller all
+    drive the same dispatch.
+    """
+    if pass_ == "bwd_weight":
+        fn = depthwise_conv1d_bwd_weight if depthwise else conv1d_bwd_weight
+    elif pass_ in ("fwd", "bwd_data"):
+        fn = depthwise_conv1d_fwd if depthwise else conv1d_fwd
+    else:
+        raise ValueError(f"unknown conv pass {pass_!r}")
+    return fn(*args, **kw)
 
 
 def _compiler_params(dimension_semantics: Sequence[str], interpret: bool):

@@ -20,6 +20,14 @@
     the forward when the activation is non-trivial), ``dbias`` is a fused
     reduction inside the bwd-weight kernel, and ``dresidual`` is the masked
     cotangent passed through.
+  * **per-pass execution configs** (``PassConfig``): each backward pass of
+    the custom VJP runs its own resolved (backend, wblk, kblk/cblk) — under
+    ``backend='auto'`` the tuning subsystem resolves all three passes
+    through their own ``ConvProblem`` keys (bwd-data over the transposed
+    (C↔K) GEMM it actually runs, bwd-weight over its sequential grid)
+    instead of the backward inheriting the forward's tiles; without a plan
+    the bwd-data filter tile falls back to the divisor-of-C ``pick_kblk``
+    ladder rather than running untiled.
 
 Blocking bookkeeping lives here: width is padded up to a multiple of the
 width tile WBLK and sliced back, mirroring the paper's "block length 64"
@@ -58,25 +66,55 @@ def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
+class PassConfig(NamedTuple):
+    """Resolved execution config of one pass of the custom VJP (hashable —
+    it travels inside the nondiff ``_FusedSpec``).  ``blk2`` is the pass's
+    second tile knob: the filter tile of the pass's GEMM on the dense path
+    (tiles K for the forward, C for bwd-data's transposed GEMM, unused for
+    bwd-weight), cblk on the depthwise path."""
+    backend: str = "pallas"      # 'pallas' | 'xla'
+    wblk: int | None = None
+    blk2: int | None = None
+
+
+def _as_pass_cfg(cfg) -> PassConfig | None:
+    if cfg is None or isinstance(cfg, PassConfig):
+        return cfg
+    return PassConfig(*cfg)
+
+
 def _resolve_auto(x, *, C, K, S, dilation, padding, wblk, kblk, depthwise,
                   epilogue="none"):
-    """backend='auto': ask the tuner (repro.tune) for backend + tile sizes.
+    """backend='auto': ask the tuner (repro.tune) for a full per-pass plan.
 
-    Runs at trace time on static shape info only.  Cache hit -> cached
-    winner; miss -> measured search iff REPRO_TUNE=1, else the pick_wblk
-    heuristic on the platform-default backend.  Explicit wblk/kblk args
-    still win over the tuner's choice.  ``epilogue`` is the fusion
-    signature (epilogue.signature) — part of the cache key, so a fused
-    conv never reuses the unfused instance's tiles.
+    Runs at trace time on static shape info only.  All three passes (fwd,
+    bwd_data, bwd_weight) resolve through their own ``ConvProblem`` keys.
+    The forward: cache hit -> cached winner; miss -> measured search iff
+    REPRO_TUNE=1, else the heuristic default.  The backward passes resolve
+    from the cache or the static defaults only — an in-place measured
+    search here would tune gradients the program may never compute
+    (forward-only inference traces this same path); measured backward
+    entries come from ``scripts/tune.py`` or an explicit
+    ``tune.get_config(..., pass_=..., allow_measure=True)``.  Explicit
+    wblk/kblk args still win over the tuner's forward choice.
+    ``epilogue`` is the fusion signature (epilogue.signature) — part of
+    every pass's cache key, so a fused conv never reuses the unfused
+    instance's tiles.
+
+    Returns ``(backend, wblk, kblk, (bwd_data_cfg, bwd_weight_cfg))``.
     """
     from repro import tune  # late import: tune.measure calls back into ops
 
     N = x.shape[0]
     Q = x.shape[-1] - (S - 1) * dilation
-    cfg = tune.get_config(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
-                          dtype=x.dtype, padding=padding, depthwise=depthwise,
-                          epilogue=epilogue)
-    return cfg.backend, wblk or cfg.wblk, kblk or cfg.kblk
+    kw = dict(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q, dtype=x.dtype,
+              padding=padding, depthwise=depthwise, epilogue=epilogue)
+    fwd = tune.get_config(**kw)
+    bwd = []
+    for p in ("bwd_data", "bwd_weight"):
+        cfg = tune.get_config(**kw, pass_=p, allow_measure=False)
+        bwd.append(PassConfig(cfg.backend, cfg.wblk, cfg.kblk))
+    return fwd.backend, wblk or fwd.wblk, kblk or fwd.kblk, tuple(bwd)
 
 
 def _pad_amounts(S: int, dilation: int, padding: Padding) -> tuple[int, int]:
@@ -110,6 +148,18 @@ def pick_wblk(Q: int, S: int, dilation: int) -> int:
     return 128
 
 
+def pick_kblk(n_filters: int) -> int:
+    """Divisor-of-n ladder for a pass's filter tile — the static fallback
+    when no tuned per-pass config exists (notably bwd-data, whose
+    transposed GEMM tiles C, not the K its forward tuned for).  Largest
+    ladder entry dividing ``n_filters``; the dimension itself (untiled)
+    only when nothing on the ladder divides it."""
+    for cand in (512, 256, 128, 64, 32, 16, 8):
+        if n_filters % cand == 0:
+            return cand
+    return n_filters
+
+
 def _dtype_name(a) -> str | None:
     return None if a is None else jnp.dtype(a.dtype).name
 
@@ -119,7 +169,8 @@ class _FusedSpec(NamedTuple):
     nondiff argument of the custom_vjp s.  ``blk2`` is kblk for the dense
     path, cblk for the depthwise path.  Dtypes travel as names so the spec
     stays hashable; bias_dtype/residual_dtype double as has-bias/has-residual
-    flags for the bwd rule."""
+    flags for the bwd rule.  ``bwd_data``/``bwd_weight`` are the resolved
+    per-pass configs (None -> static fallback derived in the bwd rule)."""
     dilation: int
     wblk: int
     blk2: int | None
@@ -128,6 +179,8 @@ class _FusedSpec(NamedTuple):
     bias_dtype: str | None
     residual_dtype: str | None
     out_dtype: str | None
+    bwd_data: PassConfig | None = None
+    bwd_weight: PassConfig | None = None
 
     @property
     def out_jnp_dtype(self):
@@ -139,10 +192,11 @@ class _FusedSpec(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-def _plain_fwd_padded(x, w, dilation, wblk, kblk, interpret):
+def _plain_fwd_padded(x, w, dilation, wblk, kblk, interpret,
+                      pass_: str = "fwd"):
     """Epilogue-free forward: x (N, C, W) already logically padded; returns
     (N, K, Q) via the Pallas kernel, handling width round-up to the tile
-    size.  Also the bwd-data engine (Alg. 3)."""
+    size.  Also the bwd-data engine (Alg. 3, ``pass_='bwd_data'``)."""
     N, C, W = x.shape
     S, K, _ = w.shape
     span = (S - 1) * dilation
@@ -150,8 +204,8 @@ def _plain_fwd_padded(x, w, dilation, wblk, kblk, interpret):
     Qp = _round_up(Q, wblk)
     if Qp + span > W:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
-    out = _k.conv1d_fwd(x, w, dilation=dilation, wblk=wblk, kblk=kblk,
-                        interpret=interpret)
+    out = _k.conv1d_pass(pass_, x, w, dilation=dilation, wblk=wblk,
+                         kblk=kblk, interpret=interpret)
     return out[:, :, :Q]
 
 
@@ -169,8 +223,8 @@ def _fused_fwd_padded(spec: _FusedSpec, x, w, bias, residual,
         x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
     if residual is not None and Qp > Q:
         residual = jnp.pad(residual, ((0, 0), (0, 0), (0, Qp - Q)))
-    out = _k.conv1d_fwd(
-        x, w, bias=bias, residual=residual, activation=spec.activation,
+    out = _k.conv1d_pass(
+        "fwd", x, w, bias=bias, residual=residual, activation=spec.activation,
         save_preact=save_preact, dilation=spec.dilation, wblk=spec.wblk,
         kblk=spec.blk2, out_dtype=spec.out_jnp_dtype, interpret=spec.interpret)
     if save_preact:
@@ -234,30 +288,55 @@ def _conv1d_pallas_fwd(spec, x, w, bias, residual):
     return y, (x, w, _vjp_fwd_saved(spec, y, u))
 
 
+def _xla_conv1d_bwd_weight(x, du, *, dilation, with_dbias):
+    """Vendor-library formulation of Alg. 4 (+ the dbias reduction), the
+    bwd-weight engine when the pass's tuned backend is 'xla'."""
+    dw = _ref.conv1d_bwd_weight_ref(x, du, dilation=dilation)
+    if with_dbias:
+        return dw, jnp.sum(du.astype(jnp.float32), axis=(0, 2))
+    return dw
+
+
 def _conv1d_pallas_bwd(spec, res, gout):
     x, w, saved = res
     S, K, C = w.shape
     d = spec.dilation
     span = (S - 1) * d
+    N, Cx, W = x.shape
+    Q = W - span
     # --- epilogue gradient (identity when the epilogue has no activation)
     du = _epilogue_cotangent(spec, saved, gout)
     # --- Alg. 3: bwd-data = fwd BRGEMM on zero-padded du with flipped,
-    # transposed weights (the paper's (S, C, K) layout).
+    # transposed weights (the paper's (S, C, K) layout) — the transposed
+    # (C<->K) GEMM, run under its *own* resolved config, not the forward's.
+    bd = spec.bwd_data or PassConfig("pallas", spec.wblk, None)
     g_pad = jnp.pad(du, ((0, 0), (0, 0), (span, span)))
     w_flip = w[::-1].transpose(0, 2, 1)  # (S, C, K)
-    # kblk tuned for K need not divide C (the bwd-data filter count)
-    dx = _plain_fwd_padded(g_pad, w_flip, d, spec.wblk, None, spec.interpret)
+    if bd.backend == "xla":
+        dx = _ref._xla_conv1d_f32(g_pad, w_flip, d)
+    else:
+        # the pass's filter tile must divide C (bwd-data's filter count);
+        # a kblk tuned for K need not — fall back to the divisor ladder
+        kblk = bd.blk2 if bd.blk2 and C % bd.blk2 == 0 else pick_kblk(C)
+        dx = _plain_fwd_padded(g_pad, w_flip, d, bd.wblk or spec.wblk, kblk,
+                               spec.interpret, pass_="bwd_data")
     dx = dx.astype(x.dtype)
     # --- Alg. 4: bwd-weight kernel (fp32 accumulation), with the bias
-    # gradient fused into the same sequential-grid pass when bias exists.
-    N, Cx, W = x.shape
-    Q = W - span
-    Qp = _round_up(Q, spec.wblk)
-    xp = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W))) if Qp + span > W else x
-    gp = jnp.pad(du, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else du
-    dwout = _k.conv1d_bwd_weight(
-        xp, gp, S=S, dilation=d, wblk=spec.wblk,
-        with_dbias=spec.bias_dtype is not None, interpret=spec.interpret)
+    # gradient fused into the same sequential-grid pass when bias exists —
+    # again under its own per-pass config.
+    bw = spec.bwd_weight or PassConfig("pallas", spec.wblk, None)
+    if bw.backend == "xla":
+        dwout = _xla_conv1d_bwd_weight(
+            x, du, dilation=d, with_dbias=spec.bias_dtype is not None)
+    else:
+        wblk = bw.wblk or spec.wblk
+        Qp = _round_up(Q, wblk)
+        xp = (jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
+              if Qp + span > W else x)
+        gp = jnp.pad(du, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else du
+        dwout = _k.conv1d_pass(
+            "bwd_weight", xp, gp, S=S, dilation=d, wblk=wblk,
+            with_dbias=spec.bias_dtype is not None, interpret=spec.interpret)
     dw, dbias, dres = _epilogue_param_grads(spec, dwout, du)
     return dx, dw.astype(w.dtype), dbias, dres
 
@@ -279,6 +358,8 @@ def conv1d(
     kblk: int | None = None,
     out_dtype=None,
     interpret: bool | None = None,
+    bwd_data_cfg=None,
+    bwd_weight_cfg=None,
 ) -> jax.Array:
     """1D dilated convolution with fused epilogue, paper semantics.
 
@@ -291,11 +372,17 @@ def conv1d(
     dtype (default x.dtype) without an extra cast op.
 
     backend='auto' asks the tuning subsystem (``repro.tune``) to pick the
-    backend and tile sizes for this exact (shape, epilogue) instance; see
-    ``_resolve_auto``.
+    backend and tile sizes **per pass**: the forward's, plus each backward
+    pass's own resolved config for the custom VJP; see ``_resolve_auto``.
+    ``bwd_data_cfg``/``bwd_weight_cfg`` (a ``PassConfig`` or a
+    ``(backend, wblk, kblk)`` tuple) pin a backward pass explicitly,
+    winning over the tuner — the knob ``tune.measure`` uses to time one
+    pass's candidate inside a ``jax.vjp`` instance.
     """
     backend = backend or default_backend()
     activation = _ep.canon(activation)
+    bwd_data_cfg = _as_pass_cfg(bwd_data_cfg)
+    bwd_weight_cfg = _as_pass_cfg(bwd_weight_cfg)
     S, K, C = w.shape
     lo, hi = _pad_amounts(S, dilation, padding)
     if lo or hi:
@@ -307,11 +394,13 @@ def conv1d(
         assert residual.shape == (x.shape[0], K, Q), \
             (residual.shape, (x.shape[0], K, Q))
     if backend == "auto":
-        backend, wblk, kblk = _resolve_auto(
+        backend, wblk, kblk, (auto_bd, auto_bw) = _resolve_auto(
             x, C=C, K=K, S=S, dilation=dilation, padding=padding,
             wblk=wblk, kblk=kblk, depthwise=False,
             epilogue=_ep.signature(bias is not None, activation,
                                    residual is not None))
+        bwd_data_cfg = bwd_data_cfg or auto_bd
+        bwd_weight_cfg = bwd_weight_cfg or auto_bw
     if backend == "ref":
         return _ref.conv1d_fused_ref(x, w, dilation=dilation, bias=bias,
                                      activation=activation, residual=residual,
@@ -325,7 +414,8 @@ def conv1d(
         interpret = _INTERPRET if interpret is None else interpret
         spec = _FusedSpec(dilation, wblk, kblk, interpret, activation,
                           _dtype_name(bias), _dtype_name(residual),
-                          jnp.dtype(out_dtype).name if out_dtype else None)
+                          jnp.dtype(out_dtype).name if out_dtype else None,
+                          bwd_data_cfg, bwd_weight_cfg)
         return _conv1d_pallas(spec, x, w, bias, residual)
     raise ValueError(f"unknown conv backend {backend!r}")
 
@@ -335,7 +425,8 @@ def conv1d(
 # ---------------------------------------------------------------------------
 
 
-def _dw_plain_fwd_padded(x, w, dilation, wblk, cblk, interpret):
+def _dw_plain_fwd_padded(x, w, dilation, wblk, cblk, interpret,
+                         pass_: str = "fwd"):
     N, C, W = x.shape
     S, _ = w.shape
     span = (S - 1) * dilation
@@ -343,8 +434,8 @@ def _dw_plain_fwd_padded(x, w, dilation, wblk, cblk, interpret):
     Qp = _round_up(Q, wblk)
     if Qp + span > W:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
-    out = _k.depthwise_conv1d_fwd(x, w, dilation=dilation, wblk=wblk,
-                                  cblk=cblk, interpret=interpret)
+    out = _k.conv1d_pass(pass_, x, w, depthwise=True, dilation=dilation,
+                         wblk=wblk, cblk=cblk, interpret=interpret)
     return out[:, :, :Q]
 
 
@@ -359,10 +450,11 @@ def _dw_fused_fwd_padded(spec: _FusedSpec, x, w, bias, residual,
         x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
     if residual is not None and Qp > Q:
         residual = jnp.pad(residual, ((0, 0), (0, 0), (0, Qp - Q)))
-    out = _k.depthwise_conv1d_fwd(
-        x, w, bias=bias, residual=residual, activation=spec.activation,
-        save_preact=save_preact, dilation=spec.dilation, wblk=spec.wblk,
-        cblk=spec.blk2, out_dtype=spec.out_jnp_dtype, interpret=spec.interpret)
+    out = _k.conv1d_pass(
+        "fwd", x, w, depthwise=True, bias=bias, residual=residual,
+        activation=spec.activation, save_preact=save_preact,
+        dilation=spec.dilation, wblk=spec.wblk, cblk=spec.blk2,
+        out_dtype=spec.out_jnp_dtype, interpret=spec.interpret)
     if save_preact:
         y, u = out
         return y[:, :, :Q], u[:, :, :Q]
@@ -383,23 +475,53 @@ def _dw_conv1d_pallas_fwd(spec, x, w, bias, residual):
     return y, (x, w, _vjp_fwd_saved(spec, y, u))
 
 
+def _xla_dw_bwd_weight(x, du, *, dilation, with_dbias):
+    """Vendor-library formulation of the depthwise Alg. 4 (+ dbias)."""
+    dw = _ref.depthwise_conv1d_bwd_weight_ref(x, du, dilation=dilation)
+    if with_dbias:
+        return dw, jnp.sum(du.astype(jnp.float32), axis=(0, 2))
+    return dw
+
+
+def _dw_legal_cblk(cblk, C):
+    """A cblk is usable only if it divides C; None lets the kernel pick."""
+    return cblk if cblk and C % cblk == 0 else None
+
+
 def _dw_conv1d_pallas_bwd(spec, res, gout):
     x, w, saved = res
     S, C = w.shape
     d = spec.dilation
     span = (S - 1) * d
-    du = _epilogue_cotangent(spec, saved, gout)
-    g_pad = jnp.pad(du, ((0, 0), (0, 0), (span, span)))
-    dx = _dw_plain_fwd_padded(g_pad, w[::-1], d, spec.wblk, spec.blk2,
-                              spec.interpret).astype(x.dtype)
     N, _, W = x.shape
     Q = W - span
-    Qp = _round_up(Q, spec.wblk)
-    xp = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W))) if Qp + span > W else x
-    gp = jnp.pad(du, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else du
-    dwout = _k.depthwise_conv1d_bwd_weight(
-        xp, gp, S=S, dilation=d, wblk=spec.wblk, cblk=spec.blk2,
-        with_dbias=spec.bias_dtype is not None, interpret=spec.interpret)
+    du = _epilogue_cotangent(spec, saved, gout)
+    # --- bwd-data on flipped taps, under its own per-pass config
+    bd = spec.bwd_data or PassConfig("pallas", spec.wblk, spec.blk2)
+    g_pad = jnp.pad(du, ((0, 0), (0, 0), (span, span)))
+    if bd.backend == "xla":
+        dx = _ref._xla_depthwise_conv1d_f32(g_pad, w[::-1], d)
+    else:
+        dx = _dw_plain_fwd_padded(
+            g_pad, w[::-1], d, bd.wblk or spec.wblk,
+            _dw_legal_cblk(bd.blk2, C) or _dw_legal_cblk(spec.blk2, C),
+            spec.interpret, pass_="bwd_data")
+    dx = dx.astype(x.dtype)
+    # --- bwd-weight (sequential grid), under its own per-pass config
+    bw = spec.bwd_weight or PassConfig("pallas", spec.wblk, spec.blk2)
+    if bw.backend == "xla":
+        dwout = _xla_dw_bwd_weight(
+            x, du, dilation=d, with_dbias=spec.bias_dtype is not None)
+    else:
+        wblk = bw.wblk or spec.wblk
+        Qp = _round_up(Q, wblk)
+        xp = (jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
+              if Qp + span > W else x)
+        gp = jnp.pad(du, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else du
+        dwout = _k.conv1d_pass(
+            "bwd_weight", xp, gp, depthwise=True, S=S, dilation=d, wblk=wblk,
+            cblk=_dw_legal_cblk(bw.blk2, C) or _dw_legal_cblk(spec.blk2, C),
+            with_dbias=spec.bias_dtype is not None, interpret=spec.interpret)
     dw, dbias, dres = _epilogue_param_grads(spec, dwout, du)
     return dx, dw.astype(w.dtype), dbias, dres
 
@@ -421,6 +543,8 @@ def depthwise_conv1d(
     cblk: int | None = None,
     out_dtype=None,
     interpret: bool | None = None,
+    bwd_data_cfg=None,
+    bwd_weight_cfg=None,
 ) -> jax.Array:
     """Depthwise 1D conv with fused epilogue.  x: (N, C, W), w: (S, C)
     -> (N, C, Q); bias (C,), residual (N, C, Q), same epilogue order as
@@ -428,10 +552,14 @@ def depthwise_conv1d(
     epilogue math, output in ``out_dtype`` or x.dtype (whatever the weight
     dtype — the mixed-dtype contract shared with the dense path).
 
-    backend='auto' defers to the tuning subsystem, as in ``conv1d``.
+    backend='auto' defers to the tuning subsystem, as in ``conv1d``, and
+    resolves each backward pass's config through its own problem key;
+    ``bwd_data_cfg``/``bwd_weight_cfg`` pin a pass explicitly.
     """
     backend = backend or default_backend()
     activation = _ep.canon(activation)
+    bwd_data_cfg = _as_pass_cfg(bwd_data_cfg)
+    bwd_weight_cfg = _as_pass_cfg(bwd_weight_cfg)
     S, C = w.shape
     lo, hi = _pad_amounts(S, dilation, padding)
     if lo or hi:
@@ -443,11 +571,13 @@ def depthwise_conv1d(
         assert residual.shape == (x.shape[0], C, Q), \
             (residual.shape, (x.shape[0], C, Q))
     if backend == "auto":
-        backend, wblk, cblk = _resolve_auto(
+        backend, wblk, cblk, (auto_bd, auto_bw) = _resolve_auto(
             x, C=C, K=C, S=S, dilation=dilation, padding=padding,
             wblk=wblk, kblk=cblk, depthwise=True,
             epilogue=_ep.signature(bias is not None, activation,
                                    residual is not None))
+        bwd_data_cfg = bwd_data_cfg or auto_bd
+        bwd_weight_cfg = bwd_weight_cfg or auto_bw
     if backend == "ref":
         return _ref.depthwise_conv1d_fused_ref(
             x, w, dilation=dilation, bias=bias, activation=activation,
@@ -461,6 +591,7 @@ def depthwise_conv1d(
         interpret = _INTERPRET if interpret is None else interpret
         spec = _FusedSpec(dilation, wblk, cblk, interpret, activation,
                           _dtype_name(bias), _dtype_name(residual),
-                          jnp.dtype(out_dtype).name if out_dtype else None)
+                          jnp.dtype(out_dtype).name if out_dtype else None,
+                          bwd_data_cfg, bwd_weight_cfg)
         return _dw_conv1d_pallas(spec, x, w, bias, residual)
     raise ValueError(f"unknown conv backend {backend!r}")

@@ -86,6 +86,24 @@ def conv1d_bwd_weight_ref(
     return jnp.stack(taps, axis=0)  # (S, K, C) fp32
 
 
+def depthwise_conv1d_bwd_weight_ref(
+    x: jax.Array, gout: jax.Array, *, dilation: int = 1
+) -> jax.Array:
+    """Depthwise Alg. 4: dW[s,c] = sum_{n,q} gout[n,c,q] * x[n,c,q + s*d].
+
+    x: (N, C, W), gout: (N, C, Q) -> (S, C) fp32.
+    """
+    N, C, Q = gout.shape
+    N2, C2, W = x.shape
+    S = (W - Q) // dilation + 1
+    g32 = gout.astype(jnp.float32)
+    taps = []
+    for s in range(S):
+        xs = jax.lax.dynamic_slice_in_dim(x, s * dilation, Q, axis=2)
+        taps.append(jnp.sum(g32 * xs.astype(jnp.float32), axis=(0, 2)))
+    return jnp.stack(taps, axis=0)  # (S, C) fp32
+
+
 def _depthwise_conv1d_f32(x: jax.Array, w: jax.Array, dilation: int) -> jax.Array:
     S, C = w.shape
     N, Cx, W = x.shape

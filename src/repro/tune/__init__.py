@@ -1,27 +1,38 @@
 """Autotuning subsystem for the conv1d layer (cost-model + measured search).
 
-The paper's generality claim rests on picking good blocking *per shape*
-(LIBXSMM does this on CPU; cuDNN does it by algorithm dispatch).  This
-package replaces the static ``pick_wblk`` ladder with:
+The paper's generality claim rests on picking good blocking *per shape and
+per pass* (LIBXSMM does this on CPU for all three of the layer's kernels;
+cuDNN does it by algorithm dispatch).  The package's currency is the
+``ConvProblem`` descriptor — one pass (fwd / bwd_data / bwd_weight) of one
+layer instance — and every layer below speaks it:
 
-  * ``space``    — legal (backend, wblk, kblk) candidates under the kernel
-                   contract and a VMEM-footprint budget;
+  * ``problem``  — the descriptor + per-pass derived GEMM views;
+  * ``space``    — legal (backend, wblk, kblk) candidates under the pass's
+                   kernel contract and a VMEM-footprint budget;
   * ``cost``     — analytic roofline ranking (prunes before measuring, and
-                   is the whole answer when measurement is disabled);
-  * ``measure``  — jit + warmup + median-of-k wall-clock harness;
-  * ``cache``    — persistent JSON cache keyed by
-                   (device_kind, dtype, N, C, K, S, dilation, Q, padding).
+                   is the whole answer when measurement is disabled), with
+                   a bwd-weight model reflecting its sequential grid;
+  * ``measure``  — jit + warmup + median-of-k wall-clock harness; backward
+                   problems time a ``jax.vjp`` instance with the candidate
+                   pinned on the target pass;
+  * ``cache``    — persistent JSON cache; backward passes append a
+                   ``|pass:`` tag, untagged legacy keys keep resolving
+                   forward instances.
 
 Entry points:
 
-  * ``get_config(...)`` — what ``ops.conv1d(backend="auto")`` calls per
-    shape at trace time: cache hit -> cached winner; miss -> measured
-    search *only* if tuning is enabled (``REPRO_TUNE=1`` or
-    ``allow_measure=True``), else the heuristic default (``pick_wblk``
-    ladder + default backend) without touching the cache.
-  * ``tune(...)`` — explicit search: enumerate, cost-rank, measure the
-    top-k, persist the winner.  ``scripts/tune.py`` drives this over the
-    paper's figure shapes.
+  * ``get_config(...)`` / ``get_config_for(problem)`` — what
+    ``ops.conv1d(backend="auto")`` resolves per pass at trace time: cache
+    hit -> cached winner; miss -> measured search *only* if tuning is
+    enabled (``REPRO_TUNE=1`` or ``allow_measure=True``), else the
+    heuristic default (``pick_wblk`` ladder + default backend) without
+    touching the cache.
+  * ``get_plan(...)`` — all three passes of one layer instance at once,
+    each resolved through its own problem key; this is what the custom
+    VJP's per-pass configs come from.
+  * ``tune(...)`` / ``tune_problem(problem)`` — explicit search: enumerate,
+    cost-rank, measure the top-k, persist the winner.  ``scripts/tune.py``
+    drives this over the paper's figure shapes × all three passes.
 """
 from __future__ import annotations
 
@@ -37,6 +48,7 @@ from . import measure as _measure
 from . import presets  # noqa: F401  (re-exported work-lists)
 from . import space as _space
 from .cache import TuneCache, cache_key, get_default_cache, reset_default_cache
+from .problem import PASSES, ConvProblem
 from .space import Candidate
 
 ENV_TUNE = "REPRO_TUNE"
@@ -46,7 +58,7 @@ ENV_TUNE = "REPRO_TUNE"
 class TunedConfig:
     backend: str                 # 'pallas' | 'xla'
     wblk: int | None
-    kblk: int | None             # cblk for depthwise
+    kblk: int | None             # the pass's second tile knob (kblk/cblk)
     source: str                  # 'cache' | 'measured' | 'cost' | 'default'
     sec: float | None = None     # measured seconds (if any)
 
@@ -59,96 +71,126 @@ def measurement_enabled() -> bool:
     return os.environ.get(ENV_TUNE) == "1"
 
 
-def _problem_key(*, N, C, K, S, dilation, Q, dtype, padding, depthwise,
-                 epilogue="none"):
-    return cache_key(device_kind=device_kind(), dtype=str(jax.numpy.dtype(dtype)),
-                     N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
-                     padding=padding, depthwise=depthwise, epilogue=epilogue)
+def _make_problem(*, N, C, K, S, dilation, Q, dtype, padding="VALID",
+                  depthwise=False, epilogue="none",
+                  pass_="fwd") -> ConvProblem:
+    return ConvProblem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
+                       dtype=str(jax.numpy.dtype(dtype)), padding=padding,
+                       depthwise=depthwise, epilogue=epilogue, pass_=pass_)
 
 
-def _default_config(Q: int, S: int, dilation: int) -> TunedConfig:
+def _default_config(prob: ConvProblem) -> TunedConfig:
     from repro.kernels import ops  # late import: ops dispatches into tune
 
     backend = "pallas" if jax.default_backend() == "tpu" else "xla"
-    return TunedConfig(backend, ops.pick_wblk(Q, S, dilation), None, "default")
+    blk2 = None
+    if prob.pass_ == "bwd_data" and not prob.depthwise:
+        # never run the transposed GEMM untiled on its filter dimension:
+        # the divisor-of-C ladder is the static fallback
+        blk2 = ops.pick_kblk(prob.C)
+    return TunedConfig(backend,
+                       ops.pick_wblk(prob.q_out, prob.S, prob.dilation),
+                       blk2, "default")
 
 
-def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
-         padding: str = "VALID", depthwise: bool = False,
-         epilogue: str = "none",
-         cache: TuneCache | None = None, measure: bool = True,
-         top_k: int = 4, iters: int = 5, warmup: int = 2) -> TunedConfig:
-    """Search the candidate space for one problem and persist the winner.
+def tune_problem(prob: ConvProblem, *, cache: TuneCache | None = None,
+                 measure: bool = True, top_k: int = 4, iters: int = 5,
+                 warmup: int = 2) -> TunedConfig:
+    """Search the candidate space for one problem (one pass) and persist
+    the winner under the problem's own key.
 
     With ``measure=False`` the analytic cost model alone picks (source
     'cost'); otherwise the cost-ranked top-k candidates are wall-clock
-    timed and the median-fastest wins (source 'measured').  ``epilogue``
-    is the fusion signature (``repro.kernels.epilogue.signature``): it
-    shapes the candidate space (residual tile VMEM), the cost model
-    (epilogue traffic), the timed call, and the cache key.
+    timed and the median-fastest wins (source 'measured') — a forward
+    problem times the forward call, a backward problem times the jitted
+    ``jax.vjp`` cotangent pull with the candidate pinned on its pass.
     """
     if cache is None:  # NOT `or`: an empty TuneCache is falsy (__len__)
         cache = get_default_cache()
-    dtype_bytes = jax.numpy.dtype(dtype).itemsize
-    cands = _space.enumerate_candidates(
-        C=C, K=K, S=S, dilation=dilation, Q=Q, dtype_bytes=dtype_bytes,
-        depthwise=depthwise, epilogue=epilogue)
-    ranked = _cost.rank(cands, N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
-                        dtype_bytes=dtype_bytes, device_kind=device_kind(),
-                        depthwise=depthwise, epilogue=epilogue)
+    cands = _space.enumerate_candidates(prob)
+    ranked = _cost.rank(cands, prob, device_kind=device_kind())
     if measure:
-        timed = [(
-            _measure.time_candidate(c, N=N, C=C, K=K, S=S, dilation=dilation,
-                                    Q=Q, dtype=dtype, padding=padding,
-                                    iters=iters, warmup=warmup,
-                                    depthwise=depthwise, epilogue=epilogue), c)
-            for c in ranked[:top_k]]
+        timed = [(_measure.time_candidate(c, prob, iters=iters,
+                                          warmup=warmup), c)
+                 for c in ranked[:top_k]]
         sec, best = min(timed, key=lambda t: t[0])
         cfg = TunedConfig(best.backend, best.wblk, best.kblk, "measured", sec)
     else:
         best = ranked[0]
         cfg = TunedConfig(best.backend, best.wblk, best.kblk, "cost")
-    key = _problem_key(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
-                       dtype=dtype, padding=padding, depthwise=depthwise,
-                       epilogue=epilogue)
-    cache.put(key, {"backend": cfg.backend, "wblk": cfg.wblk,
-                    "kblk": cfg.kblk, "source": cfg.source, "sec": cfg.sec})
+    cache.put(prob.key(device_kind()),
+              {"backend": cfg.backend, "wblk": cfg.wblk,
+               "kblk": cfg.kblk, "source": cfg.source, "sec": cfg.sec})
     return cfg
 
 
-def get_config(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
-               dtype, padding: str = "VALID", depthwise: bool = False,
-               epilogue: str = "none",
-               cache: TuneCache | None = None,
-               allow_measure: bool | None = None) -> TunedConfig:
-    """Resolve the config for one problem: cache -> (maybe) tune -> default.
+def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
+         padding: str = "VALID", depthwise: bool = False,
+         epilogue: str = "none", pass_: str = "fwd",
+         cache: TuneCache | None = None, measure: bool = True,
+         top_k: int = 4, iters: int = 5, warmup: int = 2) -> TunedConfig:
+    """Keyword spelling of ``tune_problem`` (shapes in forward-layer
+    coordinates; ``pass_`` selects the kernel being tuned)."""
+    prob = _make_problem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
+                         dtype=dtype, padding=padding, depthwise=depthwise,
+                         epilogue=epilogue, pass_=pass_)
+    return tune_problem(prob, cache=cache, measure=measure, top_k=top_k,
+                        iters=iters, warmup=warmup)
+
+
+def get_config_for(prob: ConvProblem, *, cache: TuneCache | None = None,
+                   allow_measure: bool | None = None) -> TunedConfig:
+    """Resolve one problem: cache -> (maybe) tune -> default.
 
     A cache hit never re-measures.  On a miss, a measured search runs only
     when allowed (``REPRO_TUNE=1`` or ``allow_measure=True``); otherwise the
     heuristic default is returned and the cache is left untouched, so a
-    later real tuning run can still fill it.  Fused and unfused instances
-    of the same shape resolve independently (``epilogue`` is in the key).
+    later real tuning run can still fill it.  Fused/unfused instances and
+    the three passes of one shape all resolve independently (epilogue and
+    pass are both in the key).
     """
     if cache is None:  # NOT `or`: an empty TuneCache is falsy (__len__)
         cache = get_default_cache()
-    key = _problem_key(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
-                       dtype=dtype, padding=padding, depthwise=depthwise,
-                       epilogue=epilogue)
-    hit = cache.get(key)
+    hit = cache.get(prob.key(device_kind()))
     if hit is not None:
         return TunedConfig(hit["backend"], hit.get("wblk"), hit.get("kblk"),
                            "cache", hit.get("sec"))
     if allow_measure is None:
         allow_measure = measurement_enabled()
     if allow_measure:
-        return tune(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q, dtype=dtype,
-                    padding=padding, depthwise=depthwise, epilogue=epilogue,
-                    cache=cache)
-    return _default_config(Q, S, dilation)
+        return tune_problem(prob, cache=cache)
+    return _default_config(prob)
+
+
+def get_config(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
+               dtype, padding: str = "VALID", depthwise: bool = False,
+               epilogue: str = "none", pass_: str = "fwd",
+               cache: TuneCache | None = None,
+               allow_measure: bool | None = None) -> TunedConfig:
+    """Keyword spelling of ``get_config_for``."""
+    prob = _make_problem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
+                         dtype=dtype, padding=padding, depthwise=depthwise,
+                         epilogue=epilogue, pass_=pass_)
+    return get_config_for(prob, cache=cache, allow_measure=allow_measure)
+
+
+def get_plan(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
+             dtype, padding: str = "VALID", depthwise: bool = False,
+             epilogue: str = "none", cache: TuneCache | None = None,
+             allow_measure: bool | None = None) -> dict[str, TunedConfig]:
+    """Resolve all three passes of one layer instance, each through its own
+    problem key — what ``backend='auto'`` hands the custom VJP."""
+    base = _make_problem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
+                         dtype=dtype, padding=padding, depthwise=depthwise,
+                         epilogue=epilogue)
+    return {p: get_config_for(base.with_pass(p), cache=cache,
+                              allow_measure=allow_measure)
+            for p in PASSES}
 
 
 __all__ = [
-    "Candidate", "TuneCache", "TunedConfig", "cache_key", "device_kind",
-    "get_config", "get_default_cache", "measurement_enabled", "presets",
-    "reset_default_cache", "tune",
+    "Candidate", "ConvProblem", "PASSES", "TuneCache", "TunedConfig",
+    "cache_key", "device_kind", "get_config", "get_config_for",
+    "get_default_cache", "get_plan", "measurement_enabled", "presets",
+    "reset_default_cache", "tune", "tune_problem",
 ]

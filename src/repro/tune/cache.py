@@ -17,7 +17,10 @@ Key versioning: a fused instance appends its epilogue signature
 (``|ep:b+relu+r``, see ``repro.kernels.epilogue.signature``); the unfused
 signature appends nothing, so keys written before epilogue fusion existed
 keep resolving exactly the instances they were measured for, and fused
-shapes always get distinct entries.
+shapes always get distinct entries.  The same rule covers passes: a
+backward pass appends ``|pass:bwd_data`` / ``|pass:bwd_weight`` while the
+forward appends nothing, so untagged legacy keys keep resolving exactly
+the forward instances they were measured for (DESIGN.md §11).
 
 Path resolution: explicit argument > ``REPRO_TUNE_CACHE`` env var >
 ``~/.cache/repro/tune_cache.json``.  Writes are atomic (tmp file + rename)
@@ -42,12 +45,16 @@ def default_cache_path() -> str:
 
 def cache_key(*, device_kind: str, dtype: str, N: int, C: int, K: int,
               S: int, dilation: int, Q: int, padding: str,
-              depthwise: bool = False, epilogue: str = "none") -> str:
+              depthwise: bool = False, epilogue: str = "none",
+              pass_: str = "fwd") -> str:
     kind = "dw" if depthwise else "dense"
     base = (f"{device_kind}|{dtype}|N{N}|C{C}|K{K}|S{S}|d{dilation}"
             f"|Q{Q}|{padding}|{kind}")
     # unfused -> legacy key form (pre-epilogue caches stay readable)
-    return base if epilogue in (None, "", "none") else f"{base}|ep:{epilogue}"
+    if epilogue not in (None, "", "none"):
+        base = f"{base}|ep:{epilogue}"
+    # forward -> legacy key form (pre-pass-aware caches stay readable)
+    return base if pass_ in (None, "", "fwd") else f"{base}|pass:{pass_}"
 
 
 class TuneCache:

@@ -1,15 +1,26 @@
-"""Analytic roofline cost model for ranking tuner candidates.
+"""Analytic roofline cost model for ranking tuner candidates — pass-aware.
 
-Estimates wall-clock for each (backend, wblk, kblk) candidate from three
-terms and returns ``max(compute, memory) + grid overhead``:
+Estimates wall-clock for each (backend, wblk, kblk) candidate of a
+``ConvProblem`` from three terms and returns
+``max(compute, memory) + grid overhead``:
 
-  * compute — useful MACs *on the padded width* ``Qp = round_up(Q, wblk)``
-    (``repro.roofline.flops.conv1d_flops``), so tiles that round a small Q
-    far up are charged for the wasted columns;
-  * memory — modeled HBM traffic.  The Pallas grid iterates width tiles
-    innermost, so the weight block stays VMEM-resident across a width sweep
-    while the input footprint ``F = WBLK + (S-1)*d`` is re-fetched once per
-    (batch, filter-tile, width-tile) cell: smaller kblk ⇒ more passes over x;
+  * compute — useful MACs *on the padded width* ``Qp = round_up(q, wblk)``
+    against the pass's output width ``q = problem.q_out`` (bwd-data is one
+    span wider than the forward), so tiles that round a small q far up are
+    charged for the wasted columns;
+  * memory — modeled HBM traffic of the pass:
+      - forward-shaped passes (fwd, bwd-data) iterate width tiles
+        innermost, so the tap block stays VMEM-resident across a width
+        sweep while the input footprint ``F = WBLK + (S-1)*d`` is
+        re-fetched once per (batch, filter-tile, width-tile) cell: smaller
+        kblk ⇒ more passes over the staged operand (x, or the K-row
+        cotangent for bwd-data's transposed GEMM);
+      - the bwd-weight pass runs a **sequential grid**: the fp32 gradient
+        block is revisited every cell (VMEM-resident, written back once),
+        there is no width-parallel reuse to win back, and each cell stages
+        one input footprint and one cotangent tile.  A sequential-grid
+        derate reflects that its cells cannot overlap the way the
+        forward's parallel grid does;
   * overhead — a fixed per-grid-cell cost (launch/bookkeeping), the
     tie-breaker that prefers fewer, larger tiles when compute and traffic
     are identical.
@@ -25,6 +36,7 @@ import dataclasses
 from repro.kernels import epilogue as _epi
 from repro.roofline.flops import conv1d_flops, conv1d_min_bytes
 
+from .problem import ConvProblem
 from .space import Candidate, round_up
 
 CELL_OVERHEAD_SEC = 1e-7        # per grid cell: launch / loop bookkeeping
@@ -38,6 +50,9 @@ EFF_PALLAS_TPU = 0.8
 EFF_PALLAS_INTERPRET = 1e-3
 EFF_XLA_TPU = 0.45
 EFF_XLA_HOST = 0.5
+# bwd-weight's sequential grid serializes its cells (each revisits the
+# shared gradient block), losing the forward's cross-cell overlap.
+EFF_SEQ_GRID = 0.6
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,54 +78,84 @@ def peaks_for(device_kind: str) -> Peaks:
     return DEVICE_PEAKS["cpu"]
 
 
-def estimate_seconds(cand: Candidate, *, N: int, C: int, K: int, S: int,
-                     dilation: int, Q: int, dtype_bytes: int,
-                     device_kind: str = "cpu",
-                     depthwise: bool = False,
-                     epilogue: str = "none") -> float:
+def estimate_seconds(cand: Candidate, prob: ConvProblem, *,
+                     device_kind: str = "cpu") -> float:
     peaks = peaks_for(device_kind)
     is_tpu = "tpu" in device_kind.lower() or device_kind.lower().startswith("v")
-    n_filters = C if depthwise else K
-    has_bias, act, has_residual = _epi.parse(epilogue)
-    # depthwise is one MAC chain per channel: K plays no contraction role
-    flops = conv1d_flops(N, C, 1 if depthwise else K, S, Q)
-    out_elems = N * n_filters * Q
+    db = prob.dtype_bytes
+    nf = prob.n_filters
+    q = prob.q_out
+    has_bias, _, has_residual = _epi.parse(prob.pass_epilogue)
+    # every pass does the layer's MAC count once (depthwise is one MAC
+    # chain per channel: K plays no contraction role)
+    flops = conv1d_flops(prob.N, prob.C, 1 if prob.depthwise else prob.K,
+                         prob.S, q)
+    out_elems = prob.N * nf * q
 
     if cand.backend != "pallas":
         eff = EFF_XLA_TPU if is_tpu else EFF_XLA_HOST
-        mem = conv1d_min_bytes(N, C, n_filters, S, Q, dilation, dtype_bytes)
-        # ops.conv1d applies the epilogue as jnp ops inside the same jit, so
-        # XLA fuses it too: like the Pallas kernel, the only extra HBM
-        # traffic is the residual operand read (+ the bias vector, noise).
-        # Charging per-op passes here would mis-rank xla vs pallas relative
-        # to what measure.time_candidate actually times.
-        mem += dtype_bytes * (has_residual * out_elems + has_bias * n_filters)
+        if prob.pass_ == "bwd_weight":
+            # reads x and the cotangent once, writes the fp32 block once
+            mem = (db * (prob.N * prob.C * (prob.Q + prob.span)
+                         + prob.N * nf * prob.Q)
+                   + 4 * prob.S * nf * (1 if prob.depthwise else prob.C))
+        else:
+            mem = conv1d_min_bytes(prob.N, prob.contraction, nf, prob.S, q,
+                                   prob.dilation, db)
+        # ops applies the forward epilogue as jnp ops inside the same jit,
+        # so XLA fuses it too: the only extra HBM traffic is the residual
+        # operand read (+ the bias vector, noise).  Charging per-op passes
+        # here would mis-rank xla vs pallas relative to what
+        # measure.time_candidate actually sees.
+        mem += db * (has_residual * out_elems + has_bias * nf)
         # the derate applies to the whole pass: a generic library misses
         # peak on both the compute and the traffic axis
         return max(flops / peaks.flops_per_s, mem / peaks.bytes_per_s) / eff
 
-    wblk, kblk = cand.wblk, cand.kblk
-    Qp = round_up(Q, wblk)
-    flops *= Qp / Q             # padded columns are computed and discarded
-    F = wblk + (S - 1) * dilation
+    wblk = cand.wblk
+    Qp = round_up(q, wblk)
+    flops *= Qp / q             # padded columns are computed and discarded
+    F = wblk + prob.span
     q_tiles = Qp // wblk
-    k_tiles = max(1, n_filters // kblk)
-    if depthwise:
-        x_traffic = N * k_tiles * q_tiles * kblk * F          # cblk rows of F
+    eff = EFF_PALLAS_TPU if is_tpu else EFF_PALLAS_INTERPRET
+
+    if prob.pass_ == "bwd_weight":
+        # sequential grid: the fp32 gradient block stays VMEM-resident (one
+        # writeback), each cell re-stages one footprint + one cotangent tile
+        if prob.depthwise:
+            cblk = cand.kblk or min(prob.C, 512)
+            c_tiles = max(1, prob.C // cblk)
+            cells = prob.N * q_tiles * c_tiles
+            dw_elems = prob.S * prob.C
+        else:
+            cells = prob.N * q_tiles
+            dw_elems = prob.S * prob.K * prob.C
+        x_traffic = prob.N * q_tiles * prob.C * F
+        g_traffic = prob.N * nf * Qp
+        mem = db * (x_traffic + g_traffic) + 4 * dw_elems
+        return (max(flops / peaks.flops_per_s, mem / peaks.bytes_per_s)
+                / (eff * EFF_SEQ_GRID) + cells * CELL_OVERHEAD_SEC)
+
+    # forward-shaped passes (fwd / bwd-data's transposed GEMM)
+    nb = cand.kblk or prob.blk2_dim
+    b_tiles = max(1, prob.blk2_dim // nb)
+    if prob.depthwise:
+        x_traffic = prob.N * b_tiles * q_tiles * nb * F     # cblk rows of F
     else:
-        x_traffic = N * k_tiles * q_tiles * C * F             # C rows per cell
-    w_traffic = S * n_filters * (1 if depthwise else C)
-    out_traffic = N * n_filters * Qp
+        x_traffic = prob.N * b_tiles * q_tiles * prob.contraction * F
+    w_traffic = prob.S * nf * (1 if prob.depthwise else prob.contraction)
+    out_traffic = prob.N * nf * Qp
     # fused epilogue rides the hot accumulator: only the residual operand
     # adds HBM traffic (one read per output tile); bias is noise
-    ep_traffic = (has_residual * N * n_filters * Qp) + has_bias * n_filters
-    mem = dtype_bytes * (x_traffic + w_traffic + out_traffic + ep_traffic)
-    cells = N * k_tiles * q_tiles
-    eff = EFF_PALLAS_TPU if is_tpu else EFF_PALLAS_INTERPRET
+    ep_traffic = (has_residual * prob.N * nf * Qp) + has_bias * nf
+    mem = db * (x_traffic + w_traffic + out_traffic + ep_traffic)
+    cells = prob.N * b_tiles * q_tiles
     return (max(flops / peaks.flops_per_s, mem / peaks.bytes_per_s) / eff
             + cells * CELL_OVERHEAD_SEC)
 
 
-def rank(cands: list[Candidate], **problem) -> list[Candidate]:
+def rank(cands: list[Candidate], prob: ConvProblem, *,
+         device_kind: str = "cpu") -> list[Candidate]:
     """Candidates sorted cheapest-first under the analytic model."""
-    return sorted(cands, key=lambda c: estimate_seconds(c, **problem))
+    return sorted(cands, key=lambda c: estimate_seconds(
+        c, prob, device_kind=device_kind))

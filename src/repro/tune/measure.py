@@ -1,4 +1,4 @@
-"""Wall-clock measurement of tuner candidates.
+"""Wall-clock measurement of tuner candidates — pass-aware.
 
 jit + warmup (compile excluded) + median-of-k with ``block_until_ready``,
 the same discipline as ``benchmarks/common.time_fn``.  Interpret-safe: the
@@ -6,6 +6,13 @@ candidate is executed through ``repro.kernels.ops``, which runs Pallas in
 interpret mode off-TPU, so a measured search on the CPU container ranks the
 *formulation* honestly (and the xla backend is the fast CPU path, exactly
 what the tuner should pick there).
+
+A forward problem times the forward call with the candidate's
+backend/tiles.  A **backward problem** times a ``jax.vjp`` instance: the
+forward runs at defaults, the candidate's config is pinned onto the target
+pass only (the other backward pass stays at its default), and the jitted
+cotangent application is what the clock sees — so candidate-to-candidate
+differences are attributable to the pass being tuned.
 """
 from __future__ import annotations
 
@@ -15,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .problem import ConvProblem
 from .space import Candidate
 
 
@@ -30,43 +38,59 @@ def median_time(fn, *args, iters: int = 5, warmup: int = 2) -> float:
     return float(np.median(ts))
 
 
-def time_candidate(cand: Candidate, *, N: int, C: int, K: int, S: int,
-                   dilation: int, Q: int, dtype, padding: str = "VALID",
-                   iters: int = 5, warmup: int = 2, depthwise: bool = False,
-                   epilogue: str = "none", seed: int = 0) -> float:
-    """Seconds per forward pass of one candidate on a random problem
-    instance.  The input width is chosen so the output width is Q under the
-    given padding mode (VALID gets the pre-padded kernel contract).
-    ``epilogue`` (a ``repro.kernels.epilogue`` signature) makes the timed
-    call carry the same fused bias/activation/residual as the instance
-    being tuned."""
+def _problem_operands(prob: ConvProblem, seed: int):
+    """Random layer operands for one problem instance.  The input width is
+    chosen so the output width is Q under the given padding mode (VALID
+    gets the pre-padded kernel contract)."""
     from repro.kernels import epilogue as _ep
+
+    has_bias, activation, has_residual = _ep.parse(prob.epilogue)
+    n_filters = prob.C if prob.depthwise else prob.K
+    dtype = jnp.dtype(prob.dtype)
+    W = prob.Q + prob.span if prob.padding == "VALID" else prob.Q
+    kx, kw = jax.random.split(jax.random.key(seed))
+    x = jax.random.normal(kx, (prob.N, prob.C, W), jnp.float32).astype(dtype)
+    wshape = (prob.S, prob.C) if prob.depthwise else (prob.S, prob.K, prob.C)
+    w = (jax.random.normal(kw, wshape, jnp.float32) * 0.1).astype(dtype)
+    bias = jnp.zeros((n_filters,), dtype) if has_bias else None
+    residual = (jnp.zeros((prob.N, n_filters, prob.Q), dtype)
+                if has_residual else None)
+    return x, w, bias, residual, activation
+
+
+def time_candidate(cand: Candidate, prob: ConvProblem, *, iters: int = 5,
+                   warmup: int = 2, seed: int = 0) -> float:
+    """Seconds per execution of one candidate on the problem's pass.
+
+    ``prob.epilogue`` makes the timed call carry the same fused
+    bias/activation/residual as the instance being tuned."""
     from repro.kernels import ops  # late import: ops dispatches into tune
 
-    has_bias, activation, has_residual = _ep.parse(epilogue)
-    n_filters = C if depthwise else K
-    W = Q + (S - 1) * dilation if padding == "VALID" else Q
-    kx, kw = jax.random.split(jax.random.key(seed))
-    x = (jax.random.normal(kx, (N, C, W), jnp.float32)).astype(dtype)
-    bias = jnp.zeros((n_filters,), dtype) if has_bias else None
-    residual = (jnp.zeros((N, n_filters, Q), dtype) if has_residual else None)
-    if depthwise:
-        w = (jax.random.normal(kw, (S, C), jnp.float32) * 0.1).astype(dtype)
+    x, w, bias, residual, activation = _problem_operands(prob, seed)
+    conv = ops.depthwise_conv1d if prob.depthwise else ops.conv1d
+    blk2_kw = "cblk" if prob.depthwise else "kblk"
 
+    if prob.pass_ == "fwd":
         @jax.jit
         def f(x, w):
-            return ops.depthwise_conv1d(
-                x, w, bias=bias, activation=activation, residual=residual,
-                dilation=dilation, padding=padding,
-                backend=cand.backend, wblk=cand.wblk, cblk=cand.kblk)
-    else:
-        w = (jax.random.normal(kw, (S, K, C), jnp.float32) * 0.1).astype(dtype)
+            return conv(x, w, bias=bias, activation=activation,
+                        residual=residual, dilation=prob.dilation,
+                        padding=prob.padding, backend=cand.backend,
+                        wblk=cand.wblk, **{blk2_kw: cand.kblk})
+        return median_time(f, x, w, iters=iters, warmup=warmup)
 
-        @jax.jit
-        def f(x, w):
-            return ops.conv1d(
-                x, w, bias=bias, activation=activation, residual=residual,
-                dilation=dilation, padding=padding,
-                backend=cand.backend, wblk=cand.wblk, kblk=cand.kblk)
+    # backward pass: pin the candidate onto the target pass of the custom
+    # VJP (forward + other pass at defaults) and time the cotangent pull.
+    cfg = (cand.backend, cand.wblk, cand.kblk)
+    bwd_kw = {"bwd_data_cfg": cfg if prob.pass_ == "bwd_data" else None,
+              "bwd_weight_cfg": cfg if prob.pass_ == "bwd_weight" else None}
 
-    return median_time(f, x, w, iters=iters, warmup=warmup)
+    def call(x, w):
+        return conv(x, w, bias=bias, activation=activation,
+                    residual=residual, dilation=prob.dilation,
+                    padding=prob.padding, backend="pallas", **bwd_kw)
+
+    y, vjp_fn = jax.vjp(call, x, w)
+    fb = jax.jit(vjp_fn)
+    g = jnp.ones_like(y)
+    return median_time(fb, g, iters=iters, warmup=warmup)

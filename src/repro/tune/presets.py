@@ -18,6 +18,18 @@ S_SET = [5, 25, 51]
 S_SET_FULL = [1, 5, 9, 15, 21, 25, 31, 49, 51]
 N = 4  # batch (paper used 56/64; scaled to the 1-core container)
 
+# One tiny instance for CI smoke runs: small enough that tuning all three
+# passes (fwd, bwd_data, bwd_weight) over it is seconds on the CPU
+# container, yet it exercises the full pass-aware cache schema.
+SMOKE = dict(N=1, C=8, K=8, S=3, dilation=2, Q=128, dtype="float32",
+             padding="SAME")
+
+
+def smoke_shapes():
+    """The CI smoke work-list (one problem dict, same schema as
+    ``figset_shapes``)."""
+    yield dict(SMOKE)
+
 
 def figset_shapes(name: str, *, full: bool = False):
     """Yield one problem dict per (S, Q) cell of the named figure.

@@ -1,0 +1,130 @@
+"""ConvProblem — the one descriptor every layer of the tune stack speaks.
+
+The paper optimizes **all three** kernels of the layer (Alg. 2 forward,
+Alg. 3 backward-data, Alg. 4 backward-weight) with per-shape LIBXSMM
+blockings, and Georganas et al. show the blocking sweet spots differ per
+pass.  A ``ConvProblem`` therefore identifies one *pass* of one layer
+instance:
+
+    pass_ ∈ {fwd, bwd_data, bwd_weight}
+        × (N, C, K, S, dilation, Q) × dtype × padding × depthwise
+        × epilogue signature
+
+``C``/``K``/``Q`` are always the **forward** layer's numbers — the
+descriptor names the layer instance, and per-pass *derived* views expose
+the GEMM each pass actually runs:
+
+  * ``bwd_data`` is the forward BRGEMM on the zero-padded cotangent with
+    flipped, transposed ``(S, C, K)`` weights — the transposed (C↔K) GEMM:
+    it contracts over K (``contraction``), produces C filter rows
+    (``n_filters``/``blk2_dim``), and its output width is the input width
+    ``q_out = Q + (S-1)·d``.
+  * ``bwd_weight`` has no filter tile on the dense path (the whole
+    ``(S, K, C)`` gradient block is the revisited output of a sequential
+    grid; ``blk2_dim`` is None) and tiles C (cblk) on the depthwise path.
+  * epilogue operands (bias/residual tiles) ride only the forward kernel;
+    ``pass_epilogue`` is what the *pass's kernel* stages, while
+    ``epilogue`` stays in the cache key for every pass (the epilogue
+    changes what the backward computes: cotangent masking, fused dbias).
+
+``key()`` renders the persistent cache key.  Forward problems keep the
+untagged legacy key form, so caches written before pass-aware tuning
+existed keep resolving exactly the (forward) instances they were measured
+for; backward passes append a ``|pass:`` tag (DESIGN.md §11).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .cache import cache_key
+
+PASS_FWD = "fwd"
+PASS_BWD_DATA = "bwd_data"
+PASS_BWD_WEIGHT = "bwd_weight"
+PASSES = (PASS_FWD, PASS_BWD_DATA, PASS_BWD_WEIGHT)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvProblem:
+    """One pass of one conv1d layer instance, in forward-layer coordinates."""
+
+    N: int
+    C: int
+    K: int
+    S: int
+    dilation: int
+    Q: int
+    dtype: str                   # canonical dtype name ('float32', 'bfloat16')
+    padding: str = "VALID"
+    depthwise: bool = False
+    epilogue: str = "none"       # repro.kernels.epilogue.signature
+    pass_: str = PASS_FWD
+
+    def __post_init__(self):
+        if self.pass_ not in PASSES:
+            raise ValueError(f"unknown pass {self.pass_!r}; expected {PASSES}")
+        # canonicalize the dtype spelling so keys are stable however built
+        object.__setattr__(self, "dtype", str(jnp.dtype(self.dtype)))
+
+    # -- derived views of the GEMM this pass actually runs ------------------
+
+    @property
+    def span(self) -> int:
+        return (self.S - 1) * self.dilation
+
+    @property
+    def dtype_bytes(self) -> int:
+        return jnp.dtype(self.dtype).itemsize
+
+    @property
+    def q_out(self) -> int:
+        """Output width of the pass's kernel (bwd-data reconstructs the
+        padded input, one span wider than the forward output)."""
+        return self.Q + self.span if self.pass_ == PASS_BWD_DATA else self.Q
+
+    @property
+    def contraction(self) -> int:
+        """Channel rows of the staged input footprint: the bwd-data GEMM
+        reads the K-row cotangent; everything else reads the C-row input."""
+        if self.depthwise:
+            return self.C
+        return self.K if self.pass_ == PASS_BWD_DATA else self.C
+
+    @property
+    def n_filters(self) -> int:
+        """Output rows of the pass's GEMM (bwd-data produces dx's C rows;
+        dense bwd-weight streams the K-row cotangent)."""
+        if self.depthwise:
+            return self.C
+        return self.C if self.pass_ == PASS_BWD_DATA else self.K
+
+    @property
+    def blk2_dim(self) -> int | None:
+        """Dimension the second tile knob (kblk/cblk) must divide, or None
+        when the pass has no such knob (dense bwd-weight: the full
+        ``(S, K, C)`` block is the sequential grid's resident output)."""
+        if self.depthwise:
+            return self.C
+        if self.pass_ == PASS_BWD_WEIGHT:
+            return None
+        return self.C if self.pass_ == PASS_BWD_DATA else self.K
+
+    @property
+    def pass_epilogue(self) -> str:
+        """Epilogue operands staged by *this pass's kernel* (fused bias/
+        residual tiles ride only the forward)."""
+        return self.epilogue if self.pass_ == PASS_FWD else "none"
+
+    # -- identity -----------------------------------------------------------
+
+    def with_pass(self, pass_: str) -> "ConvProblem":
+        return dataclasses.replace(self, pass_=pass_)
+
+    def key(self, device_kind: str) -> str:
+        return cache_key(device_kind=device_kind, dtype=self.dtype, N=self.N,
+                         C=self.C, K=self.K, S=self.S, dilation=self.dilation,
+                         Q=self.Q, padding=self.padding,
+                         depthwise=self.depthwise, epilogue=self.epilogue,
+                         pass_=self.pass_)

@@ -1,27 +1,34 @@
-"""Candidate enumeration for the conv1d tuner.
+"""Candidate enumeration for the conv1d tuner — pass-aware.
 
-A candidate is a (backend, wblk, kblk) triple:
+A candidate is a (backend, wblk, kblk) triple for one ``ConvProblem``
+(one pass of one layer instance):
 
   * backend 'pallas' — the BRGEMM kernel; wblk is the width tile, kblk the
-    filter tile (channel tile cblk for the depthwise variant).
-  * backend 'xla'    — the vendor-library general conv; no tiling knobs.
+    second tile knob of the *pass*: the filter tile of the pass's GEMM
+    (tiles K for the forward, **C** for bwd-data's transposed GEMM; cblk
+    tiles C for every depthwise pass; the dense bwd-weight pass has no
+    second knob — its whole (S, K, C) gradient block is the sequential
+    grid's resident output).
+  * backend 'xla'    — the vendor-library formulation; no tiling knobs.
 
-Legality for the Pallas kernel (the shape contract of
-``kernels/conv1d_brgemm.py``):
+Legality for the Pallas kernels (the shape contract of
+``kernels/conv1d_brgemm.py``), all derived from the problem's pass:
 
   * wblk is a multiple of the 128-lane TPU tile;
-  * K % kblk == 0 (C % cblk == 0 for depthwise);
-  * the VMEM working set — input footprint ``F = WBLK + (S-1)*d``, all S
-    weight taps of the filter tile, the output tile, the fp32
-    accumulator, and the epilogue operands (bias tile + residual tile when
-    the instance is fused, see ``repro.kernels.epilogue``) — fits a
-    per-core budget (half of the ~16 MiB VMEM, leaving room for double
-    buffering);
+  * kblk divides ``problem.blk2_dim`` (K fwd / C bwd-data / C depthwise);
+  * the pass's VMEM working set fits a per-core budget (half of the
+    ~16 MiB VMEM, leaving room for double buffering).  Forward-shaped
+    passes stage the dilated input footprint ``F = WBLK + (S-1)*d``, the
+    tap block, the output tile, the fp32 accumulator, and — forward only —
+    the fused epilogue operands (bias + residual tiles).  The bwd-weight
+    pass instead keeps the whole fp32 weight-gradient block VMEM-resident
+    across its sequential grid;
   * the per-row footprint F stays under ``ops.MAX_FOOTPRINT_ELEMS`` — the
     same cap the untuned ``pick_wblk`` ladder enforces, so tuned and
     default choices agree on what fits;
-  * the width round-up waste ``round_up(Q, wblk)/Q`` is bounded, so a tiny
-    problem never burns >2x its useful compute in padding.
+  * the width round-up waste ``round_up(q_out, wblk)/q_out`` is bounded
+    (against the *pass's* output width — bwd-data is one span wider), so a
+    tiny problem never burns >2x its useful compute in padding.
 """
 from __future__ import annotations
 
@@ -29,6 +36,8 @@ import dataclasses
 
 from repro.kernels import epilogue as _ep
 from repro.kernels.ops import MAX_FOOTPRINT_ELEMS
+
+from .problem import ConvProblem
 
 LANE = 128                      # TPU lane tile; wblk must be a multiple
 WBLK_CHOICES = (128, 256, 512, 1024)
@@ -41,7 +50,7 @@ MAX_PAD_WASTE = 2.0              # round_up(Q, wblk) may at most double work
 class Candidate:
     backend: str                 # 'pallas' | 'xla'
     wblk: int | None = None      # width tile (pallas only)
-    kblk: int | None = None      # filter tile (channel tile if depthwise)
+    kblk: int | None = None      # pass's second tile knob (kblk/cblk)
 
     def as_entry(self) -> dict:
         return {"backend": self.backend, "wblk": self.wblk, "kblk": self.kblk}
@@ -51,63 +60,65 @@ def round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-def vmem_footprint_bytes(*, C: int, S: int, dilation: int, wblk: int,
-                         kblk: int, dtype_bytes: int,
-                         depthwise: bool = False,
-                         epilogue: str = "none") -> int:
-    """VMEM working set of one grid cell of the forward kernel.
+def vmem_footprint_bytes(prob: ConvProblem, wblk: int,
+                         kblk: int | None) -> int:
+    """VMEM working set of one grid cell of the problem's pass.
 
-    A fused instance additionally stages its epilogue operands: the bias
-    tile (one element per filter row) and the output-shaped residual tile.
+    Forward-shaped passes (fwd, bwd-data) stage footprint + taps + output
+    tile + fp32 accumulator (+ the forward's fused epilogue operands).
+    The bwd-weight pass keeps its fp32 gradient block resident instead.
     """
-    has_bias, _, has_residual = _ep.parse(epilogue)
-    F = wblk + (S - 1) * dilation
-    nb = kblk  # filter rows per cell (cblk plays kblk's role if depthwise)
-    ep_bytes = dtype_bytes * (nb * has_bias + nb * wblk * has_residual)
-    if depthwise:               # x tile (cblk, F), w (S, cblk), out + fp32 acc
-        cblk = kblk
-        return (dtype_bytes * (cblk * F + S * cblk + cblk * wblk)
-                + 4 * cblk * wblk + ep_bytes)
-    return (dtype_bytes * (C * F + S * kblk * C + kblk * wblk)
-            + 4 * kblk * wblk + ep_bytes)  # fp32 accumulator
+    db = prob.dtype_bytes
+    F = wblk + prob.span
+    if prob.pass_ == "bwd_weight":
+        if prob.depthwise:
+            cblk = kblk or min(prob.C, 512)
+            # resident (S, cblk) fp32 dw tile + x tile + cotangent tile + dbias
+            return 4 * prob.S * cblk + db * (cblk * F + cblk * wblk) + 4 * cblk
+        # resident (S, K, C) fp32 dw block + x tile + cotangent tile + dbias
+        return (4 * prob.S * prob.K * prob.C
+                + db * (prob.C * F + prob.K * wblk) + 4 * prob.K)
+    has_bias, _, has_residual = _ep.parse(prob.pass_epilogue)
+    nb = kblk or prob.blk2_dim   # filter rows per cell (cblk if depthwise)
+    ep_bytes = db * (nb * has_bias + nb * wblk * has_residual)
+    if prob.depthwise:          # x tile (cblk, F), w (S, cblk), out + fp32 acc
+        return (db * (nb * F + prob.S * nb + nb * wblk)
+                + 4 * nb * wblk + ep_bytes)
+    ctr = prob.contraction      # C fwd, K for bwd-data's transposed GEMM
+    return (db * (ctr * F + prob.S * nb * ctr + nb * wblk)
+            + 4 * nb * wblk + ep_bytes)  # fp32 accumulator
 
 
-def legal_tile_choices(*, C: int, K: int, S: int, dilation: int, Q: int,
-                       dtype_bytes: int, depthwise: bool = False,
-                       epilogue: str = "none",
-                       budget: int = VMEM_BUDGET_BYTES) -> list[tuple[int, int]]:
-    """All (wblk, kblk) pairs legal under the kernel contract + VMEM budget."""
-    n_filters = C if depthwise else K
-    kblks = sorted({k for k in KBLK_CHOICES if n_filters % k == 0}
-                   | {n_filters})
-    span = (S - 1) * dilation
+def legal_tile_choices(prob: ConvProblem, *,
+                       budget: int = VMEM_BUDGET_BYTES
+                       ) -> list[tuple[int, int | None]]:
+    """All (wblk, kblk) pairs legal under the pass's kernel contract + VMEM
+    budget.  kblk is None throughout for a pass with no second tile knob."""
+    dim = prob.blk2_dim
+    if dim is None:
+        kblks: list[int | None] = [None]
+    else:
+        kblks = sorted({k for k in KBLK_CHOICES if dim % k == 0} | {dim})
+    q = prob.q_out
     out = []
     for wblk in WBLK_CHOICES:
-        if round_up(Q, wblk) > MAX_PAD_WASTE * Q and wblk != min(WBLK_CHOICES):
+        if round_up(q, wblk) > MAX_PAD_WASTE * q and wblk != min(WBLK_CHOICES):
             continue            # padding would dominate; keep only the floor
-        if wblk + span > MAX_FOOTPRINT_ELEMS and wblk != min(WBLK_CHOICES):
+        if wblk + prob.span > MAX_FOOTPRINT_ELEMS and wblk != min(WBLK_CHOICES):
             continue            # same per-row cap as ops.pick_wblk
         for kblk in kblks:
-            fp = vmem_footprint_bytes(C=C, S=S, dilation=dilation, wblk=wblk,
-                                      kblk=kblk, dtype_bytes=dtype_bytes,
-                                      depthwise=depthwise, epilogue=epilogue)
-            if fp <= budget:
+            if vmem_footprint_bytes(prob, wblk, kblk) <= budget:
                 out.append((wblk, kblk))
     if not out:                 # degenerate giant shape: smallest legal tiles
-        out.append((min(WBLK_CHOICES), min(kblks)))
+        out.append((min(WBLK_CHOICES), None if dim is None else min(kblks)))
     return out
 
 
-def enumerate_candidates(*, C: int, K: int, S: int, dilation: int, Q: int,
-                         dtype_bytes: int, depthwise: bool = False,
-                         epilogue: str = "none",
+def enumerate_candidates(prob: ConvProblem, *,
                          budget: int = VMEM_BUDGET_BYTES) -> list[Candidate]:
     """The full search space for one problem instance: every legal Pallas
-    tiling plus the vendor-library backend."""
+    tiling plus the vendor-library formulation of the pass."""
     cands = [Candidate("pallas", wblk, kblk)
-             for wblk, kblk in legal_tile_choices(
-                 C=C, K=K, S=S, dilation=dilation, Q=Q,
-                 dtype_bytes=dtype_bytes, depthwise=depthwise,
-                 epilogue=epilogue, budget=budget)]
+             for wblk, kblk in legal_tile_choices(prob, budget=budget)]
     cands.append(Candidate("xla"))
     return cands

@@ -286,22 +286,19 @@ def test_fused_cache_keys_distinct_and_legacy_compatible(tmp_path, monkeypatch):
 
 
 def test_space_and_cost_accept_epilogue():
+    from repro import tune
     from repro.tune import cost, space
 
-    plain = space.vmem_footprint_bytes(C=15, S=5, dilation=8, wblk=256,
-                                       kblk=15, dtype_bytes=4)
-    fused = space.vmem_footprint_bytes(C=15, S=5, dilation=8, wblk=256,
-                                       kblk=15, dtype_bytes=4,
-                                       epilogue="b+relu+r")
+    shape = dict(N=4, C=15, K=15, S=5, dilation=8, Q=5000, dtype="float32")
+    plain_prob = tune.ConvProblem(**shape)
+    fused_prob = tune.ConvProblem(**shape, epilogue="b+relu+r")
+    plain = space.vmem_footprint_bytes(plain_prob, 256, 15)
+    fused = space.vmem_footprint_bytes(fused_prob, 256, 15)
     assert fused == plain + 4 * (15 + 15 * 256)  # bias tile + residual tile
 
-    cands = space.enumerate_candidates(C=15, K=15, S=5, dilation=8, Q=5000,
-                                       dtype_bytes=4, epilogue="b+relu+r")
+    cands = space.enumerate_candidates(fused_prob)
     assert any(c.backend == "pallas" for c in cands)
-    est = cost.estimate_seconds(cands[0], N=4, C=15, K=15, S=5, dilation=8,
-                                Q=5000, dtype_bytes=4, device_kind="TPU v5e",
-                                epilogue="b+relu+r")
-    est_plain = cost.estimate_seconds(cands[0], N=4, C=15, K=15, S=5,
-                                      dilation=8, Q=5000, dtype_bytes=4,
+    est = cost.estimate_seconds(cands[0], fused_prob, device_kind="TPU v5e")
+    est_plain = cost.estimate_seconds(cands[0], plain_prob,
                                       device_kind="TPU v5e")
     assert est >= est_plain  # residual read traffic never makes it cheaper

@@ -1,0 +1,332 @@
+"""Pass-aware tuning (DESIGN.md §11): per-pass ConvProblem cache keys
+(``|pass:`` tag round-trip, legacy untagged keys resolving forward
+instances only), ``jax.grad`` of backend='auto' resolving three distinct
+problems and running each backward kernel under its *own* tuned tiles,
+tuned-vs-default gradient equivalence across dtypes/variants/epilogues,
+grad-instance measurement, and the scripts/tune.py --smoke contract."""
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tune
+from repro.kernels import conv1d_brgemm as _kmod
+from repro.kernels import epilogue as _ep
+from repro.kernels import ops
+from repro.tune import measure, space
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = str(tmp_path / "tune_cache.json")
+    monkeypatch.setenv(tune.cache.ENV_CACHE_PATH, path)
+    monkeypatch.delenv(tune.ENV_TUNE, raising=False)
+    tune.reset_default_cache()
+    yield path
+    tune.reset_default_cache()
+
+
+def _prob(**kw):
+    base = dict(N=1, C=8, K=16, S=3, dilation=2, Q=200, dtype="float32",
+                padding="SAME")
+    base.update(kw)
+    return tune.ConvProblem(**base)
+
+
+# ---------------------------------------------------------------------------
+# Cache-key schema: |pass: tag + legacy compatibility
+# ---------------------------------------------------------------------------
+
+
+def test_pass_tag_in_key():
+    p = _prob()
+    assert p.key("cpu").endswith("|SAME|dense")          # fwd: legacy form
+    assert p.with_pass("bwd_data").key("cpu").endswith("|pass:bwd_data")
+    assert p.with_pass("bwd_weight").key("cpu").endswith("|pass:bwd_weight")
+    # the pass tag composes with the epilogue tag
+    pf = _prob(epilogue="b+relu+r").with_pass("bwd_data")
+    assert pf.key("cpu").endswith("|ep:b+relu+r|pass:bwd_data")
+    # cache_key's keyword spelling agrees with the problem's rendering
+    assert pf.key("cpu") == tune.cache_key(
+        device_kind="cpu", dtype="float32", N=1, C=8, K=16, S=3, dilation=2,
+        Q=200, padding="SAME", depthwise=False, epilogue="b+relu+r",
+        pass_="bwd_data")
+
+
+def test_pass_tagged_keys_roundtrip(tmp_cache):
+    cache = tune.TuneCache(tmp_cache)
+    for i, pass_ in enumerate(tune.PASSES):
+        cache.put(_prob().with_pass(pass_).key("cpu"),
+                  {"backend": "pallas", "wblk": 128 * (i + 1)})
+    reloaded = tune.TuneCache(tmp_cache)
+    got = {p: reloaded.get(_prob().with_pass(p).key("cpu"))["wblk"]
+           for p in tune.PASSES}
+    assert got == {"fwd": 128, "bwd_data": 256, "bwd_weight": 384}
+
+
+def test_legacy_untagged_key_resolves_forward_only(tmp_cache):
+    """A pre-pass-aware cache file (untagged keys) keeps resolving exactly
+    the forward instances it was measured for — backward passes miss."""
+    p = _prob()
+    legacy_key = tune.cache_key(        # key form written by older tuners
+        device_kind=tune.device_kind(), dtype=p.dtype, N=p.N, C=p.C, K=p.K,
+        S=p.S, dilation=p.dilation, Q=p.Q, padding=p.padding)
+    with open(tmp_cache, "w") as f:
+        json.dump({legacy_key: {"backend": "pallas", "wblk": 256,
+                                "kblk": 16, "source": "measured"}}, f)
+    fwd = tune.get_config_for(p)
+    assert (fwd.source, fwd.wblk) == ("cache", 256)
+    for pass_ in ("bwd_data", "bwd_weight"):
+        cfg = tune.get_config_for(p.with_pass(pass_))
+        assert cfg.source == "default", pass_
+
+
+# ---------------------------------------------------------------------------
+# Per-pass candidate spaces
+# ---------------------------------------------------------------------------
+
+
+def test_bwd_data_space_tiles_C_not_K():
+    """bwd-data's transposed GEMM produces C filter rows: its kblk must
+    divide C (=12 here), not the K (=32) the forward tunes over."""
+    prob = _prob(C=12, K=32, Q=512, padding="VALID").with_pass("bwd_data")
+    pallas = [c for c in space.enumerate_candidates(prob)
+              if c.backend == "pallas"]
+    assert pallas and all(12 % c.kblk == 0 for c in pallas)
+    assert any(c.kblk not in (None, 32) for c in pallas)
+
+
+def test_bwd_weight_dense_space_has_no_filter_tile():
+    prob = _prob().with_pass("bwd_weight")
+    pallas = [c for c in space.enumerate_candidates(prob)
+              if c.backend == "pallas"]
+    assert pallas and all(c.kblk is None for c in pallas)
+    assert len({c.wblk for c in pallas}) > 1   # wblk is still searched
+
+
+def test_depthwise_bwd_spaces_tile_C():
+    for pass_ in ("bwd_data", "bwd_weight"):
+        prob = _prob(C=32, K=32, depthwise=True).with_pass(pass_)
+        pallas = [c for c in space.enumerate_candidates(prob)
+                  if c.backend == "pallas"]
+        assert pallas and all(32 % c.kblk == 0 for c in pallas), pass_
+
+
+def test_pick_kblk_divisor_ladder():
+    assert ops.pick_kblk(512) == 512
+    assert ops.pick_kblk(96) == 32
+    assert ops.pick_kblk(24) == 8
+    assert ops.pick_kblk(15) == 15      # nothing on the ladder divides it
+
+
+# ---------------------------------------------------------------------------
+# jax.grad under backend='auto': three problems, three sets of tiles
+# ---------------------------------------------------------------------------
+
+
+def _spy(monkeypatch, name):
+    calls = []
+    orig = getattr(_kmod, name)
+
+    @functools.wraps(orig)
+    def wrapper(*a, **kw):
+        calls.append(kw)
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(_kmod, name, wrapper)
+    return calls
+
+
+def test_grad_auto_uses_per_pass_tuned_tiles(tmp_cache, monkeypatch):
+    """The acceptance scenario: with all three passes cached under their
+    own keys, jax.grad of conv1d(backend='auto') runs each backward kernel
+    under its own tuned tiles — not the forward's wblk."""
+    p = _prob()
+    cache = tune.get_default_cache()
+    cache.put(p.key(tune.device_kind()),
+              {"backend": "pallas", "wblk": 128, "kblk": 8})
+    cache.put(p.with_pass("bwd_data").key(tune.device_kind()),
+              {"backend": "pallas", "wblk": 256, "kblk": 8})
+    cache.put(p.with_pass("bwd_weight").key(tune.device_kind()),
+              {"backend": "pallas", "wblk": 512, "kblk": None})
+    plan = tune.get_plan(N=p.N, C=p.C, K=p.K, S=p.S, dilation=p.dilation,
+                         Q=p.Q, dtype=p.dtype, padding=p.padding)
+    assert {c.source for c in plan.values()} == {"cache"}
+    assert len({pa.key(tune.device_kind())
+                for pa in (p, p.with_pass("bwd_data"),
+                           p.with_pass("bwd_weight"))}) == 3
+
+    fwd_calls = _spy(monkeypatch, "conv1d_fwd")
+    bwdw_calls = _spy(monkeypatch, "conv1d_bwd_weight")
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((p.N, p.C, p.Q)).astype(np.float32))
+    w = jnp.asarray(0.1 * rng.standard_normal((p.S, p.K, p.C)).astype(np.float32))
+    jax.grad(lambda x, w: ops.conv1d(x, w, dilation=p.dilation,
+                                     padding=p.padding,
+                                     backend="auto").sum(),
+             argnums=(0, 1))(x, w)
+
+    assert len(fwd_calls) == 2          # Alg. 2 (fwd) + Alg. 3 (bwd-data)
+    assert fwd_calls[0]["wblk"] == 128  # forward: its own tuned tile
+    assert fwd_calls[1]["wblk"] == 256  # bwd-data: NOT the forward's wblk
+    assert fwd_calls[1]["kblk"] == 8    # ...and tiled over C, not untiled
+    assert len(bwdw_calls) == 1
+    assert bwdw_calls[0]["wblk"] == 512  # bwd-weight: its own width tile
+
+
+def test_bwd_data_default_never_untiled(tmp_cache, monkeypatch):
+    """Without any plan, the bwd-data filter dimension still gets a legal
+    kblk from the divisor-of-C ladder instead of None (ops.py:249 fix)."""
+    fwd_calls = _spy(monkeypatch, "conv1d_fwd")
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((1, 8, 96)).astype(np.float32))
+    w = jnp.asarray(0.1 * rng.standard_normal((3, 16, 8)).astype(np.float32))
+    jax.grad(lambda x, w: ops.conv1d(x, w, dilation=2, padding="SAME",
+                                     backend="pallas").sum(),
+             argnums=(0, 1))(x, w)
+    assert fwd_calls[1]["kblk"] == ops.pick_kblk(8)
+
+
+def test_auto_forward_never_measure_tunes_bwd(tmp_cache, monkeypatch):
+    """REPRO_TUNE=1 + backend='auto' on a cold cache: only the *forward*
+    problem may trigger an in-place measured search — a forward-only
+    inference trace must not pay for tuning gradients it never computes
+    (backward entries come from scripts/tune.py)."""
+    monkeypatch.setenv(tune.ENV_TUNE, "1")
+    tuned_passes = []
+    orig = tune.tune_problem
+
+    def spy(prob, **kw):
+        tuned_passes.append(prob.pass_)
+        return orig(prob, **kw)
+
+    monkeypatch.setattr(tune, "tune_problem", spy)
+    x = jnp.ones((1, 4, 64), jnp.float32)
+    w = 0.1 * jnp.ones((3, 4, 4), jnp.float32)
+    ops.conv1d(x, w, dilation=1, padding="SAME", backend="auto")
+    assert tuned_passes == ["fwd"]
+
+
+# ---------------------------------------------------------------------------
+# Tuned-vs-default gradient equivalence
+# ---------------------------------------------------------------------------
+
+
+def _tol(dtype, grad=False):
+    if dtype == jnp.bfloat16:
+        return dict(rtol=3e-2, atol=3e-2) if grad else dict(rtol=2e-2, atol=2e-2)
+    return dict(rtol=2e-4, atol=2e-4) if grad else dict(rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,depthwise,epilogue,bwd_backend", [
+    (jnp.float32, False, "none", "pallas"),
+    (jnp.float32, False, "b+gelu+r", "xla"),
+    (jnp.bfloat16, False, "b+relu+r", "pallas"),
+    (jnp.float32, True, "none", "xla"),
+    (jnp.bfloat16, True, "b+silu", "pallas"),
+    (jnp.float32, True, "b+relu+r", "pallas"),
+])
+def test_tuned_grads_match_ref(tmp_cache, dtype, depthwise, epilogue,
+                               bwd_backend):
+    """backend='auto' with per-pass cached configs (pallas tiles or the
+    vendor formulation) produces the same gradients as the oracle, for
+    fp32 + bf16, dense + depthwise, fused + unfused epilogues."""
+    N, C, K, S, d, Q = 1, 8, 8, 3, 2, 160
+    has_bias, activation, has_residual = _ep.parse(epilogue)
+    dtype_name = str(jnp.dtype(dtype))
+    base = tune.ConvProblem(N=N, C=C, K=K, S=S, dilation=d, Q=Q,
+                            dtype=dtype_name, padding="SAME",
+                            depthwise=depthwise, epilogue=epilogue)
+    cache = tune.get_default_cache()
+    cache.put(base.key(tune.device_kind()),
+              {"backend": "pallas", "wblk": 128, "kblk": 8})
+    cache.put(base.with_pass("bwd_data").key(tune.device_kind()),
+              {"backend": bwd_backend, "wblk": 256, "kblk": 8})
+    cache.put(base.with_pass("bwd_weight").key(tune.device_kind()),
+              {"backend": bwd_backend, "wblk": 256, "kblk": None})
+
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((N, C, Q)).astype(np.float32), dtype)
+    wshape = (S, C) if depthwise else (S, K, C)
+    w = jnp.asarray(0.1 * rng.standard_normal(wshape).astype(np.float32), dtype)
+    params = {"x": x, "w": w}
+    if has_bias:
+        params["bias"] = jnp.asarray(
+            0.1 * rng.standard_normal(K).astype(np.float32), dtype)
+    if has_residual:
+        params["residual"] = jnp.asarray(
+            0.1 * rng.standard_normal((N, K, Q)).astype(np.float32), dtype)
+    conv = ops.depthwise_conv1d if depthwise else ops.conv1d
+
+    def loss(params, backend):
+        return conv(params["x"], params["w"], bias=params.get("bias"),
+                    activation=activation, residual=params.get("residual"),
+                    dilation=d, padding="SAME",
+                    backend=backend).astype(jnp.float32).sum()
+
+    g_auto = jax.grad(lambda p: loss(p, "auto"))(params)
+    g_ref = jax.grad(lambda p: loss(p, "ref"))(params)
+    for name in params:
+        np.testing.assert_allclose(
+            np.asarray(g_auto[name], np.float32),
+            np.asarray(g_ref[name], np.float32),
+            err_msg=f"d{name}", **_tol(dtype, grad=True))
+
+
+# ---------------------------------------------------------------------------
+# measure: backward problems time a jax.vjp instance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pass_", ["bwd_data", "bwd_weight"])
+def test_measure_times_grad_instance(tmp_cache, pass_):
+    prob = _prob(Q=128, epilogue="b+relu").with_pass(pass_)
+    for cand in (space.Candidate("pallas", 128, 8 if pass_ == "bwd_data" else None),
+                 space.Candidate("xla")):
+        sec = measure.time_candidate(cand, prob, iters=1, warmup=1)
+        assert np.isfinite(sec) and sec > 0, (pass_, cand)
+
+
+def test_tune_persists_bwd_pass_entry(tmp_cache):
+    cfg = tune.tune(N=1, C=8, K=16, S=3, dilation=2, Q=128,
+                    dtype=jnp.float32, pass_="bwd_data", iters=1, warmup=1,
+                    top_k=2)
+    assert cfg.source == "measured"
+    keys = list(tune.get_default_cache().keys())
+    assert len(keys) == 1 and keys[0].endswith("|pass:bwd_data")
+    # the cached entry resolves without re-measurement
+    hit = tune.get_config(N=1, C=8, K=16, S=3, dilation=2, Q=128,
+                          dtype=jnp.float32, pass_="bwd_data")
+    assert hit.source == "cache" and hit.backend == cfg.backend
+
+
+# ---------------------------------------------------------------------------
+# scripts/tune.py --smoke: all three passes of the tiny preset
+# ---------------------------------------------------------------------------
+
+
+def test_tune_script_smoke_covers_three_passes(tmp_cache):
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "tune_script", os.path.join(os.path.dirname(__file__), "..",
+                                    "scripts", "tune.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    mod.main(["--smoke", "--cache", tmp_cache])
+
+    entries = json.load(open(tmp_cache))
+    [prob] = list(tune.presets.smoke_shapes())
+    dtype = prob.pop("dtype")
+    base = tune.ConvProblem(dtype=dtype, **prob)
+    for pass_ in tune.PASSES:
+        key = base.with_pass(pass_).key(tune.device_kind())
+        assert key in entries, key
+        assert entries[key]["backend"] in ("pallas", "xla")
+    assert sum(k.endswith("|pass:bwd_data") for k in entries) == 1
+    assert sum(k.endswith("|pass:bwd_weight") for k in entries) == 1

@@ -133,9 +133,15 @@ def test_auto_depthwise_matches_ref(tmp_cache, monkeypatch):
 # ---------------------------------------------------------------------------
 
 
+def _prob(**kw):
+    base = dict(N=4, dtype="float32", padding="VALID")
+    base.update(kw)
+    return tune.ConvProblem(**base)
+
+
 def test_space_legality():
-    cands = space.enumerate_candidates(C=15, K=15, S=5, dilation=8, Q=5000,
-                                       dtype_bytes=4)
+    prob = _prob(C=15, K=15, S=5, dilation=8, Q=5000)
+    cands = space.enumerate_candidates(prob)
     assert any(c.backend == "xla" for c in cands)
     for c in cands:
         if c.backend != "pallas":
@@ -143,8 +149,7 @@ def test_space_legality():
         assert c.wblk % space.LANE == 0
         assert 15 % c.kblk == 0
         assert space.vmem_footprint_bytes(
-            C=15, S=5, dilation=8, wblk=c.wblk, kblk=c.kblk,
-            dtype_bytes=4) <= space.VMEM_BUDGET_BYTES
+            prob, c.wblk, c.kblk) <= space.VMEM_BUDGET_BYTES
 
 
 def test_cost_model_wblk_never_shrinks_with_q():
@@ -154,11 +159,10 @@ def test_cost_model_wblk_never_shrinks_with_q():
     for C, K, S, d in ((15, 15, 5, 8), (64, 64, 25, 1), (32, 32, 51, 4)):
         prev = 0
         for Q in (128, 256, 512, 1000, 5000, 20000, 60000):
-            cands = [c for c in space.enumerate_candidates(
-                C=C, K=K, S=S, dilation=d, Q=Q, dtype_bytes=4)
-                if c.backend == "pallas"]
-            best = cost.rank(cands, N=4, C=C, K=K, S=S, dilation=d, Q=Q,
-                             dtype_bytes=4, device_kind="TPU v5e")[0]
+            prob = _prob(C=C, K=K, S=S, dilation=d, Q=Q)
+            cands = [c for c in space.enumerate_candidates(prob)
+                     if c.backend == "pallas"]
+            best = cost.rank(cands, prob, device_kind="TPU v5e")[0]
             assert best.wblk >= prev, (C, K, S, d, Q, best)
             assert best.wblk >= ops.pick_wblk(Q, S, d), (C, K, S, d, Q, best)
             prev = best.wblk
@@ -166,11 +170,11 @@ def test_cost_model_wblk_never_shrinks_with_q():
 
 def test_cost_model_never_picks_interpret_pallas_on_cpu():
     for Q in (128, 5000, 60000):
-        cands = space.enumerate_candidates(C=64, K=64, S=25, dilation=1, Q=Q,
-                                           dtype_bytes=4)
-        best = cost.rank(cands, N=4, C=64, K=64, S=25, dilation=1, Q=Q,
-                         dtype_bytes=4, device_kind="cpu")[0]
-        assert best.backend == "xla"
+        for pass_ in tune.PASSES:
+            prob = _prob(C=64, K=64, S=25, dilation=1, Q=Q, pass_=pass_)
+            best = cost.rank(space.enumerate_candidates(prob), prob,
+                             device_kind="cpu")[0]
+            assert best.backend == "xla", (Q, pass_)
 
 
 # ---------------------------------------------------------------------------
