@@ -12,6 +12,13 @@ sec/step and samples/sec for:
     the ``fused_speedup`` column is unfused/fused step time per
     (arch, backend).
 
+Every row carries a paper-style ``efficiency`` column — achieved training
+FLOP/s (3× the 25 conv layers' forward MACs, the ``repro.roofline``
+conv-family formula) ÷ the device's roofline peak — and the run emits a
+stable machine-readable ``BENCH_atacworks.json`` (problem key ->
+{ms, gflops, efficiency, source}) so the e2e perf trajectory is tracked
+across PRs (CI uploads the smoke run's file as an artifact).
+
 Defaults are container-scaled (batch 2, width 6000, 3 steps); ``--full``
 uses the paper's 60 000-wide segments; ``--smoke`` is the CI perf-rot
 guard (tiny width, 1 iter).
@@ -23,11 +30,21 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import time_fn
+from benchmarks.common import efficiency, time_fn, write_bench_json
 from repro import configs
 from repro.data.synthetic import make_batch
 from repro.models import get_model
 from repro.train.train_step import init_state, make_train_step
+
+
+def _train_step_flops(cfg, batch: int, width: int) -> float:
+    """Useful FLOPs of one training step of the 25-layer conv ResNet —
+    the same conv-family formula as ``repro.roofline.flops.model_flops``
+    (stem + 2·N_RES_BLOCKS body convs + 2 heads, fwd+bwd = 3× fwd)."""
+    from repro.core.blocks import N_RES_BLOCKS
+    C, S = cfg.conv_channels, cfg.conv_filter
+    per_pt = 2 * S * (C + 2 * N_RES_BLOCKS * C * C + 2 * C)
+    return float(3 * batch * width * per_pt)
 
 
 def run(full: bool = False, iters: int = 2, smoke: bool = False):
@@ -53,9 +70,12 @@ def run(full: bool = False, iters: int = 2, smoke: bool = False):
                     # time full train steps (fwd+bwd+optimizer)
                     t = time_fn(lambda s=state, b=data: step(s, b)[1]["loss"],
                                 iters=iters, warmup=1)
+                    flops = _train_step_flops(cfg, batch, width)
                     rows.append(dict(arch=arch, backend=backend, fused=fused,
                                      width=width, batch=batch, sec_per_step=t,
-                                     samples_per_sec=batch / t))
+                                     samples_per_sec=batch / t,
+                                     gflops=flops / t / 1e9,
+                                     efficiency=efficiency(flops, t)))
                 finally:
                     os.environ.pop("REPRO_CONV_BACKEND", None)
                     os.environ.pop("REPRO_FUSED_EPILOGUE", None)
@@ -69,14 +89,25 @@ def run(full: bool = False, iters: int = 2, smoke: bool = False):
     return rows
 
 
-def main(full: bool = False, smoke: bool = False):
+def main(full: bool = False, smoke: bool = False,
+         json_path: str = "BENCH_atacworks.json"):
     rows = run(full=full, smoke=smoke, iters=1 if smoke else 2)
     cols = ["arch", "backend", "fused", "width", "batch", "sec_per_step",
-            "samples_per_sec", "speedup_vs_library", "fused_speedup"]
+            "samples_per_sec", "gflops", "efficiency", "speedup_vs_library",
+            "fused_speedup"]
     print(",".join(cols))
     for r in rows:
         print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
                        for c in cols))
+    if json_path:
+        entries = {
+            (f"{r['arch']}|{r['backend']}|{'fused' if r['fused'] else 'unfused'}"
+             f"|w{r['width']}|b{r['batch']}"): {
+                "ms": r["sec_per_step"] * 1e3, "gflops": r["gflops"],
+                "efficiency": r["efficiency"],
+                "source": f"{r['backend']}/{'fused' if r['fused'] else 'unfused'}"}
+            for r in rows}
+        write_bench_json(json_path, entries)
     return rows
 
 

@@ -24,17 +24,31 @@ resolved (``src_fwd``/``src_bwd_data``/``src_bwd_weight`` — the per-pass
 cache-resolution source from ``tune.get_plan``).  This is the view the
 pass-aware tuner exists for: ~2/3 of training FLOPs are backward.
 
-Emits CSV: fig,mode,dtype,N,C,K,S,d,Q,sec,gflops,speedup_vs_library,
-tuned_vs_default,tuned_src — or with --grad:
-fig,mode,dtype,N,C,K,S,d,Q,sec_fwd,sec_fwdbwd,gflops,tuned_vs_default,
-src_fwd,src_bwd_data,src_bwd_weight
+``--algs`` (with ``--grad``) adds two rows per cell racing the dense
+kernel's two contraction formulations (DESIGN.md §12) head-to-head: each
+of ``tap_loop`` / ``tap_packed`` is tuned per pass under its
+``|alg:``-constrained problem key (Pallas-only search, so the library
+backend can't shadow the kernel race), and the rows report the measured
+per-pass seconds of each formulation's best config.
+
+Every row carries a paper-style ``efficiency`` column (achieved FLOP/s ÷
+the device's roofline peak, via ``repro.roofline``) — wins are reported
+the way the paper reports them, not just raw ms.
+
+Emits CSV: fig,mode,dtype,N,C,K,S,d,Q,sec,gflops,efficiency,
+speedup_vs_library,tuned_vs_default,tuned_src — or with --grad:
+fig,mode,dtype,N,C,K,S,d,Q,sec_fwd,sec_fwdbwd,sec_bwd_data,
+sec_bwd_weight,gflops,efficiency,tuned_vs_default,src_fwd,src_bwd_data,
+src_bwd_weight — plus a stable machine-readable ``BENCH_conv1d.json``
+(problem key -> {ms, gflops, efficiency, source}) for cross-PR perf
+tracking (CI uploads the smoke run's file as an artifact).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import conv1d_flops, time_fn
+from benchmarks.common import conv1d_flops, efficiency, time_fn, write_bench_json
 from repro import tune
 from repro.kernels import ops as kops
 from repro.tune.presets import (  # single source of truth with scripts/tune.py
@@ -89,7 +103,8 @@ def run(full: bool = False, iters: int = 3, tuned: bool = False,
                     rows.append(dict(fig=fig, mode=f"fwd-{mode}",
                                      dtype=dtype_name, N=N, C=C,
                                      K=K, S=S, d=d, Q=Q, sec=t,
-                                     gflops=flops / t / 1e9))
+                                     gflops=flops / t / 1e9,
+                                     efficiency=efficiency(flops, t)))
                 for r in rows[-len(modes):]:
                     r["speedup_vs_library"] = res["xla"] / r["sec"]
                     if tuned:  # default path = what backend=None dispatches to
@@ -102,7 +117,8 @@ def run(full: bool = False, iters: int = 3, tuned: bool = False,
                     rows.append(dict(fig=fig, mode=f"fwdbwd-{mode}",
                                      dtype=dtype_name, N=N, C=C,
                                      K=K, S=S, d=d, Q=Q, sec=t,
-                                     gflops=3 * flops / t / 1e9))
+                                     gflops=3 * flops / t / 1e9,
+                                     efficiency=efficiency(3 * flops, t)))
                 for r in rows[-len(modes):]:
                     r["speedup_vs_library"] = tb["xla"] / r["sec"]
                     if tuned:
@@ -127,9 +143,23 @@ def _grad_cells(full: bool, smoke: bool):
             for S in ss for Q in qs]
 
 
-def run_grad(full: bool = False, iters: int = 3, smoke: bool = False):
+def _alg_pass_config(prob, iters: int):
+    """Measured best config of one ``|alg:``-constrained pass: cache hit
+    with a measured time -> reuse; miss (or a cost-only entry with no
+    ``sec``) -> Pallas-only measured search (the library backend is
+    excluded so it cannot shadow the formulation race)."""
+    cfg = tune.get_config_for(prob, allow_measure=False)
+    if cfg.source != "cache" or cfg.sec is None:
+        cfg = tune.tune_problem(prob, backends=("pallas",), top_k=3,
+                                iters=iters, warmup=1)
+    return cfg
+
+
+def run_grad(full: bool = False, iters: int = 3, smoke: bool = False,
+             algs: bool = False):
     """--grad: fwd and fwd+bwd wall clock, default-vs-auto, with the
-    per-pass resolution source of each cell's plan."""
+    per-pass resolution source of each cell's plan; ``algs`` adds the
+    per-formulation (tap_loop vs tap_packed) measured race."""
     rows = []
     for fig, dtype_name, batch, C, K, d, S, Q in _grad_cells(full, smoke):
         dtype = jnp.dtype(dtype_name)
@@ -149,38 +179,80 @@ def run_grad(full: bool = False, iters: int = 3, smoke: bool = False):
                 fig=fig, mode=f"grad-{mode}", dtype=dtype_name, N=batch,
                 C=C, K=K, S=S, d=d, Q=Q, sec_fwd=tf, sec_fwdbwd=tb,
                 gflops=3 * flops / tb / 1e9,
+                efficiency=efficiency(3 * flops, tb),
                 src_fwd=plan["fwd"].source,
                 src_bwd_data=plan["bwd_data"].source,
                 src_bwd_weight=plan["bwd_weight"].source))
         for r in rows[-2:]:
             r["tuned_vs_default"] = res["xla"] / res["auto"]
+        if not algs:
+            continue
+        for alg in ("tap_loop", "tap_packed"):
+            base = tune.ConvProblem(N=batch, C=C, K=K, S=S, dilation=d, Q=Q,
+                                    dtype=str(dtype), padding="SAME", alg=alg)
+            cfg = {p: _alg_pass_config(base.with_pass(p), iters)
+                   for p in tune.PASSES}
+            rows.append(dict(
+                fig=fig, mode=f"alg-{alg}", dtype=dtype_name, N=batch,
+                C=C, K=K, S=S, d=d, Q=Q,
+                sec_fwd=cfg["fwd"].sec,
+                sec_bwd_data=cfg["bwd_data"].sec,
+                sec_bwd_weight=cfg["bwd_weight"].sec,
+                gflops=flops / cfg["fwd"].sec / 1e9,
+                efficiency=efficiency(flops, cfg["fwd"].sec),
+                src_fwd=f"wblk{cfg['fwd'].wblk}/nblk{cfg['fwd'].nblk or 1}",
+                src_bwd_data=f"wblk{cfg['bwd_data'].wblk}/nblk{cfg['bwd_data'].nblk or 1}",
+                src_bwd_weight=f"wblk{cfg['bwd_weight'].wblk}/nblk{cfg['bwd_weight'].nblk or 1}"))
     return rows
 
 
 GRAD_COLS = ["fig", "mode", "dtype", "N", "C", "K", "S", "d", "Q",
-             "sec_fwd", "sec_fwdbwd", "gflops", "tuned_vs_default",
+             "sec_fwd", "sec_fwdbwd", "sec_bwd_data", "sec_bwd_weight",
+             "gflops", "efficiency", "tuned_vs_default",
              "src_fwd", "src_bwd_data", "src_bwd_weight"]
 
 
+def _json_entries(rows):
+    """rows -> the stable BENCH_conv1d.json schema: problem key ->
+    {ms, gflops, efficiency, source}."""
+    out = {}
+    for r in rows:
+        key = (f"{r['fig']}|{r['mode']}|{r['dtype']}|N{r['N']}|C{r['C']}"
+               f"|K{r['K']}|S{r['S']}|d{r['d']}|Q{r['Q']}")
+        sec = r.get("sec_fwdbwd") or r.get("sec") or r.get("sec_fwd")
+        src = r.get("tuned_src") or "/".join(
+            str(r.get(c, "")) for c in ("src_fwd", "src_bwd_data",
+                                        "src_bwd_weight")
+            if r.get(c)) or r["mode"]
+        out[key] = {"ms": sec * 1e3, "gflops": r.get("gflops"),
+                    "efficiency": r.get("efficiency"), "source": src}
+    return out
+
+
 def main(full: bool = False, tuned: bool = False, smoke: bool = False,
-         grad: bool = False):
+         grad: bool = False, algs: bool = False,
+         json_path: str = "BENCH_conv1d.json"):
     if grad:
-        rows = run_grad(full=full, smoke=smoke, iters=1 if smoke else 3)
+        rows = run_grad(full=full, smoke=smoke, iters=1 if smoke else 3,
+                        algs=algs)
         cols = GRAD_COLS
     else:
         rows = run(full=full, tuned=tuned, smoke=smoke,
                    iters=1 if smoke else 3)
         cols = ["fig", "mode", "dtype", "N", "C", "K", "S", "d", "Q", "sec",
-                "gflops", "speedup_vs_library"] + (
+                "gflops", "efficiency", "speedup_vs_library"] + (
                     ["tuned_vs_default", "tuned_src"] if tuned else [])
     print(",".join(cols))
     for r in rows:
         print(",".join(f"{r.get(c, '')}" if not isinstance(r.get(c), float)
                        else f"{r[c]:.4g}" for c in cols))
+    if json_path:
+        write_bench_json(json_path, _json_entries(rows))
     return rows
 
 
 if __name__ == "__main__":
     import sys
     main(full="--full" in sys.argv, tuned="--tuned" in sys.argv,
-         smoke="--smoke" in sys.argv, grad="--grad" in sys.argv)
+         smoke="--smoke" in sys.argv, grad="--grad" in sys.argv,
+         algs="--algs" in sys.argv)

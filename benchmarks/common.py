@@ -17,3 +17,34 @@ def conv1d_flops(N: int, C: int, K: int, S: int, Q: int) -> float:
     """MACs×2 of one forward conv1d (paper's efficiency denominator)."""
     from repro.roofline.flops import conv1d_flops as _f
     return _f(N, C, K, S, Q)
+
+
+def efficiency(flops: float, sec: float) -> float:
+    """Paper-style efficiency: achieved FLOP/s ÷ roofline peak of the
+    device the benchmark ran on (repro.roofline)."""
+    from repro.roofline.analysis import achieved_fraction_of_peak
+    return achieved_fraction_of_peak(flops, sec)
+
+
+def write_bench_json(path: str, entries: dict) -> None:
+    """Persist one benchmark's rows as a stable machine-readable artifact
+    (problem key -> {ms, gflops, efficiency, source}), so the perf
+    trajectory is tracked across PRs — CI uploads these from the smoke
+    runs.  Writes are atomic (tmp + rename)."""
+    import json
+    import os
+    import tempfile
+
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".bench.tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(entries, f, indent=1, sort_keys=True)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    print(f"# wrote {len(entries)} entries -> {path}")

@@ -24,7 +24,8 @@ import argparse
 import jax.numpy as jnp
 
 from repro import tune
-from repro.tune.presets import FIGSETS, figset_shapes, smoke_shapes
+from repro.tune.presets import (FIGSETS, atacworks_shapes, figset_shapes,
+                                smoke_shapes)
 from repro.tune.problem import PASSES
 
 
@@ -32,7 +33,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--figset", default="all",
-                    choices=[*FIGSETS, "all"], help="paper figure to cover")
+                    choices=[*FIGSETS, "atacworks", "all"],
+                    help="paper figure to cover ('atacworks' = the e2e "
+                         "training cells, both precisions)")
     ap.add_argument("--full", action="store_true",
                     help="full S/Q grid instead of the CI-sized subset")
     ap.add_argument("--measure", action="store_true",
@@ -40,6 +43,11 @@ def main(argv=None):
     ap.add_argument("--passes", default="all",
                     help="comma list of passes to tune "
                          f"({','.join(PASSES)}; default all)")
+    ap.add_argument("--backends", default=None,
+                    help="comma list restricting searched backends, e.g. "
+                         "'pallas' to rank kernel formulations "
+                         "(tap_loop/tap_packed) head-to-head without the "
+                         "library entry (default: all)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: one tiny shape, all three passes")
     ap.add_argument("--cache", default=None,
@@ -54,10 +62,17 @@ def main(argv=None):
     for p in passes:
         if p not in PASSES:
             ap.error(f"unknown pass {p!r}; expected one of {PASSES}")
+    backends = tuple(args.backends.split(",")) if args.backends else None
+    if backends:
+        for b in backends:
+            if b not in ("pallas", "xla"):
+                ap.error(f"unknown backend {b!r}; expected pallas and/or xla")
 
     cache = tune.TuneCache(args.cache) if args.cache else tune.get_default_cache()
     if args.smoke:
         work = [("smoke", prob) for prob in smoke_shapes()]
+    elif args.figset == "atacworks":
+        work = [("atacworks", prob) for prob in atacworks_shapes()]
     else:
         names = list(FIGSETS) if args.figset == "all" else [args.figset]
         work = [(name, prob) for name in names
@@ -69,12 +84,13 @@ def main(argv=None):
         for pass_ in passes:
             cfg = tune.tune(**prob, dtype=dtype, pass_=pass_, cache=cache,
                             measure=args.measure, iters=args.iters,
-                            top_k=args.top_k)
+                            top_k=args.top_k, backends=backends)
             n += 1
             sec = f" {cfg.sec:.3e}s" if cfg.sec is not None else ""
             print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype} "
                   f"{pass_:>10}: {cfg.backend} wblk={cfg.wblk} "
-                  f"kblk={cfg.kblk} [{cfg.source}]{sec}")
+                  f"kblk={cfg.kblk} alg={cfg.alg or 'tap_loop'} "
+                  f"nblk={cfg.nblk or 1} [{cfg.source}]{sec}")
     print(f"\n{n} entries -> {cache.path} ({len(cache)} total)")
 
 

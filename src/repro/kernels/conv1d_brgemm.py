@@ -19,6 +19,29 @@ the paper's Algorithms 2-4:
                               (C == K) variant used by Mamba2/Zamba2 causal
                               convs; runs on the VPU instead of the MXU.
 
+The dense kernels support two **formulations** of the BRGEMM contraction
+(DESIGN.md §12), selected by ``alg``:
+
+  * ``tap_loop``   — the S-step unrolled batch-reduce above: one
+                     (KB, C)×(C, WBLK) matmul per tap.  For skinny channel
+                     counts (the paper's C=K=15 genomics layers) each tap
+                     uses ~(C/128)·(KB/128) of the 128×128 MXU.
+  * ``tap_packed`` — stacks the S dilated width-slices of the staged
+                     footprint into one (S·C, WBLK) VMEM operand and
+                     contracts it against the host-packed (KB, S·C) weight
+                     tile in a **single** MXU matmul with contraction S·C
+                     (51·15 = 765 ≈ 6 full MXU passes instead of 51
+                     near-empty ones).  The price is the VMEM copy that
+                     materialises the packed operand.
+
+Both formulations support **batch folding** (``nblk``): the grid batch
+axis advances ``nblk`` samples per cell and their width tiles are
+concatenated into the GEMM width dimension, so small-N, small-Q problems
+still present a wide (nblk·WBLK) operand to the MXU and amortise the tap
+block staging over nblk samples.  ``repro.tune`` searches both axes per
+pass; the defaults (``tap_loop``, ``nblk=1``) reproduce the historical
+kernel exactly.
+
 All kernels accept fp32 or bf16 inputs and accumulate in fp32
 (``preferred_element_type``), matching the AVX-512-BF16 contract.
 
@@ -57,6 +80,19 @@ try:  # TPU compiler params are optional (absent / ignored in interpret mode)
     from jax.experimental.pallas import tpu as pltpu
 except ImportError:  # pragma: no cover
     pltpu = None
+
+ALGS = ("tap_loop", "tap_packed")   # dense contraction formulations (§12)
+
+
+def default_cblk(C: int, cap: int = 512) -> int:
+    """Depthwise channel-tile default: the largest divisor of C that is
+    <= cap.  (``min(C, cap)`` is wrong for any C > cap not divisible by
+    cap — e.g. C=768 tripped the ``C % cblk == 0`` contract.)  Shared with
+    ``tune.space``'s legality/VMEM accounting so the tuner and the untuned
+    default agree on the tile actually run."""
+    if C <= cap:
+        return C
+    return max(d for d in range(1, cap + 1) if C % d == 0)
 
 
 def conv1d_pass(pass_: str, *args, depthwise: bool = False, **kw):
@@ -116,29 +152,101 @@ def _overlap_spec(block_shape, index_map):
 # ---------------------------------------------------------------------------
 
 
-def _epilogue_on_acc(acc, b_ref, r_ref, activation: str):
+def _epilogue_on_acc(acc, b_ref, r, activation: str):
     """Bias + residual + activation on the fp32 accumulator tile.
 
     Returns (pre-activation u, activated y), both fp32.  b_ref is a
-    (FB, 1) tile broadcast along width; r_ref[0] an output-shaped tile.
+    (FB, 1) tile broadcast along width; ``r`` an (already batch-folded)
+    output-shaped array, or None.
     """
     if b_ref is not None:
         acc = acc + b_ref[...].astype(jnp.float32)
-    if r_ref is not None:
-        acc = acc + r_ref[0].astype(jnp.float32)
+    if r is not None:
+        acc = acc + r.astype(jnp.float32)
     return acc, ACTIVATIONS[activation](acc)
 
 
-def _fwd_kernel(*refs, S: int, dilation: int, wblk: int, activation: str,
-                has_bias: bool, has_residual: bool, save_preact: bool):
-    """One (n, k-tile, q-tile) grid cell.
+def _folded_tap(x_ref, s: int, dilation: int, wblk: int, nblk: int):
+    """Width-slice of the staged footprint for tap ``s``, batch-folded:
+    (C, nblk·WBLK) — each sample's (C, WBLK) slice concatenated along the
+    GEMM width dimension."""
+    cols = [jax.lax.dynamic_slice_in_dim(x_ref[i], s * dilation, wblk, axis=1)
+            for i in range(nblk)]
+    return cols[0] if nblk == 1 else jnp.concatenate(cols, axis=1)
 
-    x_ref : (1, C, F)     dilated footprint for this width tile (VMEM)
-    w_ref : (S, KB, C)    all taps of this filter tile (VMEM)
-    b_ref : (KB, 1)       bias tile            (iff has_bias)
-    r_ref : (1, KB, WBLK) residual tile        (iff has_residual)
-    o_ref : (1, KB, WBLK)
-    u_ref : (1, KB, WBLK) fp32 pre-activation  (iff save_preact)
+
+def _pack_taps(x_ref, S: int, dilation: int, wblk: int, nblk: int):
+    """The tap-packed operand for the compiled (TPU) path: stack the S
+    dilated width-slices of the staged footprint into one (S·C, nblk·WBLK)
+    VMEM array, tap-major rows (row s·C + c is channel c of tap s)
+    matching the host-packed (KB, S·C) weight tile — S window copies,
+    native VMEM data movement."""
+    return jnp.concatenate(
+        [_folded_tap(x_ref, s, dilation, wblk, nblk) for s in range(S)],
+        axis=0)
+
+
+def _gather_taps(x_ref, S: int, dilation: int, wblk: int, nblk: int):
+    """The tap-packed operand for the interpret (XLA:CPU) path, as a
+    (C, S, nblk·WBLK) block: one fused gather over an iota index matrix
+    per folded sample instead of S separate window-slice ops (which
+    dominate when the kernel body runs as a plain XLA program), consumed
+    via a multi-dimension ``dot_general`` so no transpose is ever
+    materialised."""
+    C = x_ref.shape[1]
+    idx = (jax.lax.broadcasted_iota(jnp.int32, (S, wblk), 0) * dilation
+           + jax.lax.broadcasted_iota(jnp.int32, (S, wblk), 1)).reshape(-1)
+    parts = [jnp.take(x_ref[i], idx, axis=1).reshape(C, S, wblk)
+             for i in range(nblk)]
+    return parts[0] if nblk == 1 else jnp.concatenate(parts, axis=2)
+
+
+def _packed_fwd_acc(w_ref, x_ref, S: int, dilation: int, wblk: int,
+                    nblk: int, gather: bool):
+    """acc (KB, nblk·WBLK) — the single packed GEMM with contraction S·C.
+    w_ref is the host-packed (KB, S·C) tile."""
+    if gather:
+        xg = _gather_taps(x_ref, S, dilation, wblk, nblk)   # (C, S, nW)
+        wv = w_ref[...].reshape(w_ref.shape[0], S, -1)      # (KB, S, C)
+        return jax.lax.dot_general(wv, xg, (((1, 2), (1, 0)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+    xp = _pack_taps(x_ref, S, dilation, wblk, nblk)         # (S*C, nW)
+    return jnp.dot(w_ref[...], xp, preferred_element_type=jnp.float32)
+
+
+def _packed_bwd_w(g, x_ref, S: int, dilation: int, wblk: int, nblk: int,
+                  gather: bool):
+    """One (K, nblk·WBLK)×(nblk·WBLK, S·C) GEMM per grid step: the packed
+    weight-gradient update, tap-major (K, S·C) to match the resident
+    output block."""
+    if gather:
+        xg = _gather_taps(x_ref, S, dilation, wblk, nblk)   # (C, S, nW)
+        dwp = jax.lax.dot_general(g, xg, (((1,), (2,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        return dwp.transpose(0, 2, 1).reshape(g.shape[0], -1)  # (K, S*C)
+    xp = _pack_taps(x_ref, S, dilation, wblk, nblk)
+    return jnp.dot(g, xp.T, preferred_element_type=jnp.float32)
+
+
+def _fold(ref, nblk: int):
+    """(nblk, R, WBLK) tile -> (R, nblk·WBLK), matching ``_folded_tap``'s
+    sample order along the GEMM width dimension."""
+    return (ref[0] if nblk == 1 else
+            jnp.concatenate([ref[i] for i in range(nblk)], axis=1))
+
+
+def _fwd_kernel(*refs, S: int, dilation: int, wblk: int, nblk: int, alg: str,
+                gather: bool, activation: str, has_bias: bool,
+                has_residual: bool, save_preact: bool):
+    """One (n-fold, k-tile, q-tile) grid cell.
+
+    x_ref : (nblk, C, F)     dilated footprints of nblk samples (VMEM)
+    w_ref : (S, KB, C)       all taps of this filter tile  [tap_loop]
+            (KB, S*C)        host-packed filter tile       [tap_packed]
+    b_ref : (KB, 1)          bias tile            (iff has_bias)
+    r_ref : (nblk, KB, WBLK) residual tile        (iff has_residual)
+    o_ref : (nblk, KB, WBLK)
+    u_ref : (nblk, KB, WBLK) fp32 pre-activation  (iff save_preact)
     """
     it = iter(refs)
     x_ref, w_ref = next(it), next(it)
@@ -147,16 +255,23 @@ def _fwd_kernel(*refs, S: int, dilation: int, wblk: int, activation: str,
     o_ref = next(it)
     u_ref = next(it) if save_preact else None
 
-    x = x_ref[0]  # (C, F)
-    acc = jnp.zeros((w_ref.shape[1], wblk), jnp.float32)
-    for s in range(S):  # the BRGEMM batch-reduce dimension (unrolled taps)
-        a = w_ref[s]  # (KB, C)
-        b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)  # (C, WBLK)
-        acc += jnp.dot(a, b, preferred_element_type=jnp.float32)
-    u, y = _epilogue_on_acc(acc, b_ref, r_ref, activation)
-    if save_preact:
-        u_ref[0] = u
-    o_ref[0] = y.astype(o_ref.dtype)
+    if alg == "tap_packed":
+        # the whole tap loop collapses into a single MXU matmul with
+        # contraction S*C against the host-packed (KB, S*C) tile
+        acc = _packed_fwd_acc(w_ref, x_ref, S, dilation, wblk, nblk, gather)
+    else:
+        acc = jnp.zeros((w_ref.shape[1], nblk * wblk), jnp.float32)
+        for s in range(S):  # the BRGEMM batch-reduce dimension (unrolled taps)
+            a = w_ref[s]  # (KB, C)
+            b = _folded_tap(x_ref, s, dilation, wblk, nblk)  # (C, nblk*WBLK)
+            acc += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    r = _fold(r_ref, nblk) if has_residual else None
+    u, y = _epilogue_on_acc(acc, b_ref, r, activation)
+    for i in range(nblk):  # unfold the GEMM width back into per-sample tiles
+        blk = slice(i * wblk, (i + 1) * wblk)
+        if save_preact:
+            u_ref[i] = u[:, blk]
+        o_ref[i] = y[:, blk].astype(o_ref.dtype)
 
 
 def conv1d_fwd(
@@ -170,6 +285,8 @@ def conv1d_fwd(
     dilation: int = 1,
     wblk: int = 256,
     kblk: int | None = None,
+    alg: str = "tap_loop",
+    nblk: int = 1,
     out_dtype=None,
     interpret: bool = False,
 ):
@@ -178,35 +295,51 @@ def conv1d_fwd(
     Fused epilogue: ``out = act(conv + bias + residual)`` on the fp32
     accumulator (bias: (K,), residual: (N, K, Qp)).  With ``save_preact``
     returns ``(out, preact)`` where preact is the fp32 ``conv+bias+residual``.
+
+    ``alg`` selects the contraction formulation (``tap_loop`` /
+    ``tap_packed``, see module docstring); ``nblk`` folds that many samples
+    into the GEMM width dimension (requires ``N % nblk == 0``).
     """
     N, C, Wp = x.shape
     S, K, Cw = w.shape
     assert C == Cw, (C, Cw)
+    assert alg in ALGS, alg
+    assert N % nblk == 0, (N, nblk)
     F = wblk + (S - 1) * dilation
     Qp = Wp - (S - 1) * dilation
     assert Qp % wblk == 0, (Qp, wblk)
     kblk = kblk or K
     assert K % kblk == 0, (K, kblk)
-    grid = (N, K // kblk, Qp // wblk)
+    grid = (N // nblk, K // kblk, Qp // wblk)
     out_dtype = out_dtype or x.dtype
     activation = canon(activation)
 
+    if alg == "tap_packed":
+        # host-side pre-pack: (S, K, C) -> (K, S*C), so the kernel's single
+        # matmul contracts tap-major packed rows without an in-kernel
+        # weight relayout (done once, amortised over the whole grid)
+        w_in = w.transpose(1, 0, 2).reshape(K, S * C)
+        w_spec = pl.BlockSpec((kblk, S * C), lambda n, kt, qt: (kt, 0))
+    else:
+        w_in = w
+        w_spec = pl.BlockSpec((S, kblk, C), lambda n, kt, qt: (0, kt, 0))
     in_specs = [
         # overlapping dilated footprint along width: element-indexed
-        _overlap_spec((1, C, F), lambda n, kt, qt: (n, 0, qt * wblk)),
-        pl.BlockSpec((S, kblk, C), lambda n, kt, qt: (0, kt, 0)),
+        _overlap_spec((nblk, C, F), lambda n, kt, qt: (n, 0, qt * wblk)),
+        w_spec,
     ]
-    inputs = [x, w]
+    inputs = [x, w_in]
     if bias is not None:
         assert bias.shape == (K,), (bias.shape, K)
         in_specs.append(pl.BlockSpec((kblk, 1), lambda n, kt, qt: (kt, 0)))
         inputs.append(bias.reshape(K, 1))
     if residual is not None:
         assert residual.shape == (N, K, Qp), (residual.shape, (N, K, Qp))
-        in_specs.append(pl.BlockSpec((1, kblk, wblk), lambda n, kt, qt: (n, kt, qt)))
+        in_specs.append(pl.BlockSpec((nblk, kblk, wblk),
+                                     lambda n, kt, qt: (n, kt, qt)))
         inputs.append(residual)
 
-    out_spec = pl.BlockSpec((1, kblk, wblk), lambda n, kt, qt: (n, kt, qt))
+    out_spec = pl.BlockSpec((nblk, kblk, wblk), lambda n, kt, qt: (n, kt, qt))
     out_specs = [out_spec]
     out_shape = [jax.ShapeDtypeStruct((N, K, Qp), out_dtype)]
     if save_preact:
@@ -215,6 +348,7 @@ def conv1d_fwd(
 
     out = pl.pallas_call(
         functools.partial(_fwd_kernel, S=S, dilation=dilation, wblk=wblk,
+                          nblk=nblk, alg=alg, gather=interpret,
                           activation=activation, has_bias=bias is not None,
                           has_residual=residual is not None,
                           save_preact=save_preact),
@@ -234,14 +368,18 @@ def conv1d_fwd(
 
 
 def _bwd_w_kernel(x_ref, g_ref, o_ref, *dbias_ref, S: int, dilation: int,
-                  wblk: int, with_dbias: bool):
-    """Grid (N, Q_tiles), both sequential ("arbitrary"): the (S, K, C) output
-    block is revisited every step and accumulated into — the paper's shared
-    weight-gradient buffer across width blocks and batch threads.
+                  wblk: int, nblk: int, alg: str, gather: bool,
+                  with_dbias: bool):
+    """Grid (N/nblk, Q_tiles), both sequential ("arbitrary"): the gradient
+    output block is revisited every step and accumulated into — the paper's
+    shared weight-gradient buffer across width blocks and batch threads.
 
-    x_ref : (1, C, F), g_ref : (1, K, WBLK), o_ref : (S, K, C) fp32,
-    dbias_ref : (K, 1) fp32 (iff with_dbias) — the fused bias-gradient
-    reduction sum_{n,q} g, sharing the cotangent tile already in VMEM.
+    x_ref : (nblk, C, F), g_ref : (nblk, K, WBLK),
+    o_ref : (S, K, C) fp32 [tap_loop] or (K, S*C) fp32 [tap_packed — one
+    (K, nblk·WBLK)×(nblk·WBLK, S·C) GEMM per grid step; the wrapper
+    unpacks], dbias_ref : (K, 1) fp32 (iff with_dbias) — the fused
+    bias-gradient reduction sum_{n,q} g, sharing the cotangent tile
+    already in VMEM.
     """
     first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0)
 
@@ -251,11 +389,14 @@ def _bwd_w_kernel(x_ref, g_ref, o_ref, *dbias_ref, S: int, dilation: int,
         if with_dbias:
             dbias_ref[0][...] = jnp.zeros_like(dbias_ref[0])
 
-    x = x_ref[0]  # (C, F)
-    g = g_ref[0]  # (K, WBLK)
-    for s in range(S):  # S small GEMMs per width block (Alg. 4 line 4)
-        b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)  # (C, WBLK)
-        o_ref[s] += jnp.dot(g, b.T, preferred_element_type=jnp.float32)
+    g = _fold(g_ref, nblk)  # (K, nblk*WBLK)
+    if alg == "tap_packed":
+        o_ref[...] += _packed_bwd_w(g, x_ref, S, dilation, wblk, nblk,
+                                    gather)
+    else:
+        for s in range(S):  # S small GEMMs per width block (Alg. 4 line 4)
+            b = _folded_tap(x_ref, s, dilation, wblk, nblk)  # (C, nblk*WBLK)
+            o_ref[s] += jnp.dot(g, b.T, preferred_element_type=jnp.float32)
     if with_dbias:
         dbias_ref[0][...] += jnp.sum(g.astype(jnp.float32), axis=-1,
                                      keepdims=True)
@@ -268,6 +409,8 @@ def conv1d_bwd_weight(
     S: int,
     dilation: int = 1,
     wblk: int = 256,
+    alg: str = "tap_loop",
+    nblk: int = 1,
     with_dbias: bool = False,
     interpret: bool = False,
 ):
@@ -275,36 +418,49 @@ def conv1d_bwd_weight(
 
     ``with_dbias`` fuses the bias gradient (the (K,) reduction of gout over
     batch and width) into the same pass and returns ``(dw, dbias)``.
+    ``alg='tap_packed'`` accumulates the tap-major packed (K, S*C) gradient
+    in one GEMM per grid step (unpacked to (S, K, C) on the host);
+    ``nblk`` folds samples into the GEMM width as in ``conv1d_fwd``.
     """
     N, C, Wp = x.shape
     Ng, K, Qp = gout.shape
     assert N == Ng and Qp % wblk == 0 and Wp == Qp + (S - 1) * dilation
+    assert alg in ALGS, alg
+    assert N % nblk == 0, (N, nblk)
     F = wblk + (S - 1) * dilation
-    grid = (N, Qp // wblk)
+    grid = (N // nblk, Qp // wblk)
+    packed = alg == "tap_packed"
 
-    out_specs = pl.BlockSpec((S, K, C), lambda n, qt: (0, 0, 0))
-    out_shape = jax.ShapeDtypeStruct((S, K, C), jnp.float32)
+    if packed:
+        out_specs = pl.BlockSpec((K, S * C), lambda n, qt: (0, 0))
+        out_shape = jax.ShapeDtypeStruct((K, S * C), jnp.float32)
+    else:
+        out_specs = pl.BlockSpec((S, K, C), lambda n, qt: (0, 0, 0))
+        out_shape = jax.ShapeDtypeStruct((S, K, C), jnp.float32)
     if with_dbias:
         out_specs = [out_specs, pl.BlockSpec((K, 1), lambda n, qt: (0, 0))]
         out_shape = [out_shape, jax.ShapeDtypeStruct((K, 1), jnp.float32)]
 
     out = pl.pallas_call(
         functools.partial(_bwd_w_kernel, S=S, dilation=dilation, wblk=wblk,
+                          nblk=nblk, alg=alg, gather=interpret,
                           with_dbias=with_dbias),
         grid=grid,
         in_specs=[
-            _overlap_spec((1, C, F), lambda n, qt: (n, 0, qt * wblk)),
-            pl.BlockSpec((1, K, wblk), lambda n, qt: (n, 0, qt)),
+            _overlap_spec((nblk, C, F), lambda n, qt: (n, 0, qt * wblk)),
+            pl.BlockSpec((nblk, K, wblk), lambda n, qt: (n, 0, qt)),
         ],
         out_specs=out_specs,
         out_shape=out_shape,
         compiler_params=_compiler_params(("arbitrary", "arbitrary"), interpret),
         interpret=interpret,
     )(x, gout)
+    dw, db = out if with_dbias else (out, None)
+    if packed:  # unpack (K, S*C) tap-major rows back to the (S, K, C) layout
+        dw = dw.reshape(K, S, C).transpose(1, 0, 2)
     if with_dbias:
-        dw, db = out
         return dw, db.reshape(K)
-    return out
+    return dw
 
 
 # ---------------------------------------------------------------------------
@@ -328,7 +484,8 @@ def _dw_fwd_kernel(*refs, S: int, dilation: int, wblk: int, activation: str,
     for s in range(S):
         b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)
         acc += w_ref[s][:, None].astype(jnp.float32) * b.astype(jnp.float32)
-    u, y = _epilogue_on_acc(acc, b_ref, r_ref, activation)
+    u, y = _epilogue_on_acc(acc, b_ref,
+                            r_ref[0] if has_residual else None, activation)
     if save_preact:
         u_ref[0] = u
     o_ref[0] = y.astype(o_ref.dtype)
@@ -359,7 +516,7 @@ def depthwise_conv1d_fwd(
     F = wblk + (S - 1) * dilation
     Qp = Wp - (S - 1) * dilation
     assert Qp % wblk == 0
-    cblk = cblk or min(C, 512)
+    cblk = cblk or default_cblk(C)
     assert C % cblk == 0, (C, cblk)
     grid = (N, C // cblk, Qp // wblk)
     out_dtype = out_dtype or x.dtype
@@ -439,7 +596,7 @@ def depthwise_conv1d_bwd_weight(
     Ng, Cg, Qp = gout.shape
     assert N == Ng and C == Cg and Qp % wblk == 0
     F = wblk + (S - 1) * dilation
-    cblk = cblk or min(C, 512)
+    cblk = cblk or default_cblk(C)
     assert C % cblk == 0
     grid = (N, Qp // wblk, C // cblk)
 

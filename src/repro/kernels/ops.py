@@ -71,10 +71,15 @@ class PassConfig(NamedTuple):
     it travels inside the nondiff ``_FusedSpec``).  ``blk2`` is the pass's
     second tile knob: the filter tile of the pass's GEMM on the dense path
     (tiles K for the forward, C for bwd-data's transposed GEMM, unused for
-    bwd-weight), cblk on the depthwise path."""
+    bwd-weight), cblk on the depthwise path.  ``alg`` selects the dense
+    contraction formulation (tap_loop / tap_packed, DESIGN.md §12) and
+    ``nblk`` the batch fold; both default to the historical kernel (None ->
+    tap_loop / 1) so legacy 3-tuples keep converting."""
     backend: str = "pallas"      # 'pallas' | 'xla'
     wblk: int | None = None
     blk2: int | None = None
+    alg: str | None = None       # 'tap_loop' | 'tap_packed' (dense pallas)
+    nblk: int | None = None      # batch fold (dense pallas)
 
 
 def _as_pass_cfg(cfg) -> PassConfig | None:
@@ -101,7 +106,8 @@ def _resolve_auto(x, *, C, K, S, dilation, padding, wblk, kblk, depthwise,
     every pass's cache key, so a fused conv never reuses the unfused
     instance's tiles.
 
-    Returns ``(backend, wblk, kblk, (bwd_data_cfg, bwd_weight_cfg))``.
+    Returns ``(backend, wblk, kblk, alg, nblk, (bwd_data_cfg,
+    bwd_weight_cfg))``.
     """
     from repro import tune  # late import: tune.measure calls back into ops
 
@@ -113,8 +119,10 @@ def _resolve_auto(x, *, C, K, S, dilation, padding, wblk, kblk, depthwise,
     bwd = []
     for p in ("bwd_data", "bwd_weight"):
         cfg = tune.get_config(**kw, pass_=p, allow_measure=False)
-        bwd.append(PassConfig(cfg.backend, cfg.wblk, cfg.kblk))
-    return fwd.backend, wblk or fwd.wblk, kblk or fwd.kblk, tuple(bwd)
+        bwd.append(PassConfig(cfg.backend, cfg.wblk, cfg.kblk, cfg.alg,
+                              cfg.nblk))
+    return (fwd.backend, wblk or fwd.wblk, kblk or fwd.kblk, fwd.alg,
+            fwd.nblk, tuple(bwd))
 
 
 def _pad_amounts(S: int, dilation: int, padding: Padding) -> tuple[int, int]:
@@ -160,6 +168,13 @@ def pick_kblk(n_filters: int) -> int:
     return n_filters
 
 
+def _legal_nblk(nblk: int | None, N: int) -> int:
+    """A batch fold is usable only when it divides the batch; anything else
+    (including a tuned nblk applied to a different batch at trace time)
+    falls back to the unfolded kernel."""
+    return nblk if nblk and N % nblk == 0 else 1
+
+
 def _dtype_name(a) -> str | None:
     return None if a is None else jnp.dtype(a.dtype).name
 
@@ -170,7 +185,8 @@ class _FusedSpec(NamedTuple):
     path, cblk for the depthwise path.  Dtypes travel as names so the spec
     stays hashable; bias_dtype/residual_dtype double as has-bias/has-residual
     flags for the bwd rule.  ``bwd_data``/``bwd_weight`` are the resolved
-    per-pass configs (None -> static fallback derived in the bwd rule)."""
+    per-pass configs (None -> static fallback derived in the bwd rule);
+    ``alg``/``nblk`` are the forward's dense formulation + batch fold."""
     dilation: int
     wblk: int
     blk2: int | None
@@ -181,6 +197,8 @@ class _FusedSpec(NamedTuple):
     out_dtype: str | None
     bwd_data: PassConfig | None = None
     bwd_weight: PassConfig | None = None
+    alg: str = "tap_loop"
+    nblk: int = 1
 
     @property
     def out_jnp_dtype(self):
@@ -193,7 +211,8 @@ class _FusedSpec(NamedTuple):
 
 
 def _plain_fwd_padded(x, w, dilation, wblk, kblk, interpret,
-                      pass_: str = "fwd"):
+                      pass_: str = "fwd", alg: str = "tap_loop",
+                      nblk: int = 1):
     """Epilogue-free forward: x (N, C, W) already logically padded; returns
     (N, K, Q) via the Pallas kernel, handling width round-up to the tile
     size.  Also the bwd-data engine (Alg. 3, ``pass_='bwd_data'``)."""
@@ -205,7 +224,8 @@ def _plain_fwd_padded(x, w, dilation, wblk, kblk, interpret,
     if Qp + span > W:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
     out = _k.conv1d_pass(pass_, x, w, dilation=dilation, wblk=wblk,
-                         kblk=kblk, interpret=interpret)
+                         kblk=kblk, alg=alg, nblk=_legal_nblk(nblk, N),
+                         interpret=interpret)
     return out[:, :, :Q]
 
 
@@ -226,7 +246,8 @@ def _fused_fwd_padded(spec: _FusedSpec, x, w, bias, residual,
     out = _k.conv1d_pass(
         "fwd", x, w, bias=bias, residual=residual, activation=spec.activation,
         save_preact=save_preact, dilation=spec.dilation, wblk=spec.wblk,
-        kblk=spec.blk2, out_dtype=spec.out_jnp_dtype, interpret=spec.interpret)
+        kblk=spec.blk2, alg=spec.alg, nblk=spec.nblk,
+        out_dtype=spec.out_jnp_dtype, interpret=spec.interpret)
     if save_preact:
         y, u = out
         return y[:, :, :Q], u[:, :, :Q]
@@ -319,7 +340,8 @@ def _conv1d_pallas_bwd(spec, res, gout):
         # a kblk tuned for K need not — fall back to the divisor ladder
         kblk = bd.blk2 if bd.blk2 and C % bd.blk2 == 0 else pick_kblk(C)
         dx = _plain_fwd_padded(g_pad, w_flip, d, bd.wblk or spec.wblk, kblk,
-                               spec.interpret, pass_="bwd_data")
+                               spec.interpret, pass_="bwd_data",
+                               alg=bd.alg or "tap_loop", nblk=bd.nblk or 1)
     dx = dx.astype(x.dtype)
     # --- Alg. 4: bwd-weight kernel (fp32 accumulation), with the bias
     # gradient fused into the same sequential-grid pass when bias exists —
@@ -336,6 +358,7 @@ def _conv1d_pallas_bwd(spec, res, gout):
         gp = jnp.pad(du, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else du
         dwout = _k.conv1d_pass(
             "bwd_weight", xp, gp, S=S, dilation=d, wblk=wblk,
+            alg=bw.alg or "tap_loop", nblk=_legal_nblk(bw.nblk, N),
             with_dbias=spec.bias_dtype is not None, interpret=spec.interpret)
     dw, dbias, dres = _epilogue_param_grads(spec, dwout, du)
     return dx, dw.astype(w.dtype), dbias, dres
@@ -356,6 +379,8 @@ def conv1d(
     backend: str | None = None,
     wblk: int | None = None,
     kblk: int | None = None,
+    alg: str | None = None,
+    nblk: int | None = None,
     out_dtype=None,
     interpret: bool | None = None,
     bwd_data_cfg=None,
@@ -371,13 +396,18 @@ def conv1d(
     relu/gelu/silu, residual (N, K, Q).  ``out_dtype`` overrides the output
     dtype (default x.dtype) without an extra cast op.
 
+    ``alg`` pins the dense contraction formulation (``tap_loop`` /
+    ``tap_packed``, DESIGN.md §12) and ``nblk`` the batch fold of the
+    forward kernel; both default to the tuner's choice under
+    backend='auto' and to the historical kernel otherwise.
+
     backend='auto' asks the tuning subsystem (``repro.tune``) to pick the
     backend and tile sizes **per pass**: the forward's, plus each backward
     pass's own resolved config for the custom VJP; see ``_resolve_auto``.
     ``bwd_data_cfg``/``bwd_weight_cfg`` (a ``PassConfig`` or a
-    ``(backend, wblk, kblk)`` tuple) pin a backward pass explicitly,
-    winning over the tuner — the knob ``tune.measure`` uses to time one
-    pass's candidate inside a ``jax.vjp`` instance.
+    ``(backend, wblk, kblk[, alg, nblk])`` tuple) pin a backward pass
+    explicitly, winning over the tuner — the knob ``tune.measure`` uses to
+    time one pass's candidate inside a ``jax.vjp`` instance.
     """
     backend = backend or default_backend()
     activation = _ep.canon(activation)
@@ -394,11 +424,14 @@ def conv1d(
         assert residual.shape == (x.shape[0], K, Q), \
             (residual.shape, (x.shape[0], K, Q))
     if backend == "auto":
-        backend, wblk, kblk, (auto_bd, auto_bw) = _resolve_auto(
-            x, C=C, K=K, S=S, dilation=dilation, padding=padding,
-            wblk=wblk, kblk=kblk, depthwise=False,
-            epilogue=_ep.signature(bias is not None, activation,
-                                   residual is not None))
+        backend, wblk, kblk, auto_alg, auto_nblk, (auto_bd, auto_bw) = \
+            _resolve_auto(
+                x, C=C, K=K, S=S, dilation=dilation, padding=padding,
+                wblk=wblk, kblk=kblk, depthwise=False,
+                epilogue=_ep.signature(bias is not None, activation,
+                                       residual is not None))
+        alg = alg or auto_alg
+        nblk = nblk or auto_nblk
         bwd_data_cfg = bwd_data_cfg or auto_bd
         bwd_weight_cfg = bwd_weight_cfg or auto_bw
     if backend == "ref":
@@ -415,7 +448,8 @@ def conv1d(
         spec = _FusedSpec(dilation, wblk, kblk, interpret, activation,
                           _dtype_name(bias), _dtype_name(residual),
                           jnp.dtype(out_dtype).name if out_dtype else None,
-                          bwd_data_cfg, bwd_weight_cfg)
+                          bwd_data_cfg, bwd_weight_cfg,
+                          alg or "tap_loop", _legal_nblk(nblk, x.shape[0]))
         return _conv1d_pallas(spec, x, w, bias, residual)
     raise ValueError(f"unknown conv backend {backend!r}")
 
@@ -571,7 +605,8 @@ def depthwise_conv1d(
         assert residual.shape == (x.shape[0], C, Q), \
             (residual.shape, (x.shape[0], C, Q))
     if backend == "auto":
-        backend, wblk, cblk, (auto_bd, auto_bw) = _resolve_auto(
+        # depthwise kernels have no alg/nblk axes — drop the dense knobs
+        backend, wblk, cblk, _, _, (auto_bd, auto_bw) = _resolve_auto(
             x, C=C, K=C, S=S, dilation=dilation, padding=padding,
             wblk=wblk, kblk=cblk, depthwise=True,
             epilogue=_ep.signature(bias is not None, activation,

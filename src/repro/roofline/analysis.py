@@ -52,6 +52,43 @@ HBM_BW = 819e9           # bytes/s
 ICI_BW = 50e9            # bytes/s per link
 HBM_PER_CHIP = 16 * 2**30
 
+
+# --- Per-device roofline peaks (shared with repro.tune.cost) ---------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Peaks:
+    flops_per_s: float
+    bytes_per_s: float
+
+
+# Coarse per-device peaks; matched by substring of jax's device_kind.
+DEVICE_PEAKS = {
+    "v5": Peaks(197e12, 819e9),     # TPU v5e (bf16 MXU)
+    "v4": Peaks(275e12, 1200e9),
+    "tpu": Peaks(180e12, 800e9),    # generic TPU fallback
+    "cpu": Peaks(1e11, 5e10),       # container CPU fallback
+}
+
+
+def peaks_for(device_kind: str) -> Peaks:
+    dk = device_kind.lower()
+    for sub, p in DEVICE_PEAKS.items():
+        if sub in dk:
+            return p
+    return DEVICE_PEAKS["cpu"]
+
+
+def achieved_fraction_of_peak(flops: float, sec: float,
+                              device_kind: str | None = None) -> float:
+    """Paper-style *efficiency*: achieved FLOP/s ÷ the device's roofline
+    peak — how Figures 4-6 report every measurement.  ``device_kind``
+    defaults to the first jax device (the machine the benchmark ran on)."""
+    if device_kind is None:
+        import jax
+        device_kind = jax.devices()[0].device_kind
+    return (flops / max(sec, 1e-30)) / peaks_for(device_kind).flops_per_s
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
     "s16": 2, "u16": 2, "f16": 2, "bf16": 2,

@@ -6,9 +6,12 @@ cuDNN does it by algorithm dispatch).  The package's currency is the
 ``ConvProblem`` descriptor — one pass (fwd / bwd_data / bwd_weight) of one
 layer instance — and every layer below speaks it:
 
-  * ``problem``  — the descriptor + per-pass derived GEMM views;
-  * ``space``    — legal (backend, wblk, kblk) candidates under the pass's
-                   kernel contract and a VMEM-footprint budget;
+  * ``problem``  — the descriptor + per-pass derived GEMM views, plus the
+                   optional ``alg``/``nblk`` search constraints (§12);
+  * ``space``    — legal (backend, wblk, kblk, alg, nblk) candidates under
+                   the pass's kernel contract and a VMEM-footprint budget
+                   (``alg`` = tap_loop/tap_packed contraction formulation,
+                   ``nblk`` = batch fold into the GEMM width);
   * ``cost``     — analytic roofline ranking (prunes before measuring, and
                    is the whole answer when measurement is disabled), with
                    a bwd-weight model reflecting its sequential grid;
@@ -61,6 +64,8 @@ class TunedConfig:
     kblk: int | None             # the pass's second tile knob (kblk/cblk)
     source: str                  # 'cache' | 'measured' | 'cost' | 'default'
     sec: float | None = None     # measured seconds (if any)
+    alg: str | None = None       # dense formulation (None -> tap_loop)
+    nblk: int | None = None      # batch fold (None -> 1)
 
 
 def device_kind() -> str:
@@ -72,11 +77,12 @@ def measurement_enabled() -> bool:
 
 
 def _make_problem(*, N, C, K, S, dilation, Q, dtype, padding="VALID",
-                  depthwise=False, epilogue="none",
-                  pass_="fwd") -> ConvProblem:
+                  depthwise=False, epilogue="none", pass_="fwd",
+                  alg=None, nblk=None) -> ConvProblem:
     return ConvProblem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
                        dtype=str(jax.numpy.dtype(dtype)), padding=padding,
-                       depthwise=depthwise, epilogue=epilogue, pass_=pass_)
+                       depthwise=depthwise, epilogue=epilogue, pass_=pass_,
+                       alg=alg, nblk=nblk)
 
 
 def _default_config(prob: ConvProblem) -> TunedConfig:
@@ -88,14 +94,16 @@ def _default_config(prob: ConvProblem) -> TunedConfig:
         # never run the transposed GEMM untiled on its filter dimension:
         # the divisor-of-C ladder is the static fallback
         blk2 = ops.pick_kblk(prob.C)
+    # a constrained problem's default still honors the pinned axes
     return TunedConfig(backend,
                        ops.pick_wblk(prob.q_out, prob.S, prob.dilation),
-                       blk2, "default")
+                       blk2, "default", alg=prob.alg, nblk=prob.nblk)
 
 
 def tune_problem(prob: ConvProblem, *, cache: TuneCache | None = None,
                  measure: bool = True, top_k: int = 4, iters: int = 5,
-                 warmup: int = 2) -> TunedConfig:
+                 warmup: int = 2,
+                 backends: tuple[str, ...] | None = None) -> TunedConfig:
     """Search the candidate space for one problem (one pass) and persist
     the winner under the problem's own key.
 
@@ -104,38 +112,51 @@ def tune_problem(prob: ConvProblem, *, cache: TuneCache | None = None,
     timed and the median-fastest wins (source 'measured') — a forward
     problem times the forward call, a backward problem times the jitted
     ``jax.vjp`` cotangent pull with the candidate pinned on its pass.
+    ``backends`` restricts the searched backends (``('pallas',)`` ranks
+    the kernel formulations head-to-head without the library entry —
+    useful when developing TPU kernels on the CPU container, where the
+    interpret-mode derate otherwise hands every shape to xla).
     """
     if cache is None:  # NOT `or`: an empty TuneCache is falsy (__len__)
         cache = get_default_cache()
-    cands = _space.enumerate_candidates(prob)
+    cands = _space.enumerate_candidates(prob, backends=backends)
+    if not cands:
+        raise ValueError(
+            f"no legal candidates for {prob.key(device_kind())} under "
+            f"backends={backends}: check the backend names and whether a "
+            f"pinned alg/nblk fits the VMEM budget for any tile")
     ranked = _cost.rank(cands, prob, device_kind=device_kind())
     if measure:
         timed = [(_measure.time_candidate(c, prob, iters=iters,
                                           warmup=warmup), c)
                  for c in ranked[:top_k]]
         sec, best = min(timed, key=lambda t: t[0])
-        cfg = TunedConfig(best.backend, best.wblk, best.kblk, "measured", sec)
+        cfg = TunedConfig(best.backend, best.wblk, best.kblk, "measured",
+                          sec, best.alg, best.nblk)
     else:
         best = ranked[0]
-        cfg = TunedConfig(best.backend, best.wblk, best.kblk, "cost")
+        cfg = TunedConfig(best.backend, best.wblk, best.kblk, "cost",
+                          alg=best.alg, nblk=best.nblk)
     cache.put(prob.key(device_kind()),
-              {"backend": cfg.backend, "wblk": cfg.wblk,
-               "kblk": cfg.kblk, "source": cfg.source, "sec": cfg.sec})
+              {**best.as_entry(), "source": cfg.source, "sec": cfg.sec})
     return cfg
 
 
 def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
          padding: str = "VALID", depthwise: bool = False,
          epilogue: str = "none", pass_: str = "fwd",
+         alg: str | None = None, nblk: int | None = None,
          cache: TuneCache | None = None, measure: bool = True,
-         top_k: int = 4, iters: int = 5, warmup: int = 2) -> TunedConfig:
+         top_k: int = 4, iters: int = 5, warmup: int = 2,
+         backends: tuple[str, ...] | None = None) -> TunedConfig:
     """Keyword spelling of ``tune_problem`` (shapes in forward-layer
-    coordinates; ``pass_`` selects the kernel being tuned)."""
+    coordinates; ``pass_`` selects the kernel being tuned; ``alg``/``nblk``
+    constrain the formulation axes to one value and tag the cache key)."""
     prob = _make_problem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
                          dtype=dtype, padding=padding, depthwise=depthwise,
-                         epilogue=epilogue, pass_=pass_)
+                         epilogue=epilogue, pass_=pass_, alg=alg, nblk=nblk)
     return tune_problem(prob, cache=cache, measure=measure, top_k=top_k,
-                        iters=iters, warmup=warmup)
+                        iters=iters, warmup=warmup, backends=backends)
 
 
 def get_config_for(prob: ConvProblem, *, cache: TuneCache | None = None,
@@ -153,8 +174,11 @@ def get_config_for(prob: ConvProblem, *, cache: TuneCache | None = None,
         cache = get_default_cache()
     hit = cache.get(prob.key(device_kind()))
     if hit is not None:
+        # legacy entries have no alg/nblk fields: they were measured on the
+        # historical kernel, so they read back as (tap_loop, unfolded)
         return TunedConfig(hit["backend"], hit.get("wblk"), hit.get("kblk"),
-                           "cache", hit.get("sec"))
+                           "cache", hit.get("sec"), hit.get("alg"),
+                           hit.get("nblk"))
     if allow_measure is None:
         allow_measure = measurement_enabled()
     if allow_measure:
@@ -165,12 +189,13 @@ def get_config_for(prob: ConvProblem, *, cache: TuneCache | None = None,
 def get_config(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
                dtype, padding: str = "VALID", depthwise: bool = False,
                epilogue: str = "none", pass_: str = "fwd",
+               alg: str | None = None, nblk: int | None = None,
                cache: TuneCache | None = None,
                allow_measure: bool | None = None) -> TunedConfig:
     """Keyword spelling of ``get_config_for``."""
     prob = _make_problem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
                          dtype=dtype, padding=padding, depthwise=depthwise,
-                         epilogue=epilogue, pass_=pass_)
+                         epilogue=epilogue, pass_=pass_, alg=alg, nblk=nblk)
     return get_config_for(prob, cache=cache, allow_measure=allow_measure)
 
 

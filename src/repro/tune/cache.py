@@ -20,7 +20,14 @@ keep resolving exactly the instances they were measured for, and fused
 shapes always get distinct entries.  The same rule covers passes: a
 backward pass appends ``|pass:bwd_data`` / ``|pass:bwd_weight`` while the
 forward appends nothing, so untagged legacy keys keep resolving exactly
-the forward instances they were measured for (DESIGN.md §11).
+the forward instances they were measured for (DESIGN.md §11).  And it
+covers the dense formulation axes (DESIGN.md §12): a problem *constrained*
+to one contraction formulation / batch fold appends ``|alg:tap_packed`` /
+``|nblk:2`` (how the benchmarks keep per-alg entries apart); the
+unconstrained problem — the form every ``backend='auto'`` lookup uses —
+appends nothing, its entry simply *records* the winning ``alg``/``nblk``
+alongside wblk/kblk.  Legacy entries without those fields read back as the
+historical kernel (tap_loop, unfolded).
 
 Path resolution: explicit argument > ``REPRO_TUNE_CACHE`` env var >
 ``~/.cache/repro/tune_cache.json``.  Writes are atomic (tmp file + rename)
@@ -46,7 +53,8 @@ def default_cache_path() -> str:
 def cache_key(*, device_kind: str, dtype: str, N: int, C: int, K: int,
               S: int, dilation: int, Q: int, padding: str,
               depthwise: bool = False, epilogue: str = "none",
-              pass_: str = "fwd") -> str:
+              pass_: str = "fwd", alg: str | None = None,
+              nblk: int | None = None) -> str:
     kind = "dw" if depthwise else "dense"
     base = (f"{device_kind}|{dtype}|N{N}|C{C}|K{K}|S{S}|d{dilation}"
             f"|Q{Q}|{padding}|{kind}")
@@ -54,7 +62,15 @@ def cache_key(*, device_kind: str, dtype: str, N: int, C: int, K: int,
     if epilogue not in (None, "", "none"):
         base = f"{base}|ep:{epilogue}"
     # forward -> legacy key form (pre-pass-aware caches stay readable)
-    return base if pass_ in (None, "", "fwd") else f"{base}|pass:{pass_}"
+    if pass_ not in (None, "", "fwd"):
+        base = f"{base}|pass:{pass_}"
+    # unconstrained formulation/fold -> legacy key form; a constraint tags
+    # the key so per-alg/per-fold entries never collide with the free one
+    if alg:
+        base = f"{base}|alg:{alg}"
+    if nblk:
+        base = f"{base}|nblk:{nblk}"
+    return base
 
 
 class TuneCache:

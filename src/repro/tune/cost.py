@@ -25,15 +25,36 @@ Estimates wall-clock for each (backend, wblk, kblk) candidate of a
     tie-breaker that prefers fewer, larger tiles when compute and traffic
     are identical.
 
+Two formulation-axis terms (DESIGN.md §12) separate ``tap_packed`` from
+``tap_loop`` where the plain roofline cannot:
+
+  * **MXU occupancy** — a 128×128 systolic matmul of (M, K̄)×(K̄, N̄)
+    sustains ~min(1, M/128)·min(1, K̄/128)·min(1, N̄/128) of peak: the
+    paper's C=K=15 tap GEMM occupies ~1%.  Packing lifts the short
+    dimension (contraction S·C for the fwd-shaped passes, the S·C output
+    columns for bwd-weight) toward full tiles.  The compute term is divided
+    by this occupancy, so skinny problems rank tap_packed first and fat
+    ones (C, K ≥ 128, occupancy already ~1) keep the copy-free tap loop.
+    The derate applies **only on TPU device kinds**: interpret mode has no
+    MXU, so off-TPU the model must not reward packing — a cost-only
+    ranking there would otherwise cache device-inappropriate winners.
+  * **packed VMEM copy** — materialising the (S·ctr, nblk·WBLK) operand is
+    VMEM-to-VMEM traffic that the tap loop never pays, charged at a
+    multiple of HBM bandwidth (``VMEM_BW_RATIO``).
+
+Batch folding (``nblk``) shows up as fewer grid cells (overhead), fewer
+tap-block restages (weight traffic is charged per batch×filter-tile cell),
+and a wider GEMM — measurement decides where that wins.
+
 The model only needs to *rank* candidates (prune the space before
 measuring, or pick a default when measurement is disabled), so the peak
 numbers are deliberately coarse.
 """
 from __future__ import annotations
 
-import dataclasses
-
 from repro.kernels import epilogue as _epi
+from repro.kernels.conv1d_brgemm import default_cblk
+from repro.roofline.analysis import DEVICE_PEAKS, Peaks, peaks_for  # noqa: F401  (re-export; peaks live with the roofline)
 from repro.roofline.flops import conv1d_flops, conv1d_min_bytes
 
 from .problem import ConvProblem
@@ -54,28 +75,18 @@ EFF_XLA_HOST = 0.5
 # shared gradient block), losing the forward's cross-cell overlap.
 EFF_SEQ_GRID = 0.6
 
-
-@dataclasses.dataclass(frozen=True)
-class Peaks:
-    flops_per_s: float
-    bytes_per_s: float
+MXU_DIM = 128                   # systolic array edge
+VMEM_BW_RATIO = 8.0             # VMEM bandwidth as a multiple of HBM bw
+OCC_FLOOR = 1e-3                # never divide compute by a zero occupancy
 
 
-# Coarse per-device peaks; matched by substring of jax's device_kind.
-DEVICE_PEAKS = {
-    "v5": Peaks(197e12, 819e9),     # TPU v5e (bf16 MXU)
-    "v4": Peaks(275e12, 1200e9),
-    "tpu": Peaks(180e12, 800e9),    # generic TPU fallback
-    "cpu": Peaks(1e11, 5e10),       # container CPU fallback
-}
-
-
-def peaks_for(device_kind: str) -> Peaks:
-    dk = device_kind.lower()
-    for sub, p in DEVICE_PEAKS.items():
-        if sub in dk:
-            return p
-    return DEVICE_PEAKS["cpu"]
+def mxu_occupancy(m: float, k: float, n: float) -> float:
+    """Sustained fraction of the 128×128 MXU for an (m, k)×(k, n) matmul:
+    each dimension short of a full tile idles the corresponding rows /
+    pipeline stages / lanes."""
+    frac = (min(1.0, m / MXU_DIM) * min(1.0, k / MXU_DIM)
+            * min(1.0, n / MXU_DIM))
+    return max(frac, OCC_FLOOR)
 
 
 def estimate_seconds(cand: Candidate, prob: ConvProblem, *,
@@ -113,45 +124,87 @@ def estimate_seconds(cand: Candidate, prob: ConvProblem, *,
         return max(flops / peaks.flops_per_s, mem / peaks.bytes_per_s) / eff
 
     wblk = cand.wblk
+    alg = cand.alg or "tap_loop"
+    nblk = cand.nblk or 1
+    packed = alg == "tap_packed"
     Qp = round_up(q, wblk)
     flops *= Qp / q             # padded columns are computed and discarded
     F = wblk + prob.span
     q_tiles = Qp // wblk
+    n_cells = max(1, prob.N // nblk)
     eff = EFF_PALLAS_TPU if is_tpu else EFF_PALLAS_INTERPRET
+    # the packed operand is a VMEM->VMEM copy the tap loop never pays
+    vmem_bw = peaks.bytes_per_s * VMEM_BW_RATIO
 
     if prob.pass_ == "bwd_weight":
         # sequential grid: the fp32 gradient block stays VMEM-resident (one
         # writeback), each cell re-stages one footprint + one cotangent tile
+        if prob.depthwise or not is_tpu:
+            # VPU fma chain / interpret mode: no MXU to under-fill —
+            # off-TPU the model must NOT reward packing, or cost-only
+            # ranking caches device-inappropriate winners
+            occ = 1.0
+        else:
+            # (K, nblk·WBLK)×(nblk·WBLK, S·C | C): packing widens the
+            # output columns of each GEMM from C to S·C
+            occ = mxu_occupancy(prob.K, nblk * wblk,
+                                prob.S * prob.C if packed else prob.C)
         if prob.depthwise:
-            cblk = cand.kblk or min(prob.C, 512)
+            cblk = cand.kblk or default_cblk(prob.C)
             c_tiles = max(1, prob.C // cblk)
             cells = prob.N * q_tiles * c_tiles
             dw_elems = prob.S * prob.C
         else:
-            cells = prob.N * q_tiles
+            cells = n_cells * q_tiles
             dw_elems = prob.S * prob.K * prob.C
         x_traffic = prob.N * q_tiles * prob.C * F
         g_traffic = prob.N * nf * Qp
         mem = db * (x_traffic + g_traffic) + 4 * dw_elems
-        return (max(flops / peaks.flops_per_s, mem / peaks.bytes_per_s)
-                / (eff * EFF_SEQ_GRID) + cells * CELL_OVERHEAD_SEC)
+        pack_sec = (db * prob.S * prob.C * prob.N * Qp / vmem_bw
+                    if packed else 0.0)
+        # folding shrinks the grid but still stages one (x, cotangent) tile
+        # pair per *sample*: charge both, so nblk cannot launder per-tile
+        # overhead away
+        stages = (prob.N * q_tiles * (c_tiles if prob.depthwise else 1))
+        return (max(flops / (peaks.flops_per_s * occ), mem / peaks.bytes_per_s)
+                / (eff * EFF_SEQ_GRID) + pack_sec
+                + (cells + stages) * CELL_OVERHEAD_SEC)
 
     # forward-shaped passes (fwd / bwd-data's transposed GEMM)
     nb = cand.kblk or prob.blk2_dim
     b_tiles = max(1, prob.blk2_dim // nb)
     if prob.depthwise:
         x_traffic = prob.N * b_tiles * q_tiles * nb * F     # cblk rows of F
+        occ = 1.0               # VPU
+    elif not is_tpu:
+        x_traffic = prob.N * b_tiles * q_tiles * prob.contraction * F
+        occ = 1.0               # interpret mode: no MXU to under-fill
     else:
         x_traffic = prob.N * b_tiles * q_tiles * prob.contraction * F
-    w_traffic = prob.S * nf * (1 if prob.depthwise else prob.contraction)
+        # (KB, ctr_eff)×(ctr_eff, nblk·WBLK): packing stretches the
+        # contraction from ctr to S·ctr (51·15 = 765 ≈ 6 full MXU passes
+        # instead of 51 near-empty ones)
+        ctr_eff = (prob.S if packed else 1) * prob.contraction
+        occ = mxu_occupancy(nb, ctr_eff, nblk * wblk)
+    # the tap block is restaged once per (batch-fold × filter-tile) cell
+    # (it is revisited across the innermost width sweep): folding the batch
+    # divides the restage count
+    w_traffic = (n_cells * b_tiles * prob.S * nb
+                 * (1 if prob.depthwise else prob.contraction))
     out_traffic = prob.N * nf * Qp
     # fused epilogue rides the hot accumulator: only the residual operand
     # adds HBM traffic (one read per output tile); bias is noise
     ep_traffic = (has_residual * prob.N * nf * Qp) + has_bias * nf
     mem = db * (x_traffic + w_traffic + out_traffic + ep_traffic)
-    cells = prob.N * b_tiles * q_tiles
-    return (max(flops / peaks.flops_per_s, mem / peaks.bytes_per_s) / eff
-            + cells * CELL_OVERHEAD_SEC)
+    cells = n_cells * b_tiles * q_tiles
+    # one output-tile store per sample regardless of the fold (the kernel
+    # unfolds the GEMM width back into per-sample tiles), so nblk reduces
+    # launches but not per-tile stores
+    stores = prob.N * b_tiles * q_tiles
+    pack_sec = (db * prob.S * prob.contraction * b_tiles * prob.N * Qp
+                / vmem_bw if packed else 0.0)
+    return (max(flops / (peaks.flops_per_s * occ), mem / peaks.bytes_per_s)
+            / eff + pack_sec + (cells + stores) * CELL_OVERHEAD_SEC)
 
 
 def rank(cands: list[Candidate], prob: ConvProblem, *,

@@ -69,6 +69,8 @@ def time_candidate(cand: Candidate, prob: ConvProblem, *, iters: int = 5,
     x, w, bias, residual, activation = _problem_operands(prob, seed)
     conv = ops.depthwise_conv1d if prob.depthwise else ops.conv1d
     blk2_kw = "cblk" if prob.depthwise else "kblk"
+    # the dense formulation/fold axes; depthwise kernels don't have them
+    alg_kw = {} if prob.depthwise else {"alg": cand.alg, "nblk": cand.nblk}
 
     if prob.pass_ == "fwd":
         @jax.jit
@@ -76,12 +78,12 @@ def time_candidate(cand: Candidate, prob: ConvProblem, *, iters: int = 5,
             return conv(x, w, bias=bias, activation=activation,
                         residual=residual, dilation=prob.dilation,
                         padding=prob.padding, backend=cand.backend,
-                        wblk=cand.wblk, **{blk2_kw: cand.kblk})
+                        wblk=cand.wblk, **{blk2_kw: cand.kblk}, **alg_kw)
         return median_time(f, x, w, iters=iters, warmup=warmup)
 
     # backward pass: pin the candidate onto the target pass of the custom
     # VJP (forward + other pass at defaults) and time the cotangent pull.
-    cfg = (cand.backend, cand.wblk, cand.kblk)
+    cfg = (cand.backend, cand.wblk, cand.kblk, cand.alg, cand.nblk)
     bwd_kw = {"bwd_data_cfg": cfg if prob.pass_ == "bwd_data" else None,
               "bwd_weight_cfg": cfg if prob.pass_ == "bwd_weight" else None}
 

@@ -24,6 +24,25 @@ N = 4  # batch (paper used 56/64; scaled to the 1-core container)
 SMOKE = dict(N=1, C=8, K=8, S=3, dilation=2, Q=128, dtype="float32",
              padding="SAME")
 
+# The AtacWorks training cell (paper Table 1 / the 6.86x e2e win) in both
+# precisions: the skinny C=K=15/16, S=51, d=8 body-conv shape the
+# tap-packed formulation (DESIGN.md §12) exists for.  ``scripts/tune.py
+# --figset atacworks`` pre-populates exactly the shapes the e2e training
+# benchmark runs.
+ATACWORKS_CELLS = [
+    dict(N=N, C=15, K=15, S=51, dilation=8, Q=1000, dtype="float32",
+         padding="SAME"),
+    dict(N=N, C=15, K=15, S=51, dilation=8, Q=5000, dtype="float32",
+         padding="SAME"),
+    dict(N=N, C=16, K=16, S=51, dilation=8, Q=5000, dtype="bfloat16",
+         padding="SAME"),
+]
+
+
+def atacworks_shapes():
+    """The AtacWorks-cell work-list (same schema as ``figset_shapes``)."""
+    yield from (dict(p) for p in ATACWORKS_CELLS)
+
 
 def smoke_shapes():
     """The CI smoke work-list (one problem dict, same schema as

@@ -31,12 +31,22 @@ the GEMM each pass actually runs:
 untagged legacy key form, so caches written before pass-aware tuning
 existed keep resolving exactly the (forward) instances they were measured
 for; backward passes append a ``|pass:`` tag (DESIGN.md §11).
+
+``alg``/``nblk`` (DESIGN.md §12) are optional **search constraints**, not
+shape coordinates: None (the default, and the form every
+``backend='auto'`` lookup builds) leaves the tuner free to choose the
+dense contraction formulation (tap_loop / tap_packed) and batch fold, and
+keeps the legacy untagged key.  Setting them restricts the candidate
+space to that formulation/fold and tags the key (``|alg:``/``|nblk:``) so
+head-to-head per-alg measurements get their own cache entries.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import jax.numpy as jnp
+
+from repro.kernels.conv1d_brgemm import ALGS  # the kernel's formulation list
 
 from .cache import cache_key
 
@@ -61,10 +71,16 @@ class ConvProblem:
     depthwise: bool = False
     epilogue: str = "none"       # repro.kernels.epilogue.signature
     pass_: str = PASS_FWD
+    alg: str | None = None       # constrain the formulation (None = free)
+    nblk: int | None = None      # constrain the batch fold (None = free)
 
     def __post_init__(self):
         if self.pass_ not in PASSES:
             raise ValueError(f"unknown pass {self.pass_!r}; expected {PASSES}")
+        if self.alg is not None and self.alg not in ALGS:
+            raise ValueError(f"unknown alg {self.alg!r}; expected {ALGS}")
+        if self.nblk is not None and (self.nblk < 1 or self.N % self.nblk):
+            raise ValueError(f"nblk {self.nblk} does not divide N={self.N}")
         # canonicalize the dtype spelling so keys are stable however built
         object.__setattr__(self, "dtype", str(jnp.dtype(self.dtype)))
 
@@ -127,4 +143,4 @@ class ConvProblem:
                          C=self.C, K=self.K, S=self.S, dilation=self.dilation,
                          Q=self.Q, padding=self.padding,
                          depthwise=self.depthwise, epilogue=self.epilogue,
-                         pass_=self.pass_)
+                         pass_=self.pass_, alg=self.alg, nblk=self.nblk)

@@ -1,14 +1,16 @@
 """Candidate enumeration for the conv1d tuner — pass-aware.
 
-A candidate is a (backend, wblk, kblk) triple for one ``ConvProblem``
-(one pass of one layer instance):
+A candidate is a (backend, wblk, kblk, alg, nblk) tuple for one
+``ConvProblem`` (one pass of one layer instance):
 
   * backend 'pallas' — the BRGEMM kernel; wblk is the width tile, kblk the
     second tile knob of the *pass*: the filter tile of the pass's GEMM
     (tiles K for the forward, **C** for bwd-data's transposed GEMM; cblk
     tiles C for every depthwise pass; the dense bwd-weight pass has no
     second knob — its whole (S, K, C) gradient block is the sequential
-    grid's resident output).
+    grid's resident output).  ``alg`` picks the dense contraction
+    formulation (tap_loop / tap_packed, DESIGN.md §12) and ``nblk`` the
+    batch fold; depthwise passes have neither axis (VPU kernel).
   * backend 'xla'    — the vendor-library formulation; no tiling knobs.
 
 Legality for the Pallas kernels (the shape contract of
@@ -16,25 +18,35 @@ Legality for the Pallas kernels (the shape contract of
 
   * wblk is a multiple of the 128-lane TPU tile;
   * kblk divides ``problem.blk2_dim`` (K fwd / C bwd-data / C depthwise);
+  * nblk divides the batch N; alg 'tap_packed' exists only for dense
+    passes with S > 1 (at S == 1 it *is* the tap loop);
   * the pass's VMEM working set fits a per-core budget (half of the
     ~16 MiB VMEM, leaving room for double buffering).  Forward-shaped
     passes stage the dilated input footprint ``F = WBLK + (S-1)*d``, the
     tap block, the output tile, the fp32 accumulator, and — forward only —
     the fused epilogue operands (bias + residual tiles).  The bwd-weight
     pass instead keeps the whole fp32 weight-gradient block VMEM-resident
-    across its sequential grid;
+    across its sequential grid.  tap_packed additionally materialises the
+    (S·ctr, nblk·WBLK) packed operand in VMEM, and batch folding scales
+    every per-sample tile by nblk — both are charged here so an illegal
+    combination is never enumerated;
   * the per-row footprint F stays under ``ops.MAX_FOOTPRINT_ELEMS`` — the
     same cap the untuned ``pick_wblk`` ladder enforces, so tuned and
     default choices agree on what fits;
   * the width round-up waste ``round_up(q_out, wblk)/q_out`` is bounded
     (against the *pass's* output width — bwd-data is one span wider), so a
     tiny problem never burns >2x its useful compute in padding.
+
+``prob.alg`` / ``prob.nblk`` constrain the respective axis to one value
+(how per-alg head-to-head measurements are keyed); None searches both
+formulations and every legal fold.
 """
 from __future__ import annotations
 
 import dataclasses
 
 from repro.kernels import epilogue as _ep
+from repro.kernels.conv1d_brgemm import default_cblk
 from repro.kernels.ops import MAX_FOOTPRINT_ELEMS
 
 from .problem import ConvProblem
@@ -42,6 +54,7 @@ from .problem import ConvProblem
 LANE = 128                      # TPU lane tile; wblk must be a multiple
 WBLK_CHOICES = (128, 256, 512, 1024)
 KBLK_CHOICES = (8, 16, 32, 64, 128, 256, 512)
+NBLK_CHOICES = (1, 2, 4, 8)      # batch folds searched (must divide N)
 VMEM_BUDGET_BYTES = 8 * 2 ** 20  # half of ~16 MiB VMEM (double buffering)
 MAX_PAD_WASTE = 2.0              # round_up(Q, wblk) may at most double work
 
@@ -51,49 +64,80 @@ class Candidate:
     backend: str                 # 'pallas' | 'xla'
     wblk: int | None = None      # width tile (pallas only)
     kblk: int | None = None      # pass's second tile knob (kblk/cblk)
+    alg: str | None = None       # dense formulation (pallas dense only)
+    nblk: int | None = None      # batch fold (pallas dense only)
 
     def as_entry(self) -> dict:
-        return {"backend": self.backend, "wblk": self.wblk, "kblk": self.kblk}
+        return {"backend": self.backend, "wblk": self.wblk,
+                "kblk": self.kblk, "alg": self.alg, "nblk": self.nblk}
 
 
 def round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-def vmem_footprint_bytes(prob: ConvProblem, wblk: int,
-                         kblk: int | None) -> int:
+def vmem_footprint_bytes(prob: ConvProblem, wblk: int, kblk: int | None,
+                         alg: str = "tap_loop", nblk: int = 1) -> int:
     """VMEM working set of one grid cell of the problem's pass.
 
     Forward-shaped passes (fwd, bwd-data) stage footprint + taps + output
     tile + fp32 accumulator (+ the forward's fused epilogue operands).
     The bwd-weight pass keeps its fp32 gradient block resident instead.
+    Batch folding stages nblk samples per cell; tap_packed adds the packed
+    (S·ctr, nblk·WBLK) operand copy.
     """
     db = prob.dtype_bytes
     F = wblk + prob.span
+    packed = alg == "tap_packed"
     if prob.pass_ == "bwd_weight":
         if prob.depthwise:
-            cblk = kblk or min(prob.C, 512)
+            cblk = kblk or default_cblk(prob.C)
             # resident (S, cblk) fp32 dw tile + x tile + cotangent tile + dbias
             return 4 * prob.S * cblk + db * (cblk * F + cblk * wblk) + 4 * cblk
-        # resident (S, K, C) fp32 dw block + x tile + cotangent tile + dbias
+        # resident (S, K, C) fp32 dw block + x tiles + cotangent tiles
+        # + dbias (+ the packed operand for tap_packed)
+        pack = db * prob.S * prob.C * nblk * wblk if packed else 0
         return (4 * prob.S * prob.K * prob.C
-                + db * (prob.C * F + prob.K * wblk) + 4 * prob.K)
+                + db * nblk * (prob.C * F + prob.K * wblk) + 4 * prob.K
+                + pack)
     has_bias, _, has_residual = _ep.parse(prob.pass_epilogue)
     nb = kblk or prob.blk2_dim   # filter rows per cell (cblk if depthwise)
-    ep_bytes = db * (nb * has_bias + nb * wblk * has_residual)
+    ep_bytes = db * (nb * has_bias + nblk * nb * wblk * has_residual)
     if prob.depthwise:          # x tile (cblk, F), w (S, cblk), out + fp32 acc
         return (db * (nb * F + prob.S * nb + nb * wblk)
                 + 4 * nb * wblk + ep_bytes)
     ctr = prob.contraction      # C fwd, K for bwd-data's transposed GEMM
-    return (db * (ctr * F + prob.S * nb * ctr + nb * wblk)
-            + 4 * nb * wblk + ep_bytes)  # fp32 accumulator
+    pack = db * prob.S * ctr * nblk * wblk if packed else 0
+    return (db * (nblk * ctr * F + prob.S * nb * ctr + nblk * nb * wblk)
+            + 4 * nb * nblk * wblk + ep_bytes + pack)  # fp32 accumulator
+
+
+def _alg_choices(prob: ConvProblem) -> list[str]:
+    """Formulations searched for the problem's pass: depthwise kernels run
+    on the VPU (no packing to speak of), and at S == 1 the packed GEMM is
+    the tap loop — one redundant candidate pruned."""
+    if prob.depthwise:
+        return ["tap_loop"]
+    if prob.alg is not None:
+        return [prob.alg]
+    return ["tap_loop"] if prob.S == 1 else ["tap_loop", "tap_packed"]
+
+
+def _nblk_choices(prob: ConvProblem) -> list[int]:
+    if prob.depthwise:
+        return [1]
+    if prob.nblk is not None:
+        return [prob.nblk]
+    return [n for n in NBLK_CHOICES if prob.N % n == 0]
 
 
 def legal_tile_choices(prob: ConvProblem, *,
                        budget: int = VMEM_BUDGET_BYTES
                        ) -> list[tuple[int, int | None]]:
     """All (wblk, kblk) pairs legal under the pass's kernel contract + VMEM
-    budget.  kblk is None throughout for a pass with no second tile knob."""
+    budget (at the default formulation — ``enumerate_candidates`` re-checks
+    the packed/folded footprints).  kblk is None throughout for a pass with
+    no second tile knob."""
     dim = prob.blk2_dim
     if dim is None:
         kblks: list[int | None] = [None]
@@ -115,10 +159,25 @@ def legal_tile_choices(prob: ConvProblem, *,
 
 
 def enumerate_candidates(prob: ConvProblem, *,
-                         budget: int = VMEM_BUDGET_BYTES) -> list[Candidate]:
+                         budget: int = VMEM_BUDGET_BYTES,
+                         backends: tuple[str, ...] | None = None
+                         ) -> list[Candidate]:
     """The full search space for one problem instance: every legal Pallas
-    tiling plus the vendor-library formulation of the pass."""
-    cands = [Candidate("pallas", wblk, kblk)
-             for wblk, kblk in legal_tile_choices(prob, budget=budget)]
-    cands.append(Candidate("xla"))
+    (tiling × formulation × fold) plus the vendor-library formulation of
+    the pass.  ``backends`` restricts the set (e.g. ``('pallas',)`` to
+    rank kernel formulations head-to-head without the library entry).
+    """
+    cands = []
+    if backends is None or "pallas" in backends:
+        tiles = legal_tile_choices(prob, budget=budget)
+        for alg in _alg_choices(prob):
+            for nblk in _nblk_choices(prob):
+                for wblk, kblk in tiles:
+                    if (alg, nblk) != ("tap_loop", 1) and \
+                            vmem_footprint_bytes(prob, wblk, kblk, alg,
+                                                 nblk) > budget:
+                        continue   # packed/folded working set blew VMEM
+                    cands.append(Candidate("pallas", wblk, kblk, alg, nblk))
+    if backends is None or "xla" in backends:
+        cands.append(Candidate("xla"))
     return cands
