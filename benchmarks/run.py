@@ -21,7 +21,9 @@ def main(argv=None):
     benches = {
         "conv1d_sweep": lambda: _run("bench_conv1d_sweep", full=full),
         "atacworks_e2e": lambda: _run("bench_atacworks_e2e", full=full),
-        "scaling": lambda: _run("bench_scaling"),
+        # scaling parses CLI args: hand it an explicit argv so the
+        # harness's own flags never leak into its parser
+        "scaling": lambda: _run_scaling(full),
         "roofline": lambda: _run("bench_roofline"),
     }
     failures = 0
@@ -37,6 +39,12 @@ def main(argv=None):
             print(f"FAILED {name}: {e!r}")
         print(f"=== {name} done in {time.time() - t0:.1f}s")
     return 1 if failures else 0
+
+
+def _run_scaling(full: bool):
+    import importlib
+    mod = importlib.import_module("benchmarks.bench_scaling")
+    return mod.main([] if full else ["--smoke"])
 
 
 def _run(mod_name: str, **kw):

@@ -1,0 +1,98 @@
+"""Docs smoke check: run the public-API docstring examples and verify
+markdown links — so documentation can't rot silently.
+
+  * doctest over the curated public-API modules (the ones whose
+    docstrings carry runnable examples: ops, the layer, the tuner entry
+    points, the sharded wrappers).  Examples are CPU-safe and
+    cache-isolated (REPRO_TUNE_CACHE is pointed at a temp file and
+    REPRO_TUNE unset before any module import).
+  * relative-link check over README.md, DESIGN.md, CHANGES.md and
+    docs/*.md: every `[text](path)` that isn't an URL/anchor must point
+    at an existing file.
+
+    PYTHONPATH=src python scripts/check_docs.py
+
+Exit code 0 = all good; nonzero with a per-failure report otherwise.
+CI runs this in the docs job; tests/test_docs.py runs it in tier-1.
+"""
+from __future__ import annotations
+
+import doctest
+import importlib
+import os
+import re
+import sys
+import tempfile
+
+DOCTEST_MODULES = [
+    "repro.kernels.ops",
+    "repro.kernels.sharded",
+    "repro.core.conv1d",
+    "repro.tune",
+]
+
+MARKDOWN = ["README.md", "DESIGN.md", "CHANGES.md", "ROADMAP.md",
+            "PAPER.md", "PAPERS.md"]
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def run_doctests() -> int:
+    failures = 0
+    for name in DOCTEST_MODULES:
+        mod = importlib.import_module(name)
+        res = doctest.testmod(mod, verbose=False,
+                              optionflags=doctest.ELLIPSIS)
+        status = "ok" if res.failed == 0 else "FAIL"
+        print(f"doctest {name}: {res.attempted} examples, "
+              f"{res.failed} failed [{status}]")
+        failures += res.failed
+    return failures
+
+
+def check_links(root: str) -> int:
+    failures = 0
+    files = [os.path.join(root, m) for m in MARKDOWN]
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        files += [os.path.join(docs, f) for f in sorted(os.listdir(docs))
+                  if f.endswith(".md")]
+    for path in files:
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            text = f.read()
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#")[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel))
+            if not os.path.exists(resolved):
+                print(f"BROKEN LINK {os.path.relpath(path, root)}: "
+                      f"({target}) -> {resolved}")
+                failures += 1
+    print(f"link check: {len(files)} files scanned, {failures} broken")
+    return failures
+
+
+def main() -> int:
+    # examples must never touch (or pollute) the user's real tune cache,
+    # and must not trigger measured searches
+    os.environ["REPRO_TUNE_CACHE"] = os.path.join(
+        tempfile.mkdtemp(prefix="repro_docs_"), "cache.json")
+    os.environ.pop("REPRO_TUNE", None)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, os.path.join(root, "src"))
+    failures = run_doctests() + check_links(root)
+    if failures:
+        print(f"\n{failures} documentation failure(s)")
+        return 1
+    print("\ndocs OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

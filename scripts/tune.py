@@ -5,6 +5,7 @@ all three passes (fwd, bwd_data, bwd_weight) per shape.
     PYTHONPATH=src python scripts/tune.py --figset all --measure   # wall-clock search
     PYTHONPATH=src python scripts/tune.py --figset fig5 --full --cache /tmp/tc.json
     PYTHONPATH=src python scripts/tune.py --smoke                  # CI: tiny shape, 3 passes
+    PYTHONPATH=src python scripts/tune.py --figset atacworks --dp 4  # per-shard (local-N) cells
 
 Writes one cache entry per (S, Q, pass) cell of the selected figure(s) —
 ``repro.tune.presets`` mirrors the sweep benchmark, so afterwards
@@ -50,6 +51,12 @@ def main(argv=None):
                          "library entry (default: all)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke: one tiny shape, all three passes")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="pre-tune the PER-SHARD view of each cell under "
+                         "this much batch data parallelism: cache keys use "
+                         "the local N = N/dp each shard_map shard traces "
+                         "and looks up (DESIGN.md §13; cells whose batch "
+                         "doesn't divide are skipped with a note)")
     ap.add_argument("--cache", default=None,
                     help="cache file (default: $REPRO_TUNE_CACHE or "
                          "~/.cache/repro/tune_cache.json)")
@@ -81,13 +88,19 @@ def main(argv=None):
     for name, prob in work:
         prob = dict(prob)
         dtype = jnp.dtype(prob.pop("dtype"))
+        if prob["N"] % args.dp:
+            print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype}: "
+                  f"skipped (N={prob['N']} does not divide over dp={args.dp})")
+            continue
         for pass_ in passes:
             cfg = tune.tune(**prob, dtype=dtype, pass_=pass_, cache=cache,
-                            measure=args.measure, iters=args.iters,
-                            top_k=args.top_k, backends=backends)
+                            shards=args.dp, measure=args.measure,
+                            iters=args.iters, top_k=args.top_k,
+                            backends=backends)
             n += 1
             sec = f" {cfg.sec:.3e}s" if cfg.sec is not None else ""
-            print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype} "
+            dp = f" dp={args.dp}" if args.dp != 1 else ""
+            print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype}{dp} "
                   f"{pass_:>10}: {cfg.backend} wblk={cfg.wblk} "
                   f"kblk={cfg.kblk} alg={cfg.alg or 'tap_loop'} "
                   f"nblk={cfg.nblk or 1} [{cfg.source}]{sec}")

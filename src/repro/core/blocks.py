@@ -50,41 +50,57 @@ def _fused_default() -> bool:
     return os.environ.get("REPRO_FUSED_EPILOGUE", "1") != "0"
 
 
-def forward(params, cfg, x, *, backend=None, fused=None):
-    """x: (B, W) noisy coverage track -> (signal (B, W), peak_logits (B, W))."""
+def forward(params, cfg, x, *, backend=None, fused=None, grad_reduce_axes=None):
+    """x: (B, W) noisy coverage track -> (signal (B, W), peak_logits (B, W)).
+
+    ``grad_reduce_axes``: mesh axes the batch shards over when this runs
+    inside a data-parallel ``shard_map`` body — every layer's weight/bias
+    gradient then all-reduces over them, fused per layer after its
+    bwd-weight pass (DESIGN.md §13)."""
     if fused is None:
         fused = _fused_default()
     if not fused:
-        return forward_unfused(params, cfg, x, backend=backend)
+        return forward_unfused(params, cfg, x, backend=backend,
+                               grad_reduce_axes=grad_reduce_axes)
     d = cfg.conv_dilation
+    gra = grad_reduce_axes
     h = x[:, None, :]  # (B, 1, W)
     h = DilatedConv1D.apply(params["stem"], h, dilation=d, backend=backend,
-                            activation="relu")
+                            activation="relu", grad_reduce_axes=gra)
     for blk in params["res"]:
         r = DilatedConv1D.apply(blk["conv1"], h, dilation=d, backend=backend,
-                                activation="relu")
+                                activation="relu", grad_reduce_axes=gra)
         h = DilatedConv1D.apply(blk["conv2"], r, dilation=d, backend=backend,
-                                activation="relu", residual=h)
+                                activation="relu", residual=h,
+                                grad_reduce_axes=gra)
     signal = DilatedConv1D.apply(params["head_signal"], h, dilation=d,
                                  backend=backend, activation="relu",
-                                 out_dtype=jnp.float32)[:, 0, :]
+                                 out_dtype=jnp.float32,
+                                 grad_reduce_axes=gra)[:, 0, :]
     peak = DilatedConv1D.apply(params["head_peak"], h, dilation=d,
-                               backend=backend,
-                               out_dtype=jnp.float32)[:, 0, :]
+                               backend=backend, out_dtype=jnp.float32,
+                               grad_reduce_axes=gra)[:, 0, :]
     return signal, peak
 
 
-def forward_unfused(params, cfg, x, *, backend=None):
+def forward_unfused(params, cfg, x, *, backend=None, grad_reduce_axes=None):
     """Pre-fusion baseline: conv, bias-add, fp32 relu round-trip, and
     residual-add as four separate XLA ops per layer.  Kept only as the
     fused-vs-unfused comparison arm of ``bench_atacworks_e2e`` — the model
     itself always trains through ``forward``."""
     import jax
 
+    from repro.kernels.ops import _axes_tuple, _psum_cotangent
+
+    axes = _axes_tuple(grad_reduce_axes)
+
     def conv_bias(p, h):
         y = DilatedConv1D.apply({"w": p["w"]}, h, dilation=cfg.conv_dilation,
-                                backend=backend)
-        return y + p["b"][None, :, None].astype(y.dtype)
+                                backend=backend, grad_reduce_axes=axes)
+        b = p["b"]
+        if axes:  # bias-add is outside the kernel here
+            b = _psum_cotangent(axes, b)
+        return y + b[None, :, None].astype(y.dtype)
 
     h = x[:, None, :]  # (B, 1, W)
     h = jax.nn.relu(conv_bias(params["stem"], h).astype(jnp.float32)).astype(h.dtype)
@@ -98,10 +114,11 @@ def forward_unfused(params, cfg, x, *, backend=None):
 
 
 def loss_fn(params, cfg, batch, *, backend=None, peak_weight: float = 1.0,
-            fused=None):
+            fused=None, grad_reduce_axes=None):
     """AtacWorks loss: MSE(denoised signal) + BCE(peak calls)."""
     signal, peak_logits = forward(params, cfg, batch["noisy"], backend=backend,
-                                  fused=fused)
+                                  fused=fused,
+                                  grad_reduce_axes=grad_reduce_axes)
     mse = jnp.mean((signal - batch["clean"].astype(jnp.float32)) ** 2)
     labels = batch["peaks"].astype(jnp.float32)
     bce = jnp.mean(

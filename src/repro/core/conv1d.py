@@ -39,7 +39,7 @@ class DilatedConv1D:
               wblk: int | None = None, kblk: int | None = None,
               activation: str | None = None,
               residual: jax.Array | None = None,
-              out_dtype=None) -> jax.Array:
+              out_dtype=None, grad_reduce_axes=None) -> jax.Array:
         """x: (N, C_in, W) -> (N, C_out, Q), computing
         ``act(conv(x) + bias + residual)`` in one fused kernel call.
 
@@ -52,9 +52,26 @@ class DilatedConv1D:
         backward-data and backward-weight kernels each run their own
         resolved config (DESIGN.md §11), not the forward's tiles.
         Explicit wblk/kblk args override the forward's choice.
+
+        ``grad_reduce_axes`` names mesh axes the batch is sharded over
+        when the layer runs (and is differentiated) inside a
+        ``shard_map`` body — the weight/bias gradients then all-reduce
+        over those axes, fused after the bwd-weight pass (DESIGN.md §13).
+
+        Example::
+
+            >>> import jax, jax.numpy as jnp
+            >>> from repro.core.conv1d import DilatedConv1D
+            >>> p = DilatedConv1D.init(jax.random.key(0), c_in=8, c_out=8,
+            ...                        filter_width=5)
+            >>> x = jnp.ones((2, 8, 128))
+            >>> DilatedConv1D.apply(p, x, dilation=4, activation="relu",
+            ...                     residual=x).shape
+            (2, 8, 128)
         """
         return kops.conv1d(x, params["w"], bias=params.get("b"),
                            activation=activation, residual=residual,
                            dilation=dilation, padding=padding,
                            backend=backend, wblk=wblk, kblk=kblk,
-                           out_dtype=out_dtype)
+                           out_dtype=out_dtype,
+                           grad_reduce_axes=grad_reduce_axes)

@@ -28,6 +28,18 @@
     instead of the backward inheriting the forward's tiles; without a plan
     the bwd-data filter tile falls back to the divisor-of-C ``pick_kblk``
     ladder rather than running untiled.
+  * **data-parallel gradient reduction** (``grad_reduce_axes``,
+    DESIGN.md §13): inside a ``shard_map`` whose named axes shard the
+    batch, the weight/bias gradients of a batch-replicated parameter are
+    *partial* sums — each shard only saw its local samples.  Passing the
+    mesh axis name(s) fuses a ``lax.psum`` of (dw, dbias) directly after
+    the bwd-weight pass, on the kernel's fp32 accumulator, so the
+    all-reduce of one layer overlaps the backward compute of the layers
+    below it.  ``dx``/``dresidual`` stay local (they are batch-sharded).
+    The same contract holds on every backend: the xla/ref paths (no
+    custom VJP) reduce through an identity-with-psum-cotangent wrapper on
+    w/bias.  ``kernels/sharded.py`` wraps all of this into batch-sharded
+    entry points.
 
 Blocking bookkeeping lives here: width is padded up to a multiple of the
 width tile WBLK and sliced back, mirroring the paper's "block length 64"
@@ -179,6 +191,39 @@ def _dtype_name(a) -> str | None:
     return None if a is None else jnp.dtype(a.dtype).name
 
 
+def _axes_tuple(axes) -> tuple[str, ...] | None:
+    """Canonicalize a ``grad_reduce_axes`` argument (str | sequence | None)
+    to a hashable tuple of mesh axis names."""
+    if axes is None:
+        return None
+    if isinstance(axes, str):
+        return (axes,)
+    axes = tuple(axes)
+    return axes or None
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _psum_cotangent(axes: tuple[str, ...], p):
+    """Identity on the primal; ``lax.psum`` over ``axes`` on the cotangent.
+
+    The data-parallel reduction hook for the backends without a custom VJP
+    (xla/ref): wrapping a batch-replicated parameter makes its gradient —
+    produced by XLA's own conv transpose — all-reduce across the batch
+    shards, matching the fused reduction the Pallas VJP performs itself."""
+    return p
+
+
+def _psum_cotangent_fwd(axes, p):
+    return p, None
+
+
+def _psum_cotangent_bwd(axes, _, g):
+    return (jax.lax.psum(g, axes),)
+
+
+_psum_cotangent.defvjp(_psum_cotangent_fwd, _psum_cotangent_bwd)
+
+
 class _FusedSpec(NamedTuple):
     """Static (hashable) configuration of one fused conv instance — the
     nondiff argument of the custom_vjp s.  ``blk2`` is kblk for the dense
@@ -186,7 +231,9 @@ class _FusedSpec(NamedTuple):
     stays hashable; bias_dtype/residual_dtype double as has-bias/has-residual
     flags for the bwd rule.  ``bwd_data``/``bwd_weight`` are the resolved
     per-pass configs (None -> static fallback derived in the bwd rule);
-    ``alg``/``nblk`` are the forward's dense formulation + batch fold."""
+    ``alg``/``nblk`` are the forward's dense formulation + batch fold.
+    ``reduce_axes`` names the mesh axes the weight/bias gradients psum over
+    (the data-parallel shard_map path, §13); None = single-device."""
     dilation: int
     wblk: int
     blk2: int | None
@@ -199,6 +246,7 @@ class _FusedSpec(NamedTuple):
     bwd_weight: PassConfig | None = None
     alg: str = "tap_loop"
     nblk: int = 1
+    reduce_axes: tuple[str, ...] | None = None
 
     @property
     def out_jnp_dtype(self):
@@ -283,12 +331,24 @@ def _epilogue_cotangent(spec: _FusedSpec, saved, gout):
 
 def _epilogue_param_grads(spec: _FusedSpec, dwout, du):
     """Unpack the bwd-weight kernel result into (dw, dbias) in the primal
-    dtypes, and derive dresidual (the masked cotangent passed through)."""
+    dtypes, and derive dresidual (the masked cotangent passed through).
+
+    Under data parallelism (``spec.reduce_axes``) this is where the
+    gradient all-reduce fuses: one ``lax.psum`` of the (dw, dbias) pair,
+    immediately downstream of the bwd-weight kernel and still on its fp32
+    accumulator — per layer, so the reduce of layer *l* overlaps the
+    backward compute of layers < l (DESIGN.md §13).  ``dresidual`` is the
+    batch-sharded cotangent pass-through and stays local."""
     if spec.bias_dtype is not None:
         dw, db = dwout
-        dbias = db.astype(jnp.dtype(spec.bias_dtype))
     else:
-        dw, dbias = dwout, None
+        dw, db = dwout, None
+    if spec.reduce_axes:
+        if db is not None:
+            dw, db = jax.lax.psum((dw, db), spec.reduce_axes)
+        else:
+            dw = jax.lax.psum(dw, spec.reduce_axes)
+    dbias = db.astype(jnp.dtype(spec.bias_dtype)) if db is not None else None
     dres = (du.astype(jnp.dtype(spec.residual_dtype))
             if spec.residual_dtype is not None else None)
     return dw, dbias, dres
@@ -385,11 +445,27 @@ def conv1d(
     interpret: bool | None = None,
     bwd_data_cfg=None,
     bwd_weight_cfg=None,
+    grad_reduce_axes=None,
 ) -> jax.Array:
     """1D dilated convolution with fused epilogue, paper semantics.
 
     x: (N, C, W), w: (S, K, C) -> (N, K, Q); Q == W for SAME/CAUSAL,
     Q = W - (S-1)*dilation for VALID.
+
+    Example (shapes only — default backend, CPU-safe)::
+
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.kernels import ops
+        >>> x = jnp.ones((2, 8, 64))           # (N, C, W)
+        >>> w = jnp.ones((3, 4, 8))            # (S, K, C)
+        >>> ops.conv1d(x, w, dilation=2, padding="SAME").shape
+        (2, 4, 64)
+        >>> ops.conv1d(x, w, dilation=2, padding="VALID").shape
+        (2, 4, 60)
+        >>> y = ops.conv1d(x, w, bias=jnp.zeros(4), activation="relu",
+        ...                dilation=2, padding="SAME")
+        >>> y.shape
+        (2, 4, 64)
 
     Epilogue (all optional, applied on the fp32 accumulator in this order):
     ``y = act(conv + bias + residual)`` with bias (K,), activation one of
@@ -408,9 +484,16 @@ def conv1d(
     ``(backend, wblk, kblk[, alg, nblk])`` tuple) pin a backward pass
     explicitly, winning over the tuner — the knob ``tune.measure`` uses to
     time one pass's candidate inside a ``jax.vjp`` instance.
+
+    ``grad_reduce_axes`` (a mesh axis name or tuple of names) marks this
+    call as running *inside* a ``shard_map`` that shards the batch over
+    those axes: the weight/bias gradients are all-reduced over them, fused
+    after the bwd-weight pass (DESIGN.md §13).  Use
+    ``kernels.sharded.sharded_conv1d`` for the wrapped spelling.
     """
     backend = backend or default_backend()
     activation = _ep.canon(activation)
+    grad_reduce_axes = _axes_tuple(grad_reduce_axes)
     bwd_data_cfg = _as_pass_cfg(bwd_data_cfg)
     bwd_weight_cfg = _as_pass_cfg(bwd_weight_cfg)
     S, K, C = w.shape
@@ -434,6 +517,12 @@ def conv1d(
         nblk = nblk or auto_nblk
         bwd_data_cfg = bwd_data_cfg or auto_bd
         bwd_weight_cfg = bwd_weight_cfg or auto_bw
+    if backend in ("ref", "xla") and grad_reduce_axes:
+        # no custom VJP on these paths: reduce the parameter cotangents
+        # through the identity-psum wrapper instead (same math, same axes)
+        w = _psum_cotangent(grad_reduce_axes, w)
+        if bias is not None:
+            bias = _psum_cotangent(grad_reduce_axes, bias)
     if backend == "ref":
         return _ref.conv1d_fused_ref(x, w, dilation=dilation, bias=bias,
                                      activation=activation, residual=residual,
@@ -449,7 +538,8 @@ def conv1d(
                           _dtype_name(bias), _dtype_name(residual),
                           jnp.dtype(out_dtype).name if out_dtype else None,
                           bwd_data_cfg, bwd_weight_cfg,
-                          alg or "tap_loop", _legal_nblk(nblk, x.shape[0]))
+                          alg or "tap_loop", _legal_nblk(nblk, x.shape[0]),
+                          grad_reduce_axes)
         return _conv1d_pallas(spec, x, w, bias, residual)
     raise ValueError(f"unknown conv backend {backend!r}")
 
@@ -579,6 +669,7 @@ def depthwise_conv1d(
     interpret: bool | None = None,
     bwd_data_cfg=None,
     bwd_weight_cfg=None,
+    grad_reduce_axes=None,
 ) -> jax.Array:
     """Depthwise 1D conv with fused epilogue.  x: (N, C, W), w: (S, C)
     -> (N, C, Q); bias (C,), residual (N, C, Q), same epilogue order as
@@ -589,9 +680,25 @@ def depthwise_conv1d(
     backend='auto' defers to the tuning subsystem, as in ``conv1d``, and
     resolves each backward pass's config through its own problem key;
     ``bwd_data_cfg``/``bwd_weight_cfg`` pin a pass explicitly.
+    ``grad_reduce_axes`` marks the call as batch-sharded inside a
+    ``shard_map``: weight/bias gradients all-reduce over the named mesh
+    axes, fused after the bwd-weight pass (DESIGN.md §13).
+
+    Example (Mamba2-style causal conv, shapes only)::
+
+        >>> import jax.numpy as jnp
+        >>> from repro.kernels import ops
+        >>> x = jnp.ones((2, 16, 64))          # (N, C, W)
+        >>> w = jnp.ones((4, 16))              # (S, C)
+        >>> ops.depthwise_conv1d(x, w, padding="CAUSAL").shape
+        (2, 16, 64)
+        >>> ops.depthwise_conv1d(x, w, bias=jnp.zeros(16),
+        ...                      activation="silu").shape
+        (2, 16, 64)
     """
     backend = backend or default_backend()
     activation = _ep.canon(activation)
+    grad_reduce_axes = _axes_tuple(grad_reduce_axes)
     bwd_data_cfg = _as_pass_cfg(bwd_data_cfg)
     bwd_weight_cfg = _as_pass_cfg(bwd_weight_cfg)
     S, C = w.shape
@@ -613,6 +720,10 @@ def depthwise_conv1d(
                                    residual is not None))
         bwd_data_cfg = bwd_data_cfg or auto_bd
         bwd_weight_cfg = bwd_weight_cfg or auto_bw
+    if backend in ("ref", "xla") and grad_reduce_axes:
+        w = _psum_cotangent(grad_reduce_axes, w)
+        if bias is not None:
+            bias = _psum_cotangent(grad_reduce_axes, bias)
     if backend == "ref":
         return _ref.depthwise_conv1d_fused_ref(
             x, w, dilation=dilation, bias=bias, activation=activation,
@@ -627,6 +738,7 @@ def depthwise_conv1d(
         spec = _FusedSpec(dilation, wblk, cblk, interpret, activation,
                           _dtype_name(bias), _dtype_name(residual),
                           jnp.dtype(out_dtype).name if out_dtype else None,
-                          bwd_data_cfg, bwd_weight_cfg)
+                          bwd_data_cfg, bwd_weight_cfg,
+                          reduce_axes=grad_reduce_axes)
         return _dw_conv1d_pallas(spec, x, w, bias, residual)
     raise ValueError(f"unknown conv backend {backend!r}")

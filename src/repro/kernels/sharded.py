@@ -1,0 +1,115 @@
+"""Batch-sharded (data-parallel) spellings of the conv1d ops.
+
+The paper's headline end-to-end result is *distributed*: 16-socket
+data-parallel AtacWorks training, gradients all-reduced with MPI.  The
+mesh-native analogue (DESIGN.md §13) is ``shard_map`` over the mesh's
+data axes:
+
+  * the batch dimension of ``x`` (and ``residual``) shards over
+    ``('pod','data')``; weights/bias are replicated;
+  * the per-shard body is the ordinary ``ops.conv1d`` /
+    ``ops.depthwise_conv1d`` — the same fused kernels, custom VJPs and
+    tuner dispatch as single-device code.  Because ``shard_map`` traces
+    the body at **local** shapes, a ``backend='auto'`` call resolves its
+    tuner plan against the *local* ``ConvProblem`` (N_local = N / dp):
+    local N changes the legal ``nblk`` folds and the candidate space, so
+    global-shape cache keys must never leak into per-shard lookups — here
+    they cannot, by construction;
+  * under ``jax.grad``, the weight/bias gradients all-reduce over the
+    sharded axes.  WHERE the reduce happens depends on where the grad is
+    taken: differentiating *through* these wrappers, ``shard_map``'s own
+    transpose inserts the psum for the replicated (``P()``) operands — the
+    body must NOT set ``grad_reduce_axes`` or every weight gradient
+    double-counts by dp (verified by test).  Taking the grad *inside* a
+    shard_map body — the training path, ``train/data_parallel.py`` —
+    nothing reduces for you: there ``grad_reduce_axes`` fuses the psum
+    directly after the bwd-weight pass in the custom VJP.  ``dx`` stays
+    local either way.
+
+``shard_map`` is used with ``check_rep=False`` (required for bodies
+containing custom_vjp calls on jax 0.4.x).
+
+Example (single host; any device count divides the batch)::
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro.kernels.sharded import sharded_conv1d
+    >>> from repro.launch.mesh import make_host_mesh
+    >>> mesh = make_host_mesh()
+    >>> x = jnp.ones((4, 8, 64))
+    >>> w = jnp.ones((3, 4, 8))
+    >>> sharded_conv1d(x, w, mesh=mesh, dilation=2, padding="SAME").shape
+    (4, 4, 64)
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import dp_axis_names, dp_size
+
+from . import ops
+
+
+def _check_batch(N: int, mesh) -> tuple[str, ...]:
+    axes = dp_axis_names(mesh)
+    if not axes:
+        raise ValueError(
+            f"mesh {tuple(mesh.axis_names)} has no data axis to shard the "
+            "batch over (expected 'data' and/or 'pod')")
+    dp = dp_size(mesh)
+    if N % dp:
+        raise ValueError(
+            f"batch {N} does not divide over {dp} data-parallel shards "
+            f"(mesh axes {axes}); pad or re-batch the input")
+    return axes
+
+
+def _sharded_call(fn, mesh, x, w, bias, residual, kwargs):
+    """shard_map ``fn`` with x/residual batch-sharded, w/bias replicated.
+
+    Optional operands can't ride as ``None`` leaves through shard_map
+    in_specs, so the arg list is built dynamically."""
+    axes = _check_batch(x.shape[0], mesh)
+    batch = P(axes)
+    args, specs = [x, w], [batch, P()]
+    has_bias, has_res = bias is not None, residual is not None
+    if has_bias:
+        args.append(bias)
+        specs.append(P())
+    if has_res:
+        args.append(residual)
+        specs.append(batch)
+
+    def body(*a):
+        it = iter(a[2:])
+        b = next(it) if has_bias else None
+        r = next(it) if has_res else None
+        # no grad_reduce_axes here: shard_map's transpose reduces the
+        # replicated operands' cotangents itself (see module docstring)
+        return fn(a[0], a[1], bias=b, residual=r, **kwargs)
+
+    return shard_map(body, mesh=mesh, in_specs=tuple(specs),
+                     out_specs=batch, check_rep=False)(*args)
+
+
+def sharded_conv1d(x, w, *, mesh, bias=None, residual=None, **kwargs):
+    """Data-parallel ``ops.conv1d``: batch-shards ``x``/``residual`` over
+    the mesh's data axes and replicates ``w``/``bias``.  Differentiating
+    *through* this wrapper is correct as-is — the weight/bias gradient
+    all-reduce comes from shard_map's transpose (do NOT also pass
+    ``grad_reduce_axes``: that is for grads taken *inside* a shard body,
+    see the module docstring, and would double-count here).  All
+    ``conv1d`` keyword arguments (activation, dilation, padding, backend,
+    tiles, ``alg``/``nblk``, per-pass configs, ``out_dtype``) pass through
+    to the per-shard body unchanged — ``backend='auto'`` resolves
+    per-shard plans from local-shape keys."""
+    return _sharded_call(ops.conv1d, mesh, x, w, bias, residual, kwargs)
+
+
+def sharded_depthwise_conv1d(x, w, *, mesh, bias=None, residual=None,
+                             **kwargs):
+    """Data-parallel ``ops.depthwise_conv1d`` (same contract as
+    ``sharded_conv1d``)."""
+    return _sharded_call(ops.depthwise_conv1d, mesh, x, w, bias, residual,
+                         kwargs)

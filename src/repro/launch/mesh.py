@@ -44,12 +44,34 @@ def make_host_mesh(*, model: int = 1):
     return compat_make_mesh((n // model, model), ("data", "model"))
 
 
+def make_data_mesh(n_data: int):
+    """A pure data-parallel ('data',) mesh over the FIRST ``n_data`` host
+    devices — what the scaling benchmark uses to race 1/2/4/8-device
+    sharded training inside one virtual-device process
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+    ``jax.make_mesh`` always consumes all devices, hence the explicit
+    ``Mesh`` over a device subset here."""
+    import numpy as np
+
+    devs = jax.devices()
+    if n_data > len(devs):
+        raise ValueError(f"asked for {n_data} devices, have {len(devs)}")
+    return jax.sharding.Mesh(np.array(devs[:n_data]), ("data",))
+
+
 def dp_size(mesh) -> int:
     n = 1
     for a in ("pod", "data"):
         if a in mesh.axis_names:
             n *= mesh.shape[a]
     return n
+
+
+def dp_axis_names(mesh) -> tuple[str, ...]:
+    """The mesh axes the batch shards over, in mesh order — what
+    ``shard_map`` in_specs and the fused gradient ``psum``
+    (``ops.conv1d(grad_reduce_axes=...)``) both name."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
 def mp_size(mesh) -> int:

@@ -7,6 +7,19 @@ prefetch, sharded train step with grad accumulation, checkpoint/restore
 (async, atomic, elastic), NaN-guard + health monitor, straggler detector,
 and preemption-flush.
 
+Data parallelism (DESIGN.md §13): for the conv family on a multi-device
+data mesh, the step runs through the explicit ``shard_map`` path
+(``train/data_parallel.py``) — per-shard local-shape tracing (so tuner
+plans resolve from local ``ConvProblem`` keys) with the weight-gradient
+all-reduces fused into the conv custom VJPs.  Other families keep the
+GSPMD path (FSDP-sharded params via ``models/sharding.py``).  To exercise
+the sharded path on a CPU-only host, give jax virtual devices BEFORE the
+process starts:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m repro.launch.train --arch atacworks \
+        --smoke --steps 8 --batch 8 --seq 2048
+
 Examples:
     PYTHONPATH=src python -m repro.launch.train --arch atacworks --smoke \
         --steps 20 --batch 4 --seq 4096
@@ -49,19 +62,36 @@ def main(argv=None):
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-shard-map", action="store_true",
+                    help="force the GSPMD path even for conv on a "
+                         "multi-device data mesh")
     args = ap.parse_args(argv)
 
     cfg = configs.get(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
     mesh = make_host_mesh(model=args.model_parallel)
+    dp = dp_size(mesh)
+    if args.batch % args.accum:
+        raise SystemExit(f"--batch {args.batch} must divide by --accum "
+                         f"{args.accum}")
+    # conv family + multi-device data axis -> the explicit shard_map path;
+    # each microbatch must split evenly over the data shards
+    shard_step = cfg.family == "conv" and dp > 1 and not args.no_shard_map
+    if shard_step and (args.batch // args.accum) % dp:
+        raise SystemExit(
+            f"microbatch {args.batch // args.accum} must divide over "
+            f"dp={dp} shards (see runtime.elastic.plan_batch for a legal "
+            "(accum, microbatch) split)")
     print(f"arch={cfg.name} mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
-          f"batch={args.batch} accum={args.accum}")
+          f"batch={args.batch} accum={args.accum} "
+          f"path={'shard_map' if shard_step else 'gspmd'}")
 
     model = get_model(cfg)
     step_fn = make_train_step(cfg, accum_steps=args.accum, peak_lr=args.lr,
                               warmup_steps=max(2, args.steps // 10),
-                              total_steps=args.steps)
+                              total_steps=args.steps,
+                              mesh=mesh if shard_step else None)
 
     with mesh:
         params = model.init_params(jax.random.key(args.seed), cfg)
@@ -121,9 +151,12 @@ def main(argv=None):
             ckpt.save(state, args.steps)
         first = np.mean(losses[:3]) if len(losses) >= 6 else losses[0]
         last = np.mean(losses[-3:])
+        tput = (args.batch / straggler.healthy_step_time
+                if straggler.healthy_step_time > 0 else float("nan"))
         print(f"done: loss {first:.4f} -> {last:.4f} "
               f"({'improved' if last < first else 'NOT improved'}); "
-              f"healthy step {straggler.healthy_step_time:.3f}s")
+              f"healthy step {straggler.healthy_step_time:.3f}s "
+              f"({tput:.2f} samples/s, {tput / dp:.2f}/device over dp={dp})")
     return 0
 
 

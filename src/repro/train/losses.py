@@ -60,14 +60,23 @@ def streamed_xent(params, hidden, labels, cfg):
     return total / (B * T)
 
 
-def make_loss_fn(cfg):
+def make_loss_fn(cfg, *, grad_reduce_axes=None):
+    """Per-family (loss, aux) function over (params, batch).
+
+    ``grad_reduce_axes`` marks the loss as running inside a data-parallel
+    ``shard_map`` body (``train/data_parallel.py``): the conv family
+    threads it down to every fused kernel call so weight/bias gradients
+    all-reduce inside the custom VJPs (DESIGN.md §13).  Other families
+    ignore it — their sharded grad fn reduces the whole gradient tree
+    instead."""
     model = get_model(cfg)
 
     if cfg.family == "conv":
         from repro.core import blocks
 
         def conv_loss(params, batch):
-            return blocks.loss_fn(params, cfg, batch)
+            return blocks.loss_fn(params, cfg, batch,
+                                  grad_reduce_axes=grad_reduce_axes)
         return conv_loss
 
     if cfg.family == "encdec":

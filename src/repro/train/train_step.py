@@ -39,12 +39,17 @@ def _split_microbatches(batch, accum: int):
     return jax.tree.map(r, batch)
 
 
+def _mesh_dp(mesh) -> int:
+    from repro.launch.mesh import dp_size
+    return dp_size(mesh)
+
+
 def make_train_step(cfg, *, accum_steps: int = 1, peak_lr: float = 3e-4,
                     warmup_steps: int = 100, total_steps: int = 10_000,
                     grad_clip: float = 1.0, weight_decay: float = 0.1,
                     skip_nonfinite: bool = True, unroll_accum: bool = False,
                     grad_compression: bool = False,
-                    constrain_grads: bool = False):
+                    constrain_grads: bool = False, mesh=None):
     """``unroll_accum`` replaces the microbatch ``lax.scan`` with a python
     loop — used by the roofline probes only (HloCostAnalysis counts a while
     body once; see roofline/analysis.py).
@@ -53,10 +58,23 @@ def make_train_step(cfg, *, accum_steps: int = 1, peak_lr: float = 3e-4,
     fp32 error-feedback buffer carried in TrainState (optim/compression.py)
     — the cast sits upstream of the GSPMD-inserted gradient reduction, so
     the cross-device reduce moves half the bytes; the EF residual re-enters
-    next step, keeping the optimizer trajectory asymptotically exact."""
+    next step, keeping the optimizer trajectory asymptotically exact.
+
+    ``mesh`` switches gradient computation to the explicit ``shard_map``
+    data-parallel path (``train/data_parallel.py``, DESIGN.md §13): the
+    loss/grad runs per batch shard at local shapes (local-shape tuner
+    keys), with the conv family's weight-gradient all-reduces fused into
+    the custom VJPs.  The optimizer update is unchanged — it consumes the
+    already-reduced (replicated) gradients.  With ``mesh=None`` (or a
+    1-device mesh) the historical single-program path runs; microbatch
+    accumulation composes with either (each microbatch's grad is a
+    shard_map call inside the scan)."""
     from repro.optim import compression
-    loss_fn = make_loss_fn(cfg)
-    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    if mesh is not None and _mesh_dp(mesh) > 1:
+        from repro.train.data_parallel import make_sharded_grad_fn
+        grad_fn = make_sharded_grad_fn(cfg, mesh)
+    else:
+        grad_fn = jax.value_and_grad(make_loss_fn(cfg), has_aux=True)
 
     def train_step(state: TrainState, batch):
         if accum_steps > 1:

@@ -146,15 +146,37 @@ def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
          padding: str = "VALID", depthwise: bool = False,
          epilogue: str = "none", pass_: str = "fwd",
          alg: str | None = None, nblk: int | None = None,
+         shards: int = 1,
          cache: TuneCache | None = None, measure: bool = True,
          top_k: int = 4, iters: int = 5, warmup: int = 2,
          backends: tuple[str, ...] | None = None) -> TunedConfig:
     """Keyword spelling of ``tune_problem`` (shapes in forward-layer
     coordinates; ``pass_`` selects the kernel being tuned; ``alg``/``nblk``
-    constrain the formulation axes to one value and tag the cache key)."""
+    constrain the formulation axes to one value and tag the cache key).
+
+    ``shards`` tunes the problem's **per-shard** view under that much
+    batch data parallelism (``ConvProblem.localized``): N is the *global*
+    batch, the searched/cached instance has N/shards — the shape a
+    ``shard_map`` shard actually traces and looks up (DESIGN.md §13).
+
+    Example (cost-model-only search into an explicit cache; no
+    measurement, deterministic)::
+
+        >>> import tempfile
+        >>> from repro import tune
+        >>> cache = tune.TuneCache(tempfile.mkstemp(suffix=".json")[1])
+        >>> cfg = tune.tune(N=2, C=8, K=8, S=3, dilation=2, Q=128,
+        ...                 dtype="float32", cache=cache, measure=False)
+        >>> cfg.source
+        'cost'
+        >>> cfg.backend in ("pallas", "xla")
+        True
+    """
     prob = _make_problem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
                          dtype=dtype, padding=padding, depthwise=depthwise,
                          epilogue=epilogue, pass_=pass_, alg=alg, nblk=nblk)
+    if shards != 1:
+        prob = prob.localized(shards)
     return tune_problem(prob, cache=cache, measure=measure, top_k=top_k,
                         iters=iters, warmup=warmup, backends=backends)
 
@@ -201,13 +223,33 @@ def get_config(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
 
 def get_plan(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
              dtype, padding: str = "VALID", depthwise: bool = False,
-             epilogue: str = "none", cache: TuneCache | None = None,
+             epilogue: str = "none", shards: int = 1,
+             cache: TuneCache | None = None,
              allow_measure: bool | None = None) -> dict[str, TunedConfig]:
     """Resolve all three passes of one layer instance, each through its own
-    problem key — what ``backend='auto'`` hands the custom VJP."""
+    problem key — what ``backend='auto'`` hands the custom VJP.
+
+    ``shards`` resolves the **per-shard** instance under that much batch
+    data parallelism (N is the global batch; keys use N/shards — exactly
+    what each ``shard_map`` shard's ``backend='auto'`` call looks up).
+
+    Example::
+
+        >>> import tempfile
+        >>> from repro import tune
+        >>> cache = tune.TuneCache(tempfile.mkstemp(suffix=".json")[1])
+        >>> plan = tune.get_plan(N=2, C=8, K=8, S=3, dilation=2, Q=128,
+        ...                      dtype="float32", cache=cache)
+        >>> sorted(plan)
+        ['bwd_data', 'bwd_weight', 'fwd']
+        >>> plan["fwd"].source            # empty cache, measurement off
+        'default'
+    """
     base = _make_problem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
                          dtype=dtype, padding=padding, depthwise=depthwise,
                          epilogue=epilogue)
+    if shards != 1:
+        base = base.localized(shards)
     return {p: get_config_for(base.with_pass(p), cache=cache,
                               allow_measure=allow_measure)
             for p in PASSES}

@@ -138,6 +138,23 @@ class ConvProblem:
     def with_pass(self, pass_: str) -> "ConvProblem":
         return dataclasses.replace(self, pass_=pass_)
 
+    def localized(self, shards: int) -> "ConvProblem":
+        """The per-shard view of this problem under ``shards``-way batch
+        data parallelism (DESIGN.md §13): same layer, local batch
+        ``N / shards`` — which is the shape a ``shard_map`` body traces,
+        and therefore the shape every per-shard ``backend='auto'`` lookup
+        keys on.  Local N changes the legal ``nblk`` folds and the
+        candidate space, so a global-shape key must never stand in for a
+        per-shard one; pre-tuning for sharded training goes through this
+        view (``scripts/tune.py --dp``).
+        """
+        if shards < 1 or self.N % shards:
+            raise ValueError(
+                f"cannot shard N={self.N} over {shards} data-parallel "
+                "shards (batch must divide evenly)")
+        # replace() re-validates: an nblk constraint must divide local N
+        return dataclasses.replace(self, N=self.N // shards)
+
     def key(self, device_kind: str) -> str:
         return cache_key(device_kind=device_kind, dtype=self.dtype, N=self.N,
                          C=self.C, K=self.K, S=self.S, dilation=self.dilation,

@@ -1,0 +1,18 @@
+"""Docs can't rot: the public-API docstring examples must run and the
+markdown tree's relative links must resolve (scripts/check_docs.py, also
+the CI docs job).  Runs in a subprocess so the doctest cache isolation
+(REPRO_TUNE_CACHE redirect) never touches this process's env."""
+import os
+import subprocess
+import sys
+
+
+def test_check_docs_passes():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run(
+        [sys.executable, "scripts/check_docs.py"], env=env, cwd=root,
+        capture_output=True, text=True, timeout=560)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "docs OK" in proc.stdout
