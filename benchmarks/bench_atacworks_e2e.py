@@ -30,7 +30,8 @@ import os
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import efficiency, time_fn, write_bench_json
+from benchmarks.common import bench_entry, efficiency, time_fn, \
+    write_bench_json
 from repro import configs
 from repro.data.synthetic import make_batch
 from repro.models import get_model
@@ -102,10 +103,10 @@ def main(full: bool = False, smoke: bool = False,
     if json_path:
         entries = {
             (f"{r['arch']}|{r['backend']}|{'fused' if r['fused'] else 'unfused'}"
-             f"|w{r['width']}|b{r['batch']}"): {
-                "ms": r["sec_per_step"] * 1e3, "gflops": r["gflops"],
-                "efficiency": r["efficiency"],
-                "source": f"{r['backend']}/{'fused' if r['fused'] else 'unfused'}"}
+             f"|w{r['width']}|b{r['batch']}"): bench_entry(
+                r["sec_per_step"], gflops=r["gflops"],
+                efficiency=r["efficiency"],
+                source=f"{r['backend']}/{'fused' if r['fused'] else 'unfused'}")
             for r in rows}
         write_bench_json(json_path, entries)
     return rows

@@ -48,7 +48,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import conv1d_flops, efficiency, time_fn, write_bench_json
+from benchmarks.common import bench_entry, conv1d_flops, efficiency, \
+    time_fn, write_bench_json
 from repro import tune
 from repro.kernels import ops as kops
 from repro.tune.presets import (  # single source of truth with scripts/tune.py
@@ -224,8 +225,8 @@ def _json_entries(rows):
             str(r.get(c, "")) for c in ("src_fwd", "src_bwd_data",
                                         "src_bwd_weight")
             if r.get(c)) or r["mode"]
-        out[key] = {"ms": sec * 1e3, "gflops": r.get("gflops"),
-                    "efficiency": r.get("efficiency"), "source": src}
+        out[key] = bench_entry(sec, source=src, gflops=r.get("gflops"),
+                               efficiency=r.get("efficiency"))
     return out
 
 

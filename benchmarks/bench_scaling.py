@@ -156,16 +156,16 @@ def main(argv=None):
         print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
                        for c in cols))
 
-    from benchmarks.common import write_bench_json
+    from benchmarks.common import bench_entry, write_bench_json
     entries = {
         f"{args.arch}|W{width}|B{r['global_batch']}|dp{r['devices']}|"
-        f"{r['mode']}": {
-            "ms": r["step_time_s"] * 1e3,
-            "samples_per_s": r["samples_per_s"],
-            "per_device_samples_per_s": r["per_device_samples_per_s"],
-            "efficiency": r["efficiency"],
-            "source": "shard_map" if r["devices"] > 1 else "single-device",
-        } for r in rows}
+        f"{r['mode']}": bench_entry(
+            r["step_time_s"],
+            samples_per_s=r["samples_per_s"],
+            per_device_samples_per_s=r["per_device_samples_per_s"],
+            efficiency=r["efficiency"],
+            source="shard_map" if r["devices"] > 1 else "single-device")
+        for r in rows}
     write_bench_json(args.json, entries)
     return rows
 

@@ -26,20 +26,39 @@ def efficiency(flops: float, sec: float) -> float:
     return achieved_fraction_of_peak(flops, sec)
 
 
+def bench_entry(sec: float, *, flops: float | None = None,
+                source: str = "", **extra) -> dict:
+    """One benchmark row in the shared artifact schema: ``ms`` always;
+    ``gflops``/``efficiency`` derived from ``flops`` when the row has a
+    FLOP count (paper-style efficiency, same roofline as telemetry's conv
+    spans); anything else rides along verbatim."""
+    row = {"ms": sec * 1e3, "source": source, **extra}
+    if flops is not None:
+        row["gflops"] = flops / sec / 1e9
+        row["efficiency"] = efficiency(flops, sec)
+    return row
+
+
 def write_bench_json(path: str, entries: dict) -> None:
     """Persist one benchmark's rows as a stable machine-readable artifact
-    (problem key -> {ms, gflops, efficiency, source}), so the perf
-    trajectory is tracked across PRs — CI uploads these from the smoke
-    runs.  Writes are atomic (tmp + rename)."""
+    ``{"provenance": {...}, "entries": {problem key -> bench_entry row}}``,
+    so the perf trajectory is tracked across PRs — CI uploads these from
+    the smoke runs.  The provenance block (git sha, jax version, device
+    kind, process index) is the same one stamped on telemetry logs
+    (``repro.obs.provenance``): a bench number and a telemetry trace from
+    one run are cross-attributable.  Writes are atomic (tmp + rename)."""
     import json
     import os
     import tempfile
 
+    from repro.obs.provenance import provenance
+
+    doc = {"provenance": provenance(), "entries": entries}
     d = os.path.dirname(os.path.abspath(path))
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".bench.tmp")
     try:
         with os.fdopen(fd, "w") as f:
-            json.dump(entries, f, indent=1, sort_keys=True)
+            json.dump(doc, f, indent=1, sort_keys=True)
         os.replace(tmp, path)
     except BaseException:
         try:

@@ -29,6 +29,7 @@ DOCTEST_MODULES = [
     "repro.kernels.sharded",
     "repro.core.conv1d",
     "repro.tune",
+    "repro.obs",
 ]
 
 MARKDOWN = ["README.md", "DESIGN.md", "CHANGES.md", "ROADMAP.md",

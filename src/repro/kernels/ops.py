@@ -57,6 +57,7 @@ import jax.numpy as jnp
 from . import conv1d_brgemm as _k
 from . import epilogue as _ep
 from . import ref as _ref
+from .. import obs as _obs
 
 Padding = Literal["VALID", "SAME", "CAUSAL"]
 
@@ -76,6 +77,46 @@ def default_backend() -> str:
     # Pallas is the TPU target; on CPU the honest fast path is XLA's conv
     # (interpret-mode Pallas is a correctness tool, not a perf tool).
     return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _obs_conv(pass_: str, thunk, *, args, flops, attrs):
+    """Run one conv1d pass under telemetry (repro.obs, DESIGN.md §14).
+
+    Telemetry is host-side only and must never change what gets compiled,
+    so the behaviour splits on whether the pass is being *traced*:
+
+      * concrete (eager) arguments — a timed ``conv1d.<pass>`` span:
+        ``block_until_ready`` wall time, plus the achieved fraction of the
+        roofline peak computed from ``flops`` at span close;
+      * tracer arguments (inside jit / vjp tracing) — a zero-duration
+        ``conv1d.<pass>.trace`` event recording the resolved config only.
+        No jnp ops are added either way, so enabling telemetry cannot
+        retrace or alter a jaxpr.
+
+    Disabled path is a single ``enabled()`` check before any dict is built.
+    """
+    if not _obs.enabled():
+        return thunk()
+    if any(isinstance(a, jax.core.Tracer) for a in args):
+        _obs.event(f"conv1d.{pass_}.trace", **attrs)
+        return thunk()
+
+    def _close(dur: float) -> dict:
+        out = {"flops": flops,
+               "gflops_per_s": flops / max(dur, 1e-30) / 1e9}
+        try:
+            from repro.obs.provenance import provenance
+            from repro.roofline.analysis import achieved_fraction_of_peak
+            out["efficiency"] = achieved_fraction_of_peak(
+                flops, dur, provenance()["device_kind"])
+        except Exception:
+            pass  # unknown device: report raw GFLOP/s only
+        return out
+
+    with _obs.span(f"conv1d.{pass_}", close_attrs=_close, **attrs):
+        out = thunk()
+        jax.block_until_ready(out)
+    return out
 
 
 class PassConfig(NamedTuple):
@@ -394,32 +435,50 @@ def _conv1d_pallas_bwd(spec, res, gout):
     g_pad = jnp.pad(du, ((0, 0), (0, 0), (span, span)))
     w_flip = w[::-1].transpose(0, 2, 1)  # (S, C, K)
     if bd.backend == "xla":
-        dx = _ref._xla_conv1d_f32(g_pad, w_flip, d)
+        bd_thunk = lambda: _ref._xla_conv1d_f32(g_pad, w_flip, d)  # noqa: E731
+        bd_attrs = dict(backend="xla")
     else:
         # the pass's filter tile must divide C (bwd-data's filter count);
         # a kblk tuned for K need not — fall back to the divisor ladder
         kblk = bd.blk2 if bd.blk2 and C % bd.blk2 == 0 else pick_kblk(C)
-        dx = _plain_fwd_padded(g_pad, w_flip, d, bd.wblk or spec.wblk, kblk,
-                               spec.interpret, pass_="bwd_data",
-                               alg=bd.alg or "tap_loop", nblk=bd.nblk or 1)
+        bd_thunk = lambda: _plain_fwd_padded(  # noqa: E731
+            g_pad, w_flip, d, bd.wblk or spec.wblk, kblk,
+            spec.interpret, pass_="bwd_data",
+            alg=bd.alg or "tap_loop", nblk=bd.nblk or 1)
+        bd_attrs = dict(backend="pallas", wblk=bd.wblk or spec.wblk,
+                        kblk=kblk, alg=bd.alg or "tap_loop",
+                        nblk=bd.nblk or 1)
+    # bwd-data contracts over K and produces all W output columns
+    dx = _obs_conv(
+        "bwd_data", bd_thunk, args=(x, du), flops=2.0 * N * C * K * S * W,
+        attrs=dict(bd_attrs, N=N, C=C, K=K, S=S, dilation=d, Q=Q,
+                   dtype=jnp.dtype(x.dtype).name, depthwise=False))
     dx = dx.astype(x.dtype)
     # --- Alg. 4: bwd-weight kernel (fp32 accumulation), with the bias
     # gradient fused into the same sequential-grid pass when bias exists —
     # again under its own per-pass config.
     bw = spec.bwd_weight or PassConfig("pallas", spec.wblk, None)
     if bw.backend == "xla":
-        dwout = _xla_conv1d_bwd_weight(
+        bw_thunk = lambda: _xla_conv1d_bwd_weight(  # noqa: E731
             x, du, dilation=d, with_dbias=spec.bias_dtype is not None)
+        bw_attrs = dict(backend="xla")
     else:
         wblk = bw.wblk or spec.wblk
         Qp = _round_up(Q, wblk)
         xp = (jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
               if Qp + span > W else x)
         gp = jnp.pad(du, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else du
-        dwout = _k.conv1d_pass(
+        bw_thunk = lambda: _k.conv1d_pass(  # noqa: E731
             "bwd_weight", xp, gp, S=S, dilation=d, wblk=wblk,
             alg=bw.alg or "tap_loop", nblk=_legal_nblk(bw.nblk, N),
             with_dbias=spec.bias_dtype is not None, interpret=spec.interpret)
+        bw_attrs = dict(backend="pallas", wblk=wblk,
+                        alg=bw.alg or "tap_loop",
+                        nblk=_legal_nblk(bw.nblk, N))
+    dwout = _obs_conv(
+        "bwd_weight", bw_thunk, args=(x, du), flops=2.0 * N * C * K * S * Q,
+        attrs=dict(bw_attrs, N=N, C=C, K=K, S=S, dilation=d, Q=Q,
+                   dtype=jnp.dtype(x.dtype).name, depthwise=False))
     dw, dbias, dres = _epilogue_param_grads(spec, dwout, du)
     return dx, dw.astype(w.dtype), dbias, dres
 
@@ -523,15 +582,19 @@ def conv1d(
         w = _psum_cotangent(grad_reduce_axes, w)
         if bias is not None:
             bias = _psum_cotangent(grad_reduce_axes, bias)
+    N = x.shape[0]
+    attrs = dict(backend=backend, N=N, C=C, K=K, S=S, dilation=dilation,
+                 Q=Q, dtype=jnp.dtype(x.dtype).name, depthwise=False)
     if backend == "ref":
-        return _ref.conv1d_fused_ref(x, w, dilation=dilation, bias=bias,
-                                     activation=activation, residual=residual,
-                                     out_dtype=out_dtype)
-    if backend == "xla":
-        u = _ep.apply_ref(_ref._xla_conv1d_f32(x, w, dilation), bias=bias,
-                          residual=residual, activation=activation)
-        return u.astype(out_dtype or x.dtype)
-    if backend == "pallas":
+        thunk = lambda: _ref.conv1d_fused_ref(  # noqa: E731
+            x, w, dilation=dilation, bias=bias, activation=activation,
+            residual=residual, out_dtype=out_dtype)
+    elif backend == "xla":
+        def thunk():
+            u = _ep.apply_ref(_ref._xla_conv1d_f32(x, w, dilation), bias=bias,
+                              residual=residual, activation=activation)
+            return u.astype(out_dtype or x.dtype)
+    elif backend == "pallas":
         wblk = wblk or pick_wblk(Q, S, dilation)
         interpret = _INTERPRET if interpret is None else interpret
         spec = _FusedSpec(dilation, wblk, kblk, interpret, activation,
@@ -540,8 +603,12 @@ def conv1d(
                           bwd_data_cfg, bwd_weight_cfg,
                           alg or "tap_loop", _legal_nblk(nblk, x.shape[0]),
                           grad_reduce_axes)
-        return _conv1d_pallas(spec, x, w, bias, residual)
-    raise ValueError(f"unknown conv backend {backend!r}")
+        attrs.update(alg=spec.alg, nblk=spec.nblk, wblk=wblk, kblk=kblk)
+        thunk = lambda: _conv1d_pallas(spec, x, w, bias, residual)  # noqa: E731
+    else:
+        raise ValueError(f"unknown conv backend {backend!r}")
+    return _obs_conv("fwd", thunk, args=(x, w),
+                     flops=2.0 * N * C * K * S * Q, attrs=attrs)
 
 
 # ---------------------------------------------------------------------------
@@ -624,28 +691,43 @@ def _dw_conv1d_pallas_bwd(spec, res, gout):
     bd = spec.bwd_data or PassConfig("pallas", spec.wblk, spec.blk2)
     g_pad = jnp.pad(du, ((0, 0), (0, 0), (span, span)))
     if bd.backend == "xla":
-        dx = _ref._xla_depthwise_conv1d_f32(g_pad, w[::-1], d)
+        bd_thunk = lambda: _ref._xla_depthwise_conv1d_f32(  # noqa: E731
+            g_pad, w[::-1], d)
+        bd_attrs = dict(backend="xla")
     else:
-        dx = _dw_plain_fwd_padded(
-            g_pad, w[::-1], d, bd.wblk or spec.wblk,
-            _dw_legal_cblk(bd.blk2, C) or _dw_legal_cblk(spec.blk2, C),
+        cblk = _dw_legal_cblk(bd.blk2, C) or _dw_legal_cblk(spec.blk2, C)
+        bd_thunk = lambda: _dw_plain_fwd_padded(  # noqa: E731
+            g_pad, w[::-1], d, bd.wblk or spec.wblk, cblk,
             spec.interpret, pass_="bwd_data")
+        bd_attrs = dict(backend="pallas", wblk=bd.wblk or spec.wblk,
+                        cblk=cblk)
+    dx = _obs_conv(
+        "bwd_data", bd_thunk, args=(x, du), flops=2.0 * N * C * S * W,
+        attrs=dict(bd_attrs, N=N, C=C, K=C, S=S, dilation=d, Q=Q,
+                   dtype=jnp.dtype(x.dtype).name, depthwise=True))
     dx = dx.astype(x.dtype)
     # --- bwd-weight (sequential grid), under its own per-pass config
     bw = spec.bwd_weight or PassConfig("pallas", spec.wblk, spec.blk2)
     if bw.backend == "xla":
-        dwout = _xla_dw_bwd_weight(
+        bw_thunk = lambda: _xla_dw_bwd_weight(  # noqa: E731
             x, du, dilation=d, with_dbias=spec.bias_dtype is not None)
+        bw_attrs = dict(backend="xla")
     else:
         wblk = bw.wblk or spec.wblk
         Qp = _round_up(Q, wblk)
         xp = (jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
               if Qp + span > W else x)
         gp = jnp.pad(du, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else du
-        dwout = _k.conv1d_pass(
+        cblk = _dw_legal_cblk(bw.blk2, C) or _dw_legal_cblk(spec.blk2, C)
+        bw_thunk = lambda: _k.conv1d_pass(  # noqa: E731
             "bwd_weight", xp, gp, depthwise=True, S=S, dilation=d, wblk=wblk,
-            cblk=_dw_legal_cblk(bw.blk2, C) or _dw_legal_cblk(spec.blk2, C),
+            cblk=cblk,
             with_dbias=spec.bias_dtype is not None, interpret=spec.interpret)
+        bw_attrs = dict(backend="pallas", wblk=wblk, cblk=cblk)
+    dwout = _obs_conv(
+        "bwd_weight", bw_thunk, args=(x, du), flops=2.0 * N * C * S * Q,
+        attrs=dict(bw_attrs, N=N, C=C, K=C, S=S, dilation=d, Q=Q,
+                   dtype=jnp.dtype(x.dtype).name, depthwise=True))
     dw, dbias, dres = _epilogue_param_grads(spec, dwout, du)
     return dx, dw.astype(w.dtype), dbias, dres
 
@@ -724,15 +806,20 @@ def depthwise_conv1d(
         w = _psum_cotangent(grad_reduce_axes, w)
         if bias is not None:
             bias = _psum_cotangent(grad_reduce_axes, bias)
+    N = x.shape[0]
+    attrs = dict(backend=backend, N=N, C=C, K=C, S=S, dilation=dilation,
+                 Q=Q, dtype=jnp.dtype(x.dtype).name, depthwise=True)
     if backend == "ref":
-        return _ref.depthwise_conv1d_fused_ref(
+        thunk = lambda: _ref.depthwise_conv1d_fused_ref(  # noqa: E731
             x, w, dilation=dilation, bias=bias, activation=activation,
             residual=residual, out_dtype=out_dtype)
-    if backend == "xla":
-        u = _ep.apply_ref(_ref._xla_depthwise_conv1d_f32(x, w, dilation),
-                          bias=bias, residual=residual, activation=activation)
-        return u.astype(out_dtype or x.dtype)
-    if backend == "pallas":
+    elif backend == "xla":
+        def thunk():
+            u = _ep.apply_ref(_ref._xla_depthwise_conv1d_f32(x, w, dilation),
+                              bias=bias, residual=residual,
+                              activation=activation)
+            return u.astype(out_dtype or x.dtype)
+    elif backend == "pallas":
         wblk = wblk or pick_wblk(Q, S, dilation)
         interpret = _INTERPRET if interpret is None else interpret
         spec = _FusedSpec(dilation, wblk, cblk, interpret, activation,
@@ -740,5 +827,9 @@ def depthwise_conv1d(
                           jnp.dtype(out_dtype).name if out_dtype else None,
                           bwd_data_cfg, bwd_weight_cfg,
                           reduce_axes=grad_reduce_axes)
-        return _dw_conv1d_pallas(spec, x, w, bias, residual)
-    raise ValueError(f"unknown conv backend {backend!r}")
+        attrs.update(wblk=wblk, cblk=cblk)
+        thunk = lambda: _dw_conv1d_pallas(spec, x, w, bias, residual)  # noqa: E731
+    else:
+        raise ValueError(f"unknown conv backend {backend!r}")
+    return _obs_conv("fwd", thunk, args=(x, w),
+                     flops=2.0 * N * C * S * Q, attrs=attrs)

@@ -18,11 +18,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.configs.base import reduced
 from repro.launch.mesh import make_host_mesh
 from repro.models import get_model, sharding as shd
-from repro.train.serve_step import make_cache, make_serve_step
+from repro.train.serve_step import make_cache, make_serve_step, \
+    with_request_spans
 
 
 def main(argv=None):
@@ -52,7 +53,9 @@ def main(argv=None):
             lambda p, s: jax.device_put(p, jax.sharding.NamedSharding(mesh, s)),
             params, pspecs)
         cache = make_cache(cfg, args.batch, max_len, dtype=jnp.float32)
-        serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+        serve = with_request_spans(
+            jax.jit(make_serve_step(cfg), donate_argnums=(1,)),
+            "serve.decode_step", arch=cfg.name, batch=args.batch)
 
         rng = np.random.default_rng(args.seed)
         prompt = jnp.asarray(
@@ -60,19 +63,23 @@ def main(argv=None):
             jnp.int32)
 
         # prefill (sequential; cache-correct by construction)
-        t0 = time.time()
+        t0 = time.perf_counter()
         nxt = prompt[:, :1]
-        for t in range(args.prompt_len):
-            nxt, cache, _ = serve(params, cache, prompt[:, t:t + 1], jnp.int32(t))
-        print(f"prefill {args.prompt_len} tokens: {time.time() - t0:.2f}s")
+        with obs.span("serve.prefill", arch=cfg.name, batch=args.batch,
+                      prompt_len=args.prompt_len):
+            for t in range(args.prompt_len):
+                nxt, cache, _ = serve(params, cache, prompt[:, t:t + 1],
+                                      jnp.int32(t))
+        print(f"prefill {args.prompt_len} tokens: "
+              f"{time.perf_counter() - t0:.2f}s")
 
         # generate
         out = [nxt]
         times = []
         for t in range(args.prompt_len, max_len - 1):
-            t0 = time.time()
+            t0 = time.perf_counter()
             nxt, cache, logits = serve(params, cache, nxt, jnp.int32(t))
-            times.append(time.time() - t0)
+            times.append(time.perf_counter() - t0)
             out.append(nxt)
         toks = jnp.concatenate(out, axis=1)
         assert bool(jnp.isfinite(jnp.asarray(logits)).all()), "non-finite logits"

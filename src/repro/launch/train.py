@@ -35,15 +35,49 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import configs, obs
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.configs.base import reduced
 from repro.data.synthetic import SyntheticLoader
 from repro.launch.mesh import dp_size, make_host_mesh
 from repro.models import get_model, sharding as shd
 from repro.runtime.health import HealthMonitor, PreemptionGuard
-from repro.runtime.straggler import StragglerDetector
-from repro.train.train_step import init_state, make_train_step
+from repro.runtime.straggler import ShardStragglerMonitor
+from repro.train.train_step import init_state, make_phase_probes, \
+    make_train_step
+
+# steps excluded from throughput: step 0 pays compile, step 1 still hits
+# first-touch allocator costs — both would poison a samples/s claim
+WARMUP_STEPS = 2
+
+
+def _telemetry_conv_probe(cfg, dilation=None):
+    """Eagerly run the arch's representative conv cell (fwd + vjp pull,
+    backend='auto') once, so a *jitted* training smoke still produces
+    measured per-pass efficiency spans and tuner cache counters — inside
+    the jit those calls are tracers and only log ``.trace`` events."""
+    from repro.kernels import ops
+    C, S = cfg.conv_channels, cfg.conv_filter
+    d = dilation if dilation is not None else cfg.conv_dilation
+    if not (C and S):
+        return
+    x = jnp.ones((1, C, 512), jnp.float32)
+    w = jnp.full((S, C, C), 0.01, jnp.float32)
+
+    def f(w):
+        return ops.conv1d(x, w, dilation=d, padding="SAME", backend="auto")
+
+    ops.conv1d(x, w, dilation=d, padding="SAME", backend="auto")  # timed fwd
+    y, pull = jax.vjp(f, w)
+    pull(jnp.ones_like(y))  # eager custom-VJP pull: timed bwd_* spans
+    # the per-pass custom VJP only exists on the pallas path; where 'auto'
+    # resolves to the library backend (CPU), pin it so bwd_data/bwd_weight
+    # still produce measured spans
+    def fp(w):
+        return ops.conv1d(x, w, dilation=d, padding="SAME", backend="pallas")
+
+    y2, pull2 = jax.vjp(fp, w)
+    pull2(jnp.ones_like(y2))
 
 
 def main(argv=None):
@@ -65,7 +99,12 @@ def main(argv=None):
     ap.add_argument("--no-shard-map", action="store_true",
                     help="force the GSPMD path even for conv on a "
                          "multi-device data mesh")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write a telemetry JSONL log to PATH (same as "
+                         "REPRO_TELEMETRY=1 + REPRO_TELEMETRY_PATH)")
     args = ap.parse_args(argv)
+    if args.telemetry:
+        obs.enable(args.telemetry)
 
     cfg = configs.get(args.arch)
     if args.smoke:
@@ -114,24 +153,42 @@ def main(argv=None):
         jit_step = jax.jit(step_fn, donate_argnums=(0,))
 
         health = HealthMonitor()
-        straggler = StragglerDetector()
+        straggler = ShardStragglerMonitor()
         guard = PreemptionGuard()
-        losses = []
+        pid = int(jax.process_index())
+        # first telemetry-on step after (re)start: run the per-phase probes
+        probe_at = min(start_step + WARMUP_STEPS, args.steps - 1)
+        losses, step_times = [], []
         try:
             for i in range(start_step, args.steps):
+                t_data0 = time.perf_counter()
                 batch = next(loader)
-                t0 = time.time()
+                obs.span_event("train.step.data",
+                               time.perf_counter() - t_data0, step=i)
+                t0 = time.perf_counter()
                 state, metrics = jit_step(state, batch)
-                loss = float(metrics["loss"])
-                dt = time.time() - t0
+                loss = float(metrics["loss"])  # blocks on the step
+                dt = time.perf_counter() - t0
                 losses.append(loss)
+                step_times.append(dt)
+                obs.span_event("train.step", dt, step=i, loss=loss)
+                obs.gauge("train.shard.step_time", dt, shard=pid, step=i)
                 verdict = health.record(i, loss,
                                         bool(metrics.get("skipped", 0.0)))
-                sverdict = straggler.record(i, dt)
+                sverdict = straggler.record(pid, i, dt)
                 if i % args.log_every == 0:
                     print(f"step {i:5d} loss {loss:.4f} "
                           f"gnorm {float(metrics['grad_norm']):.3f} "
                           f"dt {dt:.3f}s [{verdict}/{sverdict}]")
+                if obs.enabled() and i == probe_at:
+                    # one-shot measured breakdown (separately jitted phase
+                    # prefixes, differential timing) + the eager conv probe
+                    probes = make_phase_probes(
+                        cfg, mesh=mesh if shard_step else None)
+                    for ph, sec in probes(state, batch).items():
+                        obs.span_event(f"train.phase.{ph}", sec, step=i)
+                    if cfg.family == "conv":
+                        _telemetry_conv_probe(cfg)
                 if verdict == "restore" and ckpt and ckpt.latest_step() is not None:
                     print("health: restoring last checkpoint")
                     state = ckpt.restore(state)
@@ -147,15 +204,22 @@ def main(argv=None):
             loader.close()
             if ckpt:
                 ckpt.wait()
+            obs.event("train.health.rollup", **health.rollup())
+            obs.event("train.straggler.rollup", **straggler.rollup())
         if ckpt:
             ckpt.save(state, args.steps)
         first = np.mean(losses[:3]) if len(losses) >= 6 else losses[0]
         last = np.mean(losses[-3:])
-        tput = (args.batch / straggler.healthy_step_time
-                if straggler.healthy_step_time > 0 else float("nan"))
+        # throughput from the monotonic per-step times, compile/warmup
+        # steps excluded — time.time() + EWMA-with-compile-steps both
+        # overstated the step cost here before
+        measured = step_times[WARMUP_STEPS:] or step_times
+        steady = float(np.median(measured))
+        tput = args.batch / steady if steady > 0 else float("nan")
         print(f"done: loss {first:.4f} -> {last:.4f} "
               f"({'improved' if last < first else 'NOT improved'}); "
-              f"healthy step {straggler.healthy_step_time:.3f}s "
+              f"steady step {steady:.3f}s over {len(measured)} "
+              f"post-warmup steps "
               f"({tput:.2f} samples/s, {tput / dp:.2f}/device over dp={dp})")
     return 0
 

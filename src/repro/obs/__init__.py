@@ -1,0 +1,56 @@
+"""repro.obs — stack-wide telemetry: event bus, scoreboard, trace export.
+
+A zero-dependency, process-local telemetry layer (DESIGN.md §14).  Off by
+default; every hook's disabled path is a single ``is None`` check (no
+allocation, no I/O — sub-microsecond, and **never** part of a jaxpr, so
+toggling telemetry cannot retrace anything).  Enable with
+``REPRO_TELEMETRY=1`` (sink path from ``REPRO_TELEMETRY_PATH``) or
+explicitly:
+
+    >>> import tempfile
+    >>> from repro import obs
+    >>> path = obs.enable(tempfile.mkstemp(suffix=".jsonl")[1])
+    >>> with obs.span("demo.outer", note="hi"):
+    ...     with obs.span("demo.inner"):
+    ...         pass
+    >>> obs.counter("demo.count", 2)
+    >>> obs.counters()["demo.count"]
+    2
+    >>> obs.disable()
+    >>> [r["name"] for r in obs.read_events(path)]  # spans emit at exit
+    ['provenance', 'demo.inner', 'demo.outer', 'demo.count']
+    >>> obs.read_events(path)[2]["attrs"]["note"]   # doctest: +ELLIPSIS
+    'hi'
+
+What gets instrumented where:
+  * ``kernels/ops.py``     — a span per executed conv1d pass (eager calls:
+    measured wall time + achieved fraction-of-peak vs the roofline); a
+    trace event per *traced* pass recording the resolved config.
+  * ``repro.tune``         — cache hit/miss/legacy-upgrade counters and
+    per-candidate search traces (predicted vs measured seconds).
+  * ``launch/train.py``    — per-step spans (data / step), a measured
+    phase breakdown (forward / backward / optimizer / psum), per-shard
+    step-time gauges, health + straggler rollups.
+  * ``train/serve_step.py``— request-level latency spans.
+
+Consumers: ``scripts/obs_report.py`` (scoreboard: p50/p99 per span, conv
+efficiency per cell, tuner hit rate, cost-model error) and
+``python -m repro.obs.trace_export`` (Chrome/Perfetto trace).  See
+docs/observability.md.
+"""
+from __future__ import annotations
+
+from .bus import (DEFAULT_PATH, ENV_TELEMETRY, ENV_TELEMETRY_PATH, Span,
+                  counter, counters, disable, enable, enabled, event,
+                  gauge, log_path, span, span_event, _env_enable)
+from .provenance import provenance
+from .schema import read_events, validate
+
+_env_enable()
+
+__all__ = [
+    "DEFAULT_PATH", "ENV_TELEMETRY", "ENV_TELEMETRY_PATH", "Span",
+    "counter", "counters", "disable", "enable", "enabled", "event",
+    "gauge", "log_path", "provenance", "read_events", "span",
+    "span_event", "validate",
+]

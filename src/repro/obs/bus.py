@@ -1,0 +1,236 @@
+"""Process-local telemetry event bus with a JSONL sink.
+
+One ``_Bus`` per process (module-level singleton), **off by default**: every
+public hook checks ``_BUS is not None`` first, so a disabled hook is a
+handful of bytecode ops (no dict building, no I/O, no jax interaction —
+tested to stay under a microsecond in tests/test_obs.py).  Nothing here
+imports jax or touches device state: trace-time hooks inside jitted code
+must never change the jaxpr, and enabling telemetry must never retrace.
+
+Primitives (all no-ops while disabled):
+
+  * ``span(name, **attrs)``        — context manager timing a region with a
+                                     monotonic clock (``perf_counter``);
+                                     spans nest via a thread-local stack and
+                                     each record carries its parent id.
+  * ``span_event(name, dur, ...)`` — a span whose duration was measured by
+                                     the caller (derived phases).
+  * ``counter(name, value)``       — monotonic increment; the bus keeps
+                                     running totals (``counters()``) and
+                                     logs every increment.
+  * ``gauge(name, value)``         — point-in-time sample.
+  * ``event(name)``                — zero-duration marker.
+
+Every record is one JSON object per line (see ``repro.obs.schema`` for the
+strict field contract); the first record of a log is the provenance block
+(git sha, jax version, device kind, process index) shared with the
+BENCH_*.json artifacts via ``benchmarks/common.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from itertools import count
+from typing import Any, Callable
+
+ENV_TELEMETRY = "REPRO_TELEMETRY"
+ENV_TELEMETRY_PATH = "REPRO_TELEMETRY_PATH"
+DEFAULT_PATH = "repro_telemetry.jsonl"
+
+_BUS: "_Bus | None" = None
+
+
+class _Bus:
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        self._f = open(path, "a")
+        self._lock = threading.Lock()
+        self._ids = count(1)
+        self._local = threading.local()
+        self.epoch = time.perf_counter()
+        self.wall_epoch = time.time()
+        self.totals: dict[str, float] = {}
+        from .provenance import provenance
+        self.pid = int(provenance().get("process_index", 0))
+        self.emit({"kind": "meta", "name": "provenance", "ts": 0.0,
+                   "attrs": dict(provenance(), wall_epoch=self.wall_epoch)})
+
+    # -- plumbing -----------------------------------------------------------
+
+    def now(self) -> float:
+        return time.perf_counter() - self.epoch
+
+    def stack(self) -> list:
+        st = getattr(self._local, "stack", None)
+        if st is None:
+            st = self._local.stack = []
+        return st
+
+    def emit(self, rec: dict[str, Any]) -> None:
+        rec.setdefault("pid", getattr(self, "pid", 0))
+        line = json.dumps(rec, default=str)
+        with self._lock:
+            self._f.write(line + "\n")
+            self._f.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            self._f.close()
+
+
+class Span:
+    """One timed region.  Emitted at ``__exit__``; ``attrs`` may be mutated
+    inside the ``with`` block, and ``close_attrs(dur_seconds)`` — if given —
+    supplies duration-derived attrs (e.g. achieved fraction of peak) at
+    close time.  ``dur`` is readable after the block."""
+
+    __slots__ = ("name", "attrs", "close_attrs", "id", "parent", "_t0",
+                 "ts", "dur")
+
+    def __init__(self, name: str, attrs: dict,
+                 close_attrs: Callable[[float], dict] | None = None):
+        self.name = name
+        self.attrs = attrs
+        self.close_attrs = close_attrs
+        self.dur = None
+
+    def __enter__(self) -> "Span":
+        bus = _BUS
+        if bus is None:  # disabled between construction and entry
+            self.id = self.parent = None
+            self._t0 = time.perf_counter()
+            return self
+        st = bus.stack()
+        self.id = next(bus._ids)
+        self.parent = st[-1] if st else None
+        st.append(self.id)
+        self.ts = bus.now()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.dur = time.perf_counter() - self._t0
+        bus = _BUS
+        if bus is None or self.id is None:
+            return
+        st = bus.stack()
+        if st and st[-1] == self.id:
+            st.pop()
+        if self.close_attrs is not None:
+            self.attrs.update(self.close_attrs(self.dur))
+        bus.emit({"kind": "span", "name": self.name, "ts": self.ts,
+                  "dur": self.dur, "id": self.id, "parent": self.parent,
+                  "attrs": self.attrs})
+
+
+class _NoopSpan:
+    """Shared inert span for the disabled path: no allocation per call."""
+
+    __slots__ = ()
+    dur = None
+    attrs: dict = {}
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return None
+
+
+_NOOP_SPAN = _NoopSpan()
+
+
+# ---------------------------------------------------------------------------
+# Public hooks — every one starts with the `_BUS is None` fast path
+# ---------------------------------------------------------------------------
+
+
+def enabled() -> bool:
+    """True when a telemetry sink is open (``enable`` / REPRO_TELEMETRY=1)."""
+    return _BUS is not None
+
+
+def enable(path: str | None = None) -> str:
+    """Open a JSONL telemetry sink (appending) and turn every hook live.
+    Re-enabling with a different path closes the previous sink first.
+    Returns the resolved path."""
+    global _BUS
+    path = path or os.environ.get(ENV_TELEMETRY_PATH) or DEFAULT_PATH
+    if _BUS is not None:
+        if os.path.abspath(_BUS.path) == os.path.abspath(path):
+            return _BUS.path
+        disable()
+    _BUS = _Bus(path)
+    return path
+
+
+def disable() -> None:
+    """Close the sink; every hook reverts to its no-op fast path."""
+    global _BUS
+    if _BUS is not None:
+        _BUS.close()
+        _BUS = None
+
+
+def log_path() -> str | None:
+    return _BUS.path if _BUS is not None else None
+
+
+def span(name: str, close_attrs: Callable[[float], dict] | None = None,
+         **attrs):
+    """Context manager timing a region; nests via a thread-local stack."""
+    if _BUS is None:
+        return _NOOP_SPAN
+    return Span(name, attrs, close_attrs)
+
+
+def span_event(name: str, dur: float, **attrs) -> None:
+    """A span whose duration the caller measured (monotonic clock); parented
+    under the current open span, stamped as ending now."""
+    bus = _BUS
+    if bus is None:
+        return
+    st = bus.stack()
+    bus.emit({"kind": "span", "name": name, "ts": max(0.0, bus.now() - dur),
+              "dur": float(dur), "id": next(bus._ids),
+              "parent": st[-1] if st else None, "attrs": attrs})
+
+
+def counter(name: str, value: float = 1, **attrs) -> None:
+    bus = _BUS
+    if bus is None:
+        return
+    bus.totals[name] = bus.totals.get(name, 0) + value
+    bus.emit({"kind": "counter", "name": name, "ts": bus.now(),
+              "value": value, "total": bus.totals[name], "attrs": attrs})
+
+
+def gauge(name: str, value: float, **attrs) -> None:
+    bus = _BUS
+    if bus is None:
+        return
+    bus.emit({"kind": "gauge", "name": name, "ts": bus.now(),
+              "value": float(value), "attrs": attrs})
+
+
+def event(name: str, **attrs) -> None:
+    bus = _BUS
+    if bus is None:
+        return
+    bus.emit({"kind": "event", "name": name, "ts": bus.now(), "attrs": attrs})
+
+
+def counters() -> dict[str, float]:
+    """Snapshot of the in-process counter totals ({} while disabled)."""
+    return dict(_BUS.totals) if _BUS is not None else {}
+
+
+def _env_enable() -> None:
+    """Honor REPRO_TELEMETRY=1 at import time (how a launcher run under the
+    env var starts logging without code changes)."""
+    if os.environ.get(ENV_TELEMETRY) == "1" and _BUS is None:
+        enable()

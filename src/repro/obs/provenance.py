@@ -1,0 +1,56 @@
+"""Run provenance: the identity block stamped on every telemetry log and on
+every BENCH_*.json artifact (``benchmarks/common.write_bench_json``), so a
+number can always be traced back to the code + device that produced it.
+
+Collected lazily and cached — importing this module touches nothing; the
+first call may initialise jax (device kind) and shell out to git (sha).
+Every field degrades to a placeholder rather than raising: telemetry must
+never take a run down.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import platform
+import subprocess
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=5, cwd=os.path.dirname(os.path.abspath(__file__)))
+        sha = out.stdout.strip()
+        if out.returncode == 0 and sha:
+            dirty = subprocess.run(
+                ["git", "status", "--porcelain"], capture_output=True,
+                text=True, timeout=5,
+                cwd=os.path.dirname(os.path.abspath(__file__)))
+            return sha + ("-dirty" if dirty.stdout.strip() else "")
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+@functools.lru_cache(maxsize=1)
+def provenance() -> dict:
+    """{git_sha, jax_version, device_kind, n_devices, process_index,
+    hostname, python} — JSON-safe, cached per process."""
+    try:
+        import jax
+        jax_version = jax.__version__
+        device_kind = jax.devices()[0].device_kind
+        n_devices = len(jax.devices())
+        process_index = int(jax.process_index())
+    except Exception:  # jax missing/unusable: still produce a block
+        jax_version = device_kind = "unknown"
+        n_devices, process_index = 0, 0
+    return {
+        "git_sha": _git_sha(),
+        "jax_version": jax_version,
+        "device_kind": device_kind,
+        "n_devices": n_devices,
+        "process_index": process_index,
+        "hostname": platform.node(),
+        "python": platform.python_version(),
+    }

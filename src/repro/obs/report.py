@@ -1,0 +1,236 @@
+"""Aggregate a telemetry JSONL log into an efficiency scoreboard.
+
+The paper argues in *achieved fraction of roofline peak* (80% on Cascade
+Lake) — so does this report: conv1d pass spans carry measured efficiency,
+tuner counters give the cache hit rate, candidate search traces give the
+cost-model error distribution, and train-step spans give the end-to-end
+breakdown.  ``scripts/obs_report.py`` is the CLI; tests import
+``aggregate`` directly.
+
+Sections (keys of ``aggregate``'s result):
+  provenance  the log's identity block
+  spans       per-name count / p50 / p99 / total seconds
+  conv_cells  per (cell, pass): count, p50 ms, median efficiency
+  tuner       cache hits / misses / legacy upgrades / hit rate
+  cost_model  predicted-vs-measured ratio distribution over search traces
+  steps       train.step count + latency percentiles + phase breakdown
+  shards      per-shard step-time stats + straggler verdicts (the gauges
+              drive ``runtime/straggler.py`` detection offline)
+  counters    raw counter totals
+"""
+from __future__ import annotations
+
+import json
+from collections import defaultdict
+from typing import Any, Iterable
+
+from .schema import read_events
+
+PHASES = ("forward", "backward", "optimizer", "psum")
+
+
+def _pct(vals: list[float], q: float) -> float:
+    if not vals:
+        return float("nan")
+    s = sorted(vals)
+    i = min(len(s) - 1, max(0, round(q * (len(s) - 1))))
+    return s[i]
+
+
+def _span_stats(durs: list[float]) -> dict[str, float]:
+    return {"count": len(durs), "p50_s": _pct(durs, 0.5),
+            "p99_s": _pct(durs, 0.99), "total_s": sum(durs)}
+
+
+def _conv_cell_key(a: dict) -> str:
+    kind = "dw" if a.get("depthwise") else "dense"
+    return (f"{kind}|{a.get('dtype')}|N{a.get('N')}|C{a.get('C')}"
+            f"|K{a.get('K')}|S{a.get('S')}|d{a.get('dilation')}"
+            f"|Q{a.get('Q')}")
+
+
+def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
+    events = list(events)
+    provenance = next((r["attrs"] for r in events
+                       if r["kind"] == "meta" and r["name"] == "provenance"),
+                      {})
+    spans: dict[str, list[float]] = defaultdict(list)
+    cells: dict[tuple[str, str], dict[str, list[float]]] = defaultdict(
+        lambda: {"dur": [], "eff": [], "gflops": []})
+    counters: dict[str, float] = defaultdict(float)
+    searches: list[dict] = []
+    phase_durs: dict[str, list[float]] = defaultdict(list)
+    shard_steps: dict[int, list[tuple[int, float]]] = defaultdict(list)
+
+    for r in events:
+        kind, name, attrs = r["kind"], r["name"], r.get("attrs", {})
+        if kind == "span":
+            spans[name].append(r["dur"])
+            if name.startswith("conv1d."):
+                c = cells[(_conv_cell_key(attrs), name[len("conv1d."):])]
+                c["dur"].append(r["dur"])
+                if "efficiency" in attrs:
+                    c["eff"].append(attrs["efficiency"])
+                if "gflops_per_s" in attrs:
+                    c["gflops"].append(attrs["gflops_per_s"])
+            if name.startswith("train.phase."):
+                phase_durs[name[len("train.phase."):]].append(r["dur"])
+        elif kind == "counter":
+            counters[name] += r["value"]
+        elif kind == "gauge" and name == "train.shard.step_time":
+            shard_steps[int(attrs.get("shard", r["pid"]))].append(
+                (int(attrs.get("step", -1)), r["value"]))
+        elif kind == "event" and name == "tune.search.candidate":
+            searches.append(attrs)
+
+    hits = counters.get("tune.cache.hit", 0)
+    misses = counters.get("tune.cache.miss", 0)
+    tuner = {
+        "hits": int(hits), "misses": int(misses),
+        "legacy_upgrades": int(counters.get("tune.cache.legacy_upgrade", 0)),
+        "hit_rate": hits / (hits + misses) if hits + misses else float("nan"),
+    }
+
+    ratios = [s["measured_s"] / s["predicted_s"] for s in searches
+              if s.get("predicted_s") and s.get("measured_s")]
+    import math
+    logerr = [abs(math.log2(x)) for x in ratios]
+    cost_model = {"n": len(ratios), "ratio_p50": _pct(ratios, 0.5),
+                  "abs_log2_err_p50": _pct(logerr, 0.5),
+                  "abs_log2_err_p90": _pct(logerr, 0.9)}
+
+    steps = dict(_span_stats(spans.get("train.step", [])))
+    steps["phases"] = {p: _span_stats(phase_durs[p])
+                       for p in PHASES if p in phase_durs}
+
+    shards: dict[str, Any] = {}
+    stragglers: list[int] = []
+    if shard_steps:
+        from repro.runtime.straggler import ShardStragglerMonitor
+        mon = ShardStragglerMonitor()
+        for shard, samples in sorted(shard_steps.items()):
+            verdicts = defaultdict(int)
+            for step, dt in sorted(samples):
+                verdicts[mon.record(shard, step, dt)] += 1
+            shards[str(shard)] = {
+                "steps": len(samples),
+                "p50_s": _pct([dt for _, dt in samples], 0.5),
+                "verdicts": dict(verdicts),
+            }
+        stragglers = sorted(mon.stragglers())
+
+    return {
+        "provenance": provenance,
+        "spans": {n: _span_stats(d) for n, d in sorted(spans.items())},
+        "conv_cells": {
+            f"{cell}|{pass_}": {
+                "count": len(c["dur"]), "p50_ms": _pct(c["dur"], 0.5) * 1e3,
+                "efficiency_p50": _pct(c["eff"], 0.5),
+                "gflops_per_s_p50": _pct(c["gflops"], 0.5),
+            } for (cell, pass_), c in sorted(cells.items())},
+        "tuner": tuner,
+        "cost_model": cost_model,
+        "steps": steps,
+        "shards": {"per_shard": shards, "stragglers": stragglers},
+        "counters": dict(counters),
+    }
+
+
+def aggregate_path(path: str) -> dict[str, Any]:
+    return aggregate(read_events(path))
+
+
+def _fmt(x: float, unit: str = "") -> str:
+    if x != x:  # nan
+        return "-"
+    return f"{x:.4g}{unit}"
+
+
+def render_text(agg: dict[str, Any]) -> str:
+    p = agg["provenance"]
+    out = [
+        "== telemetry scoreboard",
+        f"provenance: git {str(p.get('git_sha', '?'))[:12]} "
+        f"jax {p.get('jax_version', '?')} device {p.get('device_kind', '?')} "
+        f"pid {p.get('process_index', '?')}",
+        "", "-- spans (p50 / p99 / total)"]
+    for name, s in agg["spans"].items():
+        out.append(f"  {name:32s} n={s['count']:<5d} "
+                   f"{_fmt(s['p50_s'] * 1e3, 'ms'):>10s} "
+                   f"{_fmt(s['p99_s'] * 1e3, 'ms'):>10s} "
+                   f"{_fmt(s['total_s'], 's'):>9s}")
+    out += ["", "-- conv1d efficiency (achieved fraction of roofline peak)"]
+    for cell, c in agg["conv_cells"].items():
+        out.append(f"  {cell:54s} n={c['count']:<4d} "
+                   f"{_fmt(c['p50_ms'], 'ms'):>9s} "
+                   f"eff={_fmt(c['efficiency_p50'])} "
+                   f"({_fmt(c['gflops_per_s_p50'])} GFLOP/s)")
+    t = agg["tuner"]
+    out += ["", f"-- tuner cache: hits {t['hits']} misses {t['misses']} "
+                f"legacy-upgrades {t['legacy_upgrades']} "
+                f"hit-rate {_fmt(t['hit_rate'])}"]
+    cm = agg["cost_model"]
+    out += [f"-- cost model: n={cm['n']} measured/predicted "
+            f"p50 {_fmt(cm['ratio_p50'])} "
+            f"|log2 err| p50 {_fmt(cm['abs_log2_err_p50'])} "
+            f"p90 {_fmt(cm['abs_log2_err_p90'])}"]
+    st = agg["steps"]
+    out += [f"-- train steps: n={st['count']} "
+            f"p50 {_fmt(st['p50_s'] * 1e3, 'ms')} "
+            f"p99 {_fmt(st['p99_s'] * 1e3, 'ms')}"]
+    for ph, s in st.get("phases", {}).items():
+        out.append(f"     phase {ph:10s} p50 {_fmt(s['p50_s'] * 1e3, 'ms')}")
+    sh = agg["shards"]
+    if sh["per_shard"]:
+        out.append("-- shards")
+        for shard, s in sh["per_shard"].items():
+            out.append(f"     shard {shard}: n={s['steps']} "
+                       f"p50 {_fmt(s['p50_s'] * 1e3, 'ms')} "
+                       f"verdicts {s['verdicts']}")
+        out.append(f"     stragglers: {sh['stragglers'] or 'none'}")
+    return "\n".join(out)
+
+
+def check(agg: dict[str, Any]) -> list[str]:
+    """The CI smoke gate: names of the required sections that are missing
+    from an instrumented training run's log (empty list = pass)."""
+    missing = []
+    if not any(c["count"] and c["efficiency_p50"] == c["efficiency_p50"]
+               for c in agg["conv_cells"].values()):
+        missing.append("conv_cells (no measured conv1d pass efficiency)")
+    if not agg["steps"]["count"]:
+        missing.append("steps (no train.step spans)")
+    if not agg["steps"].get("phases"):
+        missing.append("steps.phases (no train.phase.* breakdown)")
+    if not (agg["tuner"]["hits"] or agg["tuner"]["misses"]):
+        missing.append("tuner (no cache hit/miss counters)")
+    return missing
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="Aggregate a repro telemetry JSONL log into a "
+                    "scoreboard (text or JSON).")
+    ap.add_argument("log", help="telemetry JSONL path")
+    ap.add_argument("--json", action="store_true", help="emit JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless conv efficiency, step breakdown "
+                         "and tuner sections are all present (CI gate)")
+    args = ap.parse_args(argv)
+    events = read_events(args.log)
+    if not events:
+        print(f"{args.log}: empty log")
+        return 1
+    agg = aggregate(events)
+    print(json.dumps(agg, indent=1, default=str) if args.json
+          else render_text(agg))
+    if args.check:
+        missing = check(agg)
+        if missing:
+            print("\nSMOKE GATE FAILED — missing sections:")
+            for m in missing:
+                print(f"  * {m}")
+            return 1
+        print("\nsmoke gate OK")
+    return 0

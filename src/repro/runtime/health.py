@@ -47,6 +47,19 @@ class HealthMonitor:
                           self.ema_decay * self._loss_ema + (1 - self.ema_decay) * loss)
         return "ok"
 
+    def rollup(self) -> dict:
+        """JSON-safe summary for a ``train.health.rollup`` telemetry event:
+        the event log sliced by type, plus the current loss EWMA."""
+        kinds: dict[str, int] = {}
+        for _, what in self.events:
+            kinds[what.split(":")[0]] = kinds.get(what.split(":")[0], 0) + 1
+        return {
+            "events": len(self.events),
+            "by_kind": kinds,
+            "consecutive_skips": self._skips,
+            "loss_ema": self._loss_ema,
+        }
+
 
 class PreemptionGuard:
     """SIGTERM → set a flag the train loop polls; the loop then flushes a

@@ -57,3 +57,72 @@ class StragglerDetector:
     @property
     def healthy_step_time(self) -> float:
         return self._ema
+
+
+@dataclass
+class ShardStragglerMonitor:
+    """Fleet view over per-shard step times: one ``StragglerDetector`` per
+    data-parallel shard, fed either live by the launcher or offline from
+    telemetry gauges (``train.shard.step_time`` records emitted by
+    ``launch/train.py`` and consumed by ``repro.obs.report``).
+
+    A shard is *a straggler* once its detector has recommended REPLACE at
+    least once — the fleet controller uses ``stragglers()`` to pick which
+    hosts to rotate out of the next mesh epoch.
+    """
+
+    ema_decay: float = 0.9
+    threshold_std: float = 4.0
+    min_ratio: float = 1.5
+    trip: int = 3
+    warmup: int = 5
+    detectors: dict = field(default_factory=dict)
+    _replace: set = field(default_factory=set)
+
+    def _detector(self, shard: int) -> StragglerDetector:
+        det = self.detectors.get(shard)
+        if det is None:
+            det = self.detectors[shard] = StragglerDetector(
+                ema_decay=self.ema_decay, threshold_std=self.threshold_std,
+                min_ratio=self.min_ratio, trip=self.trip, warmup=self.warmup)
+        return det
+
+    def record(self, shard: int, step: int, dt: float) -> str:
+        """Feed one (shard, step, wall-time); returns that shard's verdict
+        ('ok' | 'slow' | 'replace')."""
+        verdict = self._detector(int(shard)).record(step, dt)
+        if verdict == "replace":
+            self._replace.add(int(shard))
+        return verdict
+
+    def feed_gauges(self, events) -> dict[int, str]:
+        """Drive detection from telemetry records (the offline path): every
+        ``train.shard.step_time`` gauge is replayed in (shard, step) order.
+        Returns the final verdict per shard."""
+        samples = []
+        for r in events:
+            if r.get("kind") == "gauge" and r.get("name") == "train.shard.step_time":
+                a = r.get("attrs", {})
+                samples.append((int(a.get("shard", r.get("pid", 0))),
+                                int(a.get("step", -1)), r["value"]))
+        last: dict[int, str] = {}
+        for shard, step, dt in sorted(samples):
+            last[shard] = self.record(shard, step, dt)
+        return last
+
+    def stragglers(self) -> set:
+        """Shards whose detector has recommended REPLACE."""
+        return set(self._replace)
+
+    def rollup(self) -> dict:
+        """JSON-safe summary for a ``train.straggler.rollup`` event."""
+        return {
+            "shards": len(self.detectors),
+            "stragglers": sorted(self._replace),
+            "flagged": {str(s): len(d.flagged_steps)
+                        for s, d in sorted(self.detectors.items())
+                        if d.flagged_steps},
+            "healthy_step_time": {
+                str(s): d.healthy_step_time
+                for s, d in sorted(self.detectors.items())},
+        }

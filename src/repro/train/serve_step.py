@@ -9,7 +9,26 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.models import get_model
+
+
+def with_request_spans(step_fn, name: str, **attrs):
+    """Wrap an (already jitted) serve/prefill step so every *host-level*
+    call is timed as a request-latency telemetry span (``block_until_ready``
+    wall time — what a client would observe).  The wrapper sits outside the
+    jitted function: nothing is added to the compiled program, and with
+    telemetry disabled the extra cost is one ``enabled()`` check."""
+
+    def wrapped(*a, **kw):
+        if not obs.enabled():
+            return step_fn(*a, **kw)
+        with obs.span(name, **attrs):
+            out = step_fn(*a, **kw)
+            jax.block_until_ready(out)
+        return out
+
+    return wrapped
 
 
 def make_serve_step(cfg, *, greedy: bool = True, absorb: bool = False):

@@ -44,6 +44,82 @@ def _mesh_dp(mesh) -> int:
     return dp_size(mesh)
 
 
+def _make_grad_fn(cfg, mesh=None):
+    """The step's gradient engine — ``value_and_grad(loss, has_aux=True)``
+    semantics, routed through the explicit shard_map data-parallel path
+    when the mesh has >1 data shard.  Shared by ``make_train_step`` and the
+    telemetry phase probes (``make_phase_probes``) so both time/run the
+    identical computation."""
+    if mesh is not None and _mesh_dp(mesh) > 1:
+        from repro.train.data_parallel import make_sharded_grad_fn
+        return make_sharded_grad_fn(cfg, mesh)
+    return jax.value_and_grad(make_loss_fn(cfg), has_aux=True)
+
+
+def make_phase_probes(cfg, *, mesh=None, lr: float = 1e-4,
+                      grad_clip: float = 1.0, weight_decay: float = 0.1):
+    """Build the per-phase step-time probes behind telemetry's
+    ``train.phase.*`` spans (DESIGN.md §14).
+
+    A jitted train step is one fused program — its phases cannot be timed
+    from inside without changing what is compiled.  Instead the probe jits
+    each *prefix* of the step separately and times them differentially
+    with the same harness the tuner uses (``tune.measure.median_time``):
+
+      forward    = t(loss only)
+      backward   = t(value_and_grad) − t(loss only)
+      optimizer  = t(adamw.update on the step's real gradient tree)
+      psum       = t(shard_map all-reduce of a grads-shaped tree over the
+                     mesh's data axes)           (only when dp > 1)
+
+    Returns ``probe(state, batch, iters=..., warmup=...) -> {phase: sec}``.
+    Costs a few extra compiles — the launcher runs it once, after warmup,
+    only when telemetry is enabled.
+    """
+    from repro.tune.measure import median_time
+
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = _make_grad_fn(cfg, mesh)
+    fwd_jit = jax.jit(lambda p, b: loss_fn(p, b)[0])
+    grad_jit = jax.jit(grad_fn)
+    opt_jit = jax.jit(functools.partial(
+        adamw.update, lr=lr, weight_decay=weight_decay,
+        grad_clip=grad_clip))
+
+    psum_jit = None
+    if mesh is not None and _mesh_dp(mesh) > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.launch.mesh import dp_axis_names
+        axes = dp_axis_names(mesh)
+
+        def _psum_tree(tree):
+            return jax.tree.map(lambda g: jax.lax.psum(g, axes), tree)
+
+        psum_jit = jax.jit(shard_map(
+            _psum_tree, mesh=mesh, in_specs=(P(),), out_specs=P(),
+            check_rep=False))
+
+    def probe(state, batch, *, iters: int = 3, warmup: int = 1):
+        t_fwd = median_time(fwd_jit, state.params, batch,
+                            iters=iters, warmup=warmup)
+        t_grad = median_time(grad_jit, state.params, batch,
+                             iters=iters, warmup=warmup)
+        (_, _), grads = grad_jit(state.params, batch)
+        jax.block_until_ready(grads)
+        t_opt = median_time(opt_jit, grads, state.opt, state.params,
+                            iters=iters, warmup=warmup)
+        phases = {"forward": t_fwd,
+                  "backward": max(0.0, t_grad - t_fwd),
+                  "optimizer": t_opt}
+        if psum_jit is not None:
+            phases["psum"] = median_time(psum_jit, grads,
+                                         iters=iters, warmup=warmup)
+        return phases
+
+    return probe
+
+
 def make_train_step(cfg, *, accum_steps: int = 1, peak_lr: float = 3e-4,
                     warmup_steps: int = 100, total_steps: int = 10_000,
                     grad_clip: float = 1.0, weight_decay: float = 0.1,
@@ -70,11 +146,7 @@ def make_train_step(cfg, *, accum_steps: int = 1, peak_lr: float = 3e-4,
     accumulation composes with either (each microbatch's grad is a
     shard_map call inside the scan)."""
     from repro.optim import compression
-    if mesh is not None and _mesh_dp(mesh) > 1:
-        from repro.train.data_parallel import make_sharded_grad_fn
-        grad_fn = make_sharded_grad_fn(cfg, mesh)
-    else:
-        grad_fn = jax.value_and_grad(make_loss_fn(cfg), has_aux=True)
+    grad_fn = _make_grad_fn(cfg, mesh)
 
     def train_step(state: TrainState, batch):
         if accum_steps > 1:

@@ -45,6 +45,8 @@ from typing import Any
 
 import jax
 
+from repro import obs as _obs
+
 from . import cache as _cache
 from . import cost as _cost
 from . import measure as _measure
@@ -125,20 +127,32 @@ def tune_problem(prob: ConvProblem, *, cache: TuneCache | None = None,
             f"no legal candidates for {prob.key(device_kind())} under "
             f"backends={backends}: check the backend names and whether a "
             f"pinned alg/nblk fits the VMEM budget for any tile")
-    ranked = _cost.rank(cands, prob, device_kind=device_kind())
-    if measure:
-        timed = [(_measure.time_candidate(c, prob, iters=iters,
-                                          warmup=warmup), c)
-                 for c in ranked[:top_k]]
-        sec, best = min(timed, key=lambda t: t[0])
-        cfg = TunedConfig(best.backend, best.wblk, best.kblk, "measured",
-                          sec, best.alg, best.nblk)
-    else:
-        best = ranked[0]
-        cfg = TunedConfig(best.backend, best.wblk, best.kblk, "cost",
-                          alg=best.alg, nblk=best.nblk)
-    cache.put(prob.key(device_kind()),
-              {**best.as_entry(), "source": cfg.source, "sec": cfg.sec})
+    key = prob.key(device_kind())
+    with _obs.span("tune.search", problem=key, candidates=len(cands),
+                   measure=measure, top_k=top_k):
+        ranked = _cost.rank(cands, prob, device_kind=device_kind())
+        if measure:
+            timed = []
+            for c in ranked[:top_k]:
+                sec = _measure.time_candidate(c, prob, iters=iters,
+                                              warmup=warmup)
+                timed.append((sec, c))
+                # the search trace: predicted vs measured per candidate —
+                # obs_report turns these into the cost-model error section
+                _obs.event("tune.search.candidate", problem=key,
+                           backend=c.backend, wblk=c.wblk, kblk=c.kblk,
+                           alg=c.alg, nblk=c.nblk,
+                           predicted_s=_cost.estimate_seconds(
+                               c, prob, device_kind=device_kind()),
+                           measured_s=sec)
+            sec, best = min(timed, key=lambda t: t[0])
+            cfg = TunedConfig(best.backend, best.wblk, best.kblk, "measured",
+                              sec, best.alg, best.nblk)
+        else:
+            best = ranked[0]
+            cfg = TunedConfig(best.backend, best.wblk, best.kblk, "cost",
+                              alg=best.alg, nblk=best.nblk)
+    cache.put(key, {**best.as_entry(), "source": cfg.source, "sec": cfg.sec})
     return cfg
 
 
@@ -194,13 +208,20 @@ def get_config_for(prob: ConvProblem, *, cache: TuneCache | None = None,
     """
     if cache is None:  # NOT `or`: an empty TuneCache is falsy (__len__)
         cache = get_default_cache()
-    hit = cache.get(prob.key(device_kind()))
+    key = prob.key(device_kind())
+    hit = cache.get(key)
     if hit is not None:
+        _obs.counter("tune.cache.hit", problem=key, pass_=prob.pass_)
+        if not prob.depthwise and "alg" not in hit:
+            # pre-§12 dense entry measured on the historical kernel: it
+            # reads back as (tap_loop, unfolded) rather than being re-tuned
+            _obs.counter("tune.cache.legacy_upgrade", problem=key)
         # legacy entries have no alg/nblk fields: they were measured on the
         # historical kernel, so they read back as (tap_loop, unfolded)
         return TunedConfig(hit["backend"], hit.get("wblk"), hit.get("kblk"),
                            "cache", hit.get("sec"), hit.get("alg"),
                            hit.get("nblk"))
+    _obs.counter("tune.cache.miss", problem=key, pass_=prob.pass_)
     if allow_measure is None:
         allow_measure = measurement_enabled()
     if allow_measure:

@@ -1,0 +1,368 @@
+"""Telemetry subsystem (repro.obs): schema contract, disabled-path no-op
+(no events, no retraces, sub-microsecond hooks), span nesting, kernel/tuner
+instrumentation accuracy, straggler detection from gauges, and the two
+consumers (scoreboard + Chrome-trace export)."""
+import json
+import timeit
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import obs, tune
+from repro.kernels import ops
+from repro.obs import report, trace_export
+from repro.runtime.health import HealthMonitor
+from repro.runtime.straggler import ShardStragglerMonitor
+
+
+@pytest.fixture(autouse=True)
+def _telemetry_off():
+    """Every test starts and ends with telemetry disabled (the bus is a
+    process-global singleton)."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+def _log(tmp_path, name="t.jsonl"):
+    return str(tmp_path / name)
+
+
+class TestSchema:
+    def test_round_trip_all_kinds(self, tmp_path):
+        path = obs.enable(_log(tmp_path))
+        with obs.span("a.span", note="x"):
+            pass
+        obs.counter("a.counter", 3)
+        obs.gauge("a.gauge", 1.5)
+        obs.event("a.event", k="v")
+        obs.disable()
+        recs = obs.read_events(path)  # strict=True validates every record
+        kinds = [r["kind"] for r in recs]
+        assert kinds == ["meta", "span", "counter", "gauge", "event"]
+        assert recs[0]["name"] == "provenance"
+        for key in ("git_sha", "jax_version", "device_kind", "process_index"):
+            assert key in recs[0]["attrs"]
+        assert recs[2]["value"] == 3 and recs[2]["total"] == 3
+        assert recs[3]["value"] == 1.5
+        assert recs[4]["attrs"] == {"k": "v"}
+
+    def test_validate_rejects_malformed(self):
+        ok = {"kind": "gauge", "name": "g", "ts": 0.0, "attrs": {},
+              "pid": 0, "value": 1.0}
+        assert obs.validate(dict(ok)) == ok
+        with pytest.raises(ValueError):
+            obs.validate({**ok, "kind": "bogus"})
+        with pytest.raises(ValueError):
+            obs.validate({k: v for k, v in ok.items() if k != "value"})
+        with pytest.raises(ValueError):
+            obs.validate({**ok, "ts": -1.0})
+        with pytest.raises(ValueError):
+            obs.validate({"kind": "span", "name": "s", "ts": 0.0,
+                          "attrs": {}, "pid": 0, "dur": -0.1, "id": 1,
+                          "parent": None})
+
+    def test_read_events_rejects_non_json(self, tmp_path):
+        p = tmp_path / "bad.jsonl"
+        p.write_text("not json\n")
+        with pytest.raises(ValueError, match="not JSON"):
+            obs.read_events(str(p))
+
+
+class TestDisabledPath:
+    def test_no_events_no_file(self, tmp_path):
+        assert not obs.enabled()
+        with obs.span("x", a=1) as s:
+            obs.counter("c")
+            obs.gauge("g", 1.0)
+            obs.event("e")
+            obs.span_event("se", 0.1)
+        assert s.dur is None  # the shared no-op span
+        assert obs.counters() == {}
+        assert obs.log_path() is None
+        assert list(tmp_path.iterdir()) == []
+
+    def test_disabled_hooks_under_one_microsecond(self):
+        n = 20_000
+        for hook in (lambda: obs.counter("c"),
+                     lambda: obs.gauge("g", 1.0),
+                     lambda: obs.span("s")):
+            # min-of-repeats: scheduler noise only ever inflates a sample
+            sec = min(timeit.repeat(hook, number=n, repeat=5)) / n
+            assert sec < 1e-6, f"disabled hook cost {sec * 1e9:.0f} ns"
+
+    def test_enable_disable_does_not_retrace(self, tmp_path):
+        x = jnp.ones((2, 8, 32))
+        w = jnp.ones((3, 4, 8))
+        f = jax.jit(lambda x: ops.conv1d(x, w, dilation=2, backend="xla"))
+        f(x)
+        n0 = f._cache_size()
+        obs.enable(_log(tmp_path))
+        f(x)
+        assert f._cache_size() == n0
+        obs.disable()
+        f(x)
+        assert f._cache_size() == n0
+
+    def test_identical_jaxpr_enabled_vs_disabled(self, tmp_path):
+        x = jnp.ones((2, 8, 32))
+        w = jnp.ones((3, 4, 8))
+
+        def f(x):
+            return ops.conv1d(x, w, dilation=2, backend="pallas")
+
+        off = str(jax.make_jaxpr(f)(x))
+        obs.enable(_log(tmp_path))
+        on = str(jax.make_jaxpr(f)(x))
+        assert on == off
+
+
+class TestSpans:
+    def test_nesting_parent_chain(self, tmp_path):
+        path = obs.enable(_log(tmp_path))
+        with obs.span("outer"):
+            with obs.span("mid"):
+                with obs.span("inner"):
+                    pass
+            with obs.span("mid2"):
+                pass
+        obs.disable()
+        spans = {r["name"]: r for r in obs.read_events(path)
+                 if r["kind"] == "span"}
+        assert spans["outer"]["parent"] is None
+        assert spans["mid"]["parent"] == spans["outer"]["id"]
+        assert spans["inner"]["parent"] == spans["mid"]["id"]
+        assert spans["mid2"]["parent"] == spans["outer"]["id"]
+        # children are contained in their parents
+        o, i = spans["outer"], spans["inner"]
+        assert o["ts"] <= i["ts"]
+        assert i["ts"] + i["dur"] <= o["ts"] + o["dur"] + 1e-6
+
+    def test_span_event_parented_under_open_span(self, tmp_path):
+        path = obs.enable(_log(tmp_path))
+        with obs.span("outer"):
+            obs.span_event("derived", 0.25, step=3)
+        obs.disable()
+        spans = {r["name"]: r for r in obs.read_events(path)
+                 if r["kind"] == "span"}
+        assert spans["derived"]["parent"] == spans["outer"]["id"]
+        assert spans["derived"]["dur"] == 0.25
+
+    def test_close_attrs_sees_duration(self, tmp_path):
+        path = obs.enable(_log(tmp_path))
+        with obs.span("s", close_attrs=lambda dur: {"twice": 2 * dur}):
+            pass
+        obs.disable()
+        [rec] = [r for r in obs.read_events(path) if r["kind"] == "span"]
+        assert rec["attrs"]["twice"] == pytest.approx(2 * rec["dur"])
+
+    def test_reenable_same_path_appends(self, tmp_path):
+        path = obs.enable(_log(tmp_path))
+        obs.event("one")
+        assert obs.enable(path) == path  # idempotent
+        obs.event("two")
+        obs.disable()
+        names = [r["name"] for r in obs.read_events(path)]
+        assert names == ["provenance", "one", "two"]
+
+
+class TestKernelInstrumentation:
+    def test_eager_conv_passes_get_measured_spans(self, tmp_path):
+        path = obs.enable(_log(tmp_path))
+        x = jnp.ones((2, 8, 64))
+        w = jnp.ones((3, 4, 8))
+        ops.conv1d(x, w, dilation=2, backend="pallas")
+        y, pull = jax.vjp(
+            lambda w: ops.conv1d(x, w, dilation=2, backend="pallas"), w)
+        pull(jnp.ones_like(y))
+        obs.disable()
+        spans = {r["name"]: r for r in obs.read_events(path)
+                 if r["kind"] == "span"}
+        assert {"conv1d.fwd", "conv1d.bwd_data",
+                "conv1d.bwd_weight"} <= set(spans)
+        fwd = spans["conv1d.fwd"]["attrs"]
+        assert fwd["backend"] == "pallas" and not fwd["depthwise"]
+        assert (fwd["N"], fwd["C"], fwd["K"], fwd["S"]) == (2, 8, 4, 3)
+        # measured wall time -> roofline attribution on every pass
+        for name in ("conv1d.fwd", "conv1d.bwd_data", "conv1d.bwd_weight"):
+            a = spans[name]["attrs"]
+            assert a["gflops_per_s"] > 0
+            assert 0 < a["efficiency"] < 1
+
+    def test_traced_conv_logs_trace_event_only(self, tmp_path):
+        path = obs.enable(_log(tmp_path))
+        x = jnp.ones((2, 8, 64))
+        w = jnp.ones((3, 4, 8))
+        jax.jit(lambda x: ops.conv1d(x, w, dilation=2, backend="pallas"))(x)
+        obs.disable()
+        recs = obs.read_events(path)
+        assert [r["name"] for r in recs if r["kind"] == "event"] \
+            == ["conv1d.fwd.trace"]
+        assert not [r for r in recs if r["kind"] == "span"]
+
+    def test_depthwise_spans(self, tmp_path):
+        path = obs.enable(_log(tmp_path))
+        x = jnp.ones((2, 16, 64))
+        w = jnp.ones((4, 16))
+        y, pull = jax.vjp(
+            lambda w: ops.depthwise_conv1d(x, w, backend="pallas"), w)
+        pull(jnp.ones_like(y))
+        obs.disable()
+        spans = [r for r in obs.read_events(path) if r["kind"] == "span"]
+        assert {s["name"] for s in spans} == {"conv1d.bwd_data",
+                                              "conv1d.bwd_weight"}
+        assert all(s["attrs"]["depthwise"] for s in spans)
+
+
+class TestTunerInstrumentation:
+    def test_hit_miss_counters_against_prepopulated_cache(self, tmp_path):
+        cache = tune.TuneCache(str(tmp_path / "cache.json"))
+        shape = dict(N=2, C=8, K=8, S=3, dilation=2, Q=128, dtype="float32")
+        tune.tune(**shape, cache=cache, measure=False)  # pre-populate
+        path = obs.enable(_log(tmp_path))
+        tune.get_config(**shape, cache=cache)                    # hit
+        tune.get_config(**shape, cache=cache)                    # hit
+        tune.get_config(**{**shape, "Q": 256}, cache=cache)      # miss
+        obs.disable()
+        totals = {r["name"]: r["total"]
+                  for r in obs.read_events(path) if r["kind"] == "counter"}
+        assert totals["tune.cache.hit"] == 2
+        assert totals["tune.cache.miss"] == 1
+        assert "tune.cache.legacy_upgrade" not in totals
+
+    def test_legacy_entry_counts_upgrade(self, tmp_path):
+        cache = tune.TuneCache(str(tmp_path / "cache.json"))
+        prob = tune.ConvProblem(N=2, C=8, K=8, S=3, dilation=2, Q=128,
+                                dtype="float32", padding="VALID",
+                                depthwise=False, epilogue="none",
+                                pass_="fwd")
+        # a pre-§12 entry: no alg/nblk fields
+        cache.put(prob.key(tune.device_kind()),
+                  {"backend": "xla", "wblk": 64, "kblk": None})
+        path = obs.enable(_log(tmp_path))
+        cfg = tune.get_config_for(prob, cache=cache)
+        obs.disable()
+        assert cfg.source == "cache" and cfg.alg is None
+        totals = {r["name"]: r["total"]
+                  for r in obs.read_events(path) if r["kind"] == "counter"}
+        assert totals["tune.cache.legacy_upgrade"] == 1
+
+    def test_search_traces_predicted_vs_measured(self, tmp_path):
+        cache = tune.TuneCache(str(tmp_path / "cache.json"))
+        path = obs.enable(_log(tmp_path))
+        tune.tune(N=2, C=8, K=8, S=3, dilation=2, Q=128, dtype="float32",
+                  cache=cache, measure=True, top_k=2, iters=2, warmup=1)
+        obs.disable()
+        recs = obs.read_events(path)
+        cands = [r for r in recs if r["name"] == "tune.search.candidate"]
+        assert len(cands) == 2
+        for c in cands:
+            assert c["attrs"]["predicted_s"] > 0
+            assert c["attrs"]["measured_s"] > 0
+        [search] = [r for r in recs
+                    if r["kind"] == "span" and r["name"] == "tune.search"]
+        assert search["attrs"]["candidates"] >= 2
+
+
+class TestStragglerFromGauges:
+    @staticmethod
+    def _gauge(shard, step, dt):
+        return {"kind": "gauge", "name": "train.shard.step_time",
+                "ts": float(step), "pid": 0, "value": dt,
+                "attrs": {"shard": shard, "step": step}}
+
+    def test_straggling_shard_detected(self):
+        events = []
+        for step in range(16):
+            events.append(self._gauge(0, step, 0.1))
+            # shard 1 degrades persistently after step 12
+            events.append(self._gauge(1, step, 1.0 if step >= 12 else 0.1))
+        mon = ShardStragglerMonitor(trip=3)
+        last = mon.feed_gauges(events)
+        assert last[0] == "ok"
+        assert last[1] == "replace"
+        assert mon.stragglers() == {1}
+        roll = mon.rollup()
+        assert roll["shards"] == 2 and roll["stragglers"] == [1]
+        # the healthy EWMA must not absorb the outliers
+        assert mon.detectors[1].healthy_step_time < 0.2
+
+    def test_report_shards_section(self, tmp_path):
+        path = obs.enable(_log(tmp_path))
+        for step in range(16):
+            obs.gauge("train.shard.step_time", 0.1, shard=0, step=step)
+            obs.gauge("train.shard.step_time",
+                      1.0 if step >= 12 else 0.1, shard=1, step=step)
+        obs.disable()
+        agg = report.aggregate_path(path)
+        assert agg["shards"]["stragglers"] == [1]
+        assert agg["shards"]["per_shard"]["0"]["verdicts"] == {"ok": 16}
+
+    def test_health_rollup(self):
+        h = HealthMonitor()
+        h.record(0, 1.0, skipped=False)
+        h.record(1, 1.0, skipped=True)
+        roll = h.rollup()
+        assert roll["events"] == 1 and roll["by_kind"] == {"skip": 1}
+        assert roll["loss_ema"] == pytest.approx(1.0)
+
+
+class TestConsumers:
+    def _write_full_log(self, tmp_path):
+        path = obs.enable(_log(tmp_path))
+        x = jnp.ones((2, 8, 64))
+        w = jnp.ones((3, 4, 8))
+        y, pull = jax.vjp(
+            lambda w: ops.conv1d(x, w, dilation=2, backend="pallas"), w)
+        pull(jnp.ones_like(y))
+        obs.counter("tune.cache.hit")
+        obs.span_event("train.step", 0.02, step=0)
+        obs.span_event("train.phase.forward", 0.005, step=0)
+        obs.span_event("train.phase.backward", 0.012, step=0)
+        obs.gauge("train.shard.step_time", 0.02, shard=0, step=0)
+        obs.disable()
+        return path
+
+    def test_report_sections_and_check(self, tmp_path):
+        agg = report.aggregate_path(self._write_full_log(tmp_path))
+        assert report.check(agg) == []
+        assert agg["steps"]["count"] == 1
+        assert agg["steps"]["phases"]["forward"]["p50_s"] == 0.005
+        assert agg["tuner"]["hits"] == 1
+        [cell] = [k for k in agg["conv_cells"] if k.endswith("|bwd_weight")]
+        assert agg["conv_cells"][cell]["efficiency_p50"] > 0
+        text = report.render_text(agg)
+        assert "train.step" in text and "tuner cache" in text
+
+    def test_check_flags_missing_sections(self, tmp_path):
+        path = obs.enable(_log(tmp_path))
+        obs.event("nothing.useful")
+        obs.disable()
+        missing = report.check(report.aggregate_path(path))
+        assert len(missing) == 4  # conv, steps, phases, tuner all absent
+
+    def test_report_cli(self, tmp_path, capsys):
+        path = self._write_full_log(tmp_path)
+        assert report.main([path, "--check"]) == 0
+        assert "smoke gate OK" in capsys.readouterr().out
+        assert report.main([path, "--json"]) == 0
+        agg = json.loads(capsys.readouterr().out)
+        assert agg["tuner"]["hits"] == 1
+
+    def test_trace_export(self, tmp_path):
+        path = self._write_full_log(tmp_path)
+        out = str(tmp_path / "trace.json")
+        n = trace_export.export(path, out)
+        with open(out) as f:
+            trace = json.load(f)
+        evs = trace["traceEvents"]
+        assert len(evs) == n > 0
+        assert trace["metadata"]["provenance"]["jax_version"]
+        complete = [e for e in evs if e["ph"] == "X"]
+        assert {"conv1d.bwd_data", "train.step"} <= \
+            {e["name"] for e in complete}
+        for e in complete:
+            assert e["dur"] >= 0 and e["ts"] >= 0
+        assert any(e["ph"] == "C" for e in evs)      # counter track
+        assert any(e["ph"] == "M" for e in evs)      # process metadata
