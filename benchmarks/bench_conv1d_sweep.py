@@ -31,6 +31,18 @@ of ``tap_loop`` / ``tap_packed`` is tuned per pass under its
 backend can't shadow the kernel race), and the rows report the measured
 per-pass seconds of each formulation's best config.
 
+``--pipe`` (with ``--grad``) adds two rows per cell racing the pipelined
+kernels against the synchronous ones (DESIGN.md §15): each of
+``pipe:0`` / ``pipe:2`` resolves its per-pass configs under the
+``|pipe:``-constrained problem keys (pre-populate with ``scripts/tune.py
+--pipe``) and is executed end to end with every pass pinned, so the
+``pipe_vs_sync`` column is a measured speedup and a telemetry log of the
+run records the pipelined dispatches (the ``obs_report
+--check-pipelining`` CI gate reads exactly those).  On this container
+the pipelined arm runs the interpret-mode synchronous fallback — the
+measured race is honest about that; the TPU win is the cost model's and
+the overlap column's story.
+
 Every row carries a paper-style ``efficiency`` column (achieved FLOP/s ÷
 the device's roofline peak, via ``repro.roofline``) — wins are reported
 the way the paper reports them, not just raw ms.
@@ -53,7 +65,7 @@ from benchmarks.common import bench_entry, conv1d_flops, efficiency, \
 from repro import tune
 from repro.kernels import ops as kops
 from repro.tune.presets import (  # single source of truth with scripts/tune.py
-    FIGSETS, N, Q_SET, Q_SET_FULL, S_SET, S_SET_FULL, SMOKE)
+    FIGSETS, N, Q_SET, Q_SET_FULL, S_SET, S_SET_FULL, SMOKE, SMOKE_PIPE)
 
 
 def _fwd(backend, w, dilation):
@@ -128,15 +140,22 @@ def run(full: bool = False, iters: int = 3, tuned: bool = False,
     return rows
 
 
-def _grad_cells(full: bool, smoke: bool):
+def _grad_cells(full: bool, smoke: bool, pipe: bool = False):
     """(fig, dtype_name, batch, C, K, d, S, Q) cells for the grad sweep.
     Smoke runs the tiny ``presets.SMOKE`` instance — the *same* cell
     ``scripts/tune.py --smoke`` pre-populates (all three passes), so a CI
-    run against a shared cache demonstrates per-pass cache resolution."""
+    run against a shared cache demonstrates per-pass cache resolution.
+    With ``pipe`` the smoke list adds the wider ``SMOKE_PIPE`` cell: the
+    pipelining race needs at least two width tiles in flight."""
     if smoke:
         p = SMOKE
-        return [("smoke", p["dtype"], p["N"], p["C"], p["K"], p["dilation"],
-                 p["S"], p["Q"])]
+        cells = [("smoke", p["dtype"], p["N"], p["C"], p["K"], p["dilation"],
+                  p["S"], p["Q"])]
+        if pipe:
+            q = SMOKE_PIPE
+            cells.append(("smoke-pipe", q["dtype"], q["N"], q["C"], q["K"],
+                          q["dilation"], q["S"], q["Q"]))
+        return cells
     qs = Q_SET_FULL if full else Q_SET
     ss = S_SET_FULL if full else S_SET
     return [(fig, dtype_name, N, C, K, d, S, Q)
@@ -145,10 +164,10 @@ def _grad_cells(full: bool, smoke: bool):
 
 
 def _alg_pass_config(prob, iters: int):
-    """Measured best config of one ``|alg:``-constrained pass: cache hit
-    with a measured time -> reuse; miss (or a cost-only entry with no
-    ``sec``) -> Pallas-only measured search (the library backend is
-    excluded so it cannot shadow the formulation race)."""
+    """Measured best config of one constrained pass (``|alg:`` or
+    ``|pipe:`` key): cache hit with a measured time -> reuse; miss (or a
+    cost-only entry with no ``sec``) -> Pallas-only measured search (the
+    library backend is excluded so it cannot shadow the kernel race)."""
     cfg = tune.get_config_for(prob, allow_measure=False)
     if cfg.source != "cache" or cfg.sec is None:
         cfg = tune.tune_problem(prob, backends=("pallas",), top_k=3,
@@ -156,13 +175,50 @@ def _alg_pass_config(prob, iters: int):
     return cfg
 
 
+def _pinned_fwd(cfg, w, dilation):
+    """Jitted forward with one race arm's resolved config pinned."""
+    @jax.jit
+    def f(x):
+        return kops.conv1d(x, w, dilation=dilation, padding="SAME",
+                           backend="pallas", wblk=cfg.wblk, kblk=cfg.kblk,
+                           alg=cfg.alg, nblk=cfg.nblk, pipe=cfg.pipe)
+    return f
+
+
+def _pinned_fwd_bwd(cfgs, dilation):
+    """Jitted fwd+bwd with every pass pinned to its race-resolved config
+    (forward tiles inline, both backward passes as 6-tuple cfg overrides
+    — the same pinning ``tune.measure`` times candidates with)."""
+    fwd = cfgs["fwd"]
+    tup = lambda c: ("pallas", c.wblk, c.kblk, c.alg, c.nblk, c.pipe)
+
+    @jax.jit
+    def f(x, w):
+        def loss(x, w):
+            return kops.conv1d(
+                x, w, dilation=dilation, padding="SAME", backend="pallas",
+                wblk=fwd.wblk, kblk=fwd.kblk, alg=fwd.alg, nblk=fwd.nblk,
+                pipe=fwd.pipe, bwd_data_cfg=tup(cfgs["bwd_data"]),
+                bwd_weight_cfg=tup(cfgs["bwd_weight"]),
+            ).astype(jnp.float32).sum()
+        return jax.grad(loss, argnums=(0, 1))(x, w)
+    return f
+
+
 def run_grad(full: bool = False, iters: int = 3, smoke: bool = False,
-             algs: bool = False):
+             algs: bool = False, pipe: bool = False):
     """--grad: fwd and fwd+bwd wall clock, default-vs-auto, with the
     per-pass resolution source of each cell's plan; ``algs`` adds the
-    per-formulation (tap_loop vs tap_packed) measured race."""
+    per-formulation (tap_loop vs tap_packed) measured race; ``pipe`` adds
+    the pipelined-vs-synchronous race (DESIGN.md §15): each arm resolves
+    its ``|pipe:``-constrained per-pass configs (cache or Pallas-only
+    search) and is then *executed* end to end with every pass pinned —
+    so a telemetry log of this run records the pipelined dispatches and
+    their model-derived overlap fractions (``obs_report
+    --check-pipelining`` is CI's gate on exactly that)."""
     rows = []
-    for fig, dtype_name, batch, C, K, d, S, Q in _grad_cells(full, smoke):
+    for fig, dtype_name, batch, C, K, d, S, Q in _grad_cells(full, smoke,
+                                                             pipe):
         dtype = jnp.dtype(dtype_name)
         key = jax.random.key(0)
         w = (jax.random.normal(key, (S, K, C), jnp.float32) * 0.05).astype(dtype)
@@ -186,6 +242,33 @@ def run_grad(full: bool = False, iters: int = 3, smoke: bool = False,
                 src_bwd_weight=plan["bwd_weight"].source))
         for r in rows[-2:]:
             r["tuned_vs_default"] = res["xla"] / res["auto"]
+        if pipe:
+            race = {}
+            for pv in (0, 2):
+                base = tune.ConvProblem(N=batch, C=C, K=K, S=S, dilation=d,
+                                        Q=Q, dtype=str(dtype),
+                                        padding="SAME", pipe=pv)
+                try:
+                    cfg = {p: _alg_pass_config(base.with_pass(p), iters)
+                           for p in tune.PASSES}
+                except ValueError:
+                    continue  # e.g. a single-tile Q: nothing to pipeline
+                tf = time_fn(_pinned_fwd(cfg["fwd"], w, d), x,
+                             iters=iters, warmup=1)
+                tb = time_fn(_pinned_fwd_bwd(cfg, d), x, w,
+                             iters=iters, warmup=1)
+                race[pv] = tb
+                rows.append(dict(
+                    fig=fig, mode=f"pipe-{pv}", dtype=dtype_name, N=batch,
+                    C=C, K=K, S=S, d=d, Q=Q, sec_fwd=tf, sec_fwdbwd=tb,
+                    gflops=3 * flops / tb / 1e9,
+                    efficiency=efficiency(3 * flops, tb),
+                    src_fwd=f"wblk{cfg['fwd'].wblk}/pipe{cfg['fwd'].pipe or 0}",
+                    src_bwd_data=f"wblk{cfg['bwd_data'].wblk}/pipe{cfg['bwd_data'].pipe or 0}",
+                    src_bwd_weight=f"wblk{cfg['bwd_weight'].wblk}/pipe{cfg['bwd_weight'].pipe or 0}"))
+            if len(race) == 2:  # sync fwd+bwd time / pipelined: >1 = faster
+                for r in rows[-2:]:
+                    r["pipe_vs_sync"] = race[0] / race[2]
         if not algs:
             continue
         for alg in ("tap_loop", "tap_packed"):
@@ -209,7 +292,7 @@ def run_grad(full: bool = False, iters: int = 3, smoke: bool = False,
 
 GRAD_COLS = ["fig", "mode", "dtype", "N", "C", "K", "S", "d", "Q",
              "sec_fwd", "sec_fwdbwd", "sec_bwd_data", "sec_bwd_weight",
-             "gflops", "efficiency", "tuned_vs_default",
+             "gflops", "efficiency", "tuned_vs_default", "pipe_vs_sync",
              "src_fwd", "src_bwd_data", "src_bwd_weight"]
 
 
@@ -231,11 +314,11 @@ def _json_entries(rows):
 
 
 def main(full: bool = False, tuned: bool = False, smoke: bool = False,
-         grad: bool = False, algs: bool = False,
+         grad: bool = False, algs: bool = False, pipe: bool = False,
          json_path: str = "BENCH_conv1d.json"):
     if grad:
         rows = run_grad(full=full, smoke=smoke, iters=1 if smoke else 3,
-                        algs=algs)
+                        algs=algs, pipe=pipe)
         cols = GRAD_COLS
     else:
         rows = run(full=full, tuned=tuned, smoke=smoke,
@@ -256,4 +339,4 @@ if __name__ == "__main__":
     import sys
     main(full="--full" in sys.argv, tuned="--tuned" in sys.argv,
          smoke="--smoke" in sys.argv, grad="--grad" in sys.argv,
-         algs="--algs" in sys.argv)
+         algs="--algs" in sys.argv, pipe="--pipe" in sys.argv)

@@ -5,6 +5,7 @@ all three passes (fwd, bwd_data, bwd_weight) per shape.
     PYTHONPATH=src python scripts/tune.py --figset all --measure   # wall-clock search
     PYTHONPATH=src python scripts/tune.py --figset fig5 --full --cache /tmp/tc.json
     PYTHONPATH=src python scripts/tune.py --smoke                  # CI: tiny shape, 3 passes
+    PYTHONPATH=src python scripts/tune.py --smoke --measure --pipe # + pipe-vs-sync race keys
     PYTHONPATH=src python scripts/tune.py --figset atacworks --dp 4  # per-shard (local-N) cells
 
 Writes one cache entry per (S, Q, pass) cell of the selected figure(s) —
@@ -25,8 +26,8 @@ import argparse
 import jax.numpy as jnp
 
 from repro import tune
-from repro.tune.presets import (FIGSETS, atacworks_shapes, figset_shapes,
-                                smoke_shapes)
+from repro.tune.presets import (FIGSETS, SMOKE_PIPE, atacworks_shapes,
+                                figset_shapes, smoke_shapes)
 from repro.tune.problem import PASSES
 
 
@@ -49,8 +50,19 @@ def main(argv=None):
                          "'pallas' to rank kernel formulations "
                          "(tap_loop/tap_packed) head-to-head without the "
                          "library entry (default: all)")
+    ap.add_argument("--pipe", action="store_true",
+                    help="additionally pre-populate the pipelined-vs-"
+                         "synchronous race per cell (DESIGN.md §15): each "
+                         "pass is tuned again under its |pipe:0 and "
+                         "|pipe:2 constrained keys, Pallas-only search "
+                         "(mirroring the --algs formulation race in the "
+                         "sweep benchmark) so the library backend cannot "
+                         "shadow the kernel race; bench_conv1d_sweep "
+                         "--pipe then resolves both arms from the cache")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI smoke: one tiny shape, all three passes")
+                    help="CI smoke: one tiny shape, all three passes "
+                         "(with --pipe, the race runs the wider "
+                         "SMOKE_PIPE cell — the Q=128 cell is one tile)")
     ap.add_argument("--dp", type=int, default=1,
                     help="pre-tune the PER-SHARD view of each cell under "
                          "this much batch data parallelism: cache keys use "
@@ -78,12 +90,16 @@ def main(argv=None):
     cache = tune.TuneCache(args.cache) if args.cache else tune.get_default_cache()
     if args.smoke:
         work = [("smoke", prob) for prob in smoke_shapes()]
+        # the race needs >= 2 width tiles in flight; Q=128 is one tile
+        race_work = [("smoke", dict(SMOKE_PIPE))]
     elif args.figset == "atacworks":
         work = [("atacworks", prob) for prob in atacworks_shapes()]
+        race_work = list(work)
     else:
         names = list(FIGSETS) if args.figset == "all" else [args.figset]
         work = [(name, prob) for name in names
                 for prob in figset_shapes(name, full=args.full)]
+        race_work = list(work)
     n = 0
     for name, prob in work:
         prob = dict(prob)
@@ -104,6 +120,33 @@ def main(argv=None):
                   f"{pass_:>10}: {cfg.backend} wblk={cfg.wblk} "
                   f"kblk={cfg.kblk} alg={cfg.alg or 'tap_loop'} "
                   f"nblk={cfg.nblk or 1} [{cfg.source}]{sec}")
+    if args.pipe:
+        for name, prob in race_work:
+            prob = dict(prob)
+            dtype = jnp.dtype(prob.pop("dtype"))
+            if prob["N"] % args.dp:
+                continue  # already reported by the free loop above
+            for pass_ in passes:
+                for pv in (0, 2):
+                    try:
+                        cfg = tune.tune(**prob, dtype=dtype, pass_=pass_,
+                                        cache=cache, shards=args.dp,
+                                        measure=args.measure,
+                                        iters=args.iters, top_k=args.top_k,
+                                        backends=("pallas",), pipe=pv)
+                    except ValueError:
+                        # pinned pipe depth has no legal candidate here
+                        # (e.g. a single-tile Q) — nothing to race
+                        print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} "
+                              f"{pass_:>10} pipe:{pv}: skipped "
+                              "(no legal pipelined tile)")
+                        continue
+                    n += 1
+                    sec = f" {cfg.sec:.3e}s" if cfg.sec is not None else ""
+                    print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype} "
+                          f"{pass_:>10} pipe:{pv}: wblk={cfg.wblk} "
+                          f"kblk={cfg.kblk} alg={cfg.alg or 'tap_loop'} "
+                          f"nblk={cfg.nblk or 1} [{cfg.source}]{sec}")
     print(f"\n{n} entries -> {cache.path} ({len(cache)} total)")
 
 

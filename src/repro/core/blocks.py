@@ -50,13 +50,16 @@ def _fused_default() -> bool:
     return os.environ.get("REPRO_FUSED_EPILOGUE", "1") != "0"
 
 
-def forward(params, cfg, x, *, backend=None, fused=None, grad_reduce_axes=None):
+def forward(params, cfg, x, *, backend=None, fused=None, grad_reduce_axes=None,
+            grad_reduce_chunks=None):
     """x: (B, W) noisy coverage track -> (signal (B, W), peak_logits (B, W)).
 
     ``grad_reduce_axes``: mesh axes the batch shards over when this runs
     inside a data-parallel ``shard_map`` body — every layer's weight/bias
     gradient then all-reduces over them, fused per layer after its
-    bwd-weight pass (DESIGN.md §13)."""
+    bwd-weight pass (DESIGN.md §13).  ``grad_reduce_chunks`` > 1 further
+    chunks each layer's psum across its bwd-weight width partials
+    (DESIGN.md §15)."""
     if fused is None:
         fused = _fused_default()
     if not fused:
@@ -64,22 +67,28 @@ def forward(params, cfg, x, *, backend=None, fused=None, grad_reduce_axes=None):
                                grad_reduce_axes=grad_reduce_axes)
     d = cfg.conv_dilation
     gra = grad_reduce_axes
+    grc = grad_reduce_chunks
     h = x[:, None, :]  # (B, 1, W)
     h = DilatedConv1D.apply(params["stem"], h, dilation=d, backend=backend,
-                            activation="relu", grad_reduce_axes=gra)
+                            activation="relu", grad_reduce_axes=gra,
+                            grad_reduce_chunks=grc)
     for blk in params["res"]:
         r = DilatedConv1D.apply(blk["conv1"], h, dilation=d, backend=backend,
-                                activation="relu", grad_reduce_axes=gra)
+                                activation="relu", grad_reduce_axes=gra,
+                                grad_reduce_chunks=grc)
         h = DilatedConv1D.apply(blk["conv2"], r, dilation=d, backend=backend,
                                 activation="relu", residual=h,
-                                grad_reduce_axes=gra)
+                                grad_reduce_axes=gra,
+                                grad_reduce_chunks=grc)
     signal = DilatedConv1D.apply(params["head_signal"], h, dilation=d,
                                  backend=backend, activation="relu",
                                  out_dtype=jnp.float32,
-                                 grad_reduce_axes=gra)[:, 0, :]
+                                 grad_reduce_axes=gra,
+                                 grad_reduce_chunks=grc)[:, 0, :]
     peak = DilatedConv1D.apply(params["head_peak"], h, dilation=d,
                                backend=backend, out_dtype=jnp.float32,
-                               grad_reduce_axes=gra)[:, 0, :]
+                               grad_reduce_axes=gra,
+                               grad_reduce_chunks=grc)[:, 0, :]
     return signal, peak
 
 
@@ -114,11 +123,12 @@ def forward_unfused(params, cfg, x, *, backend=None, grad_reduce_axes=None):
 
 
 def loss_fn(params, cfg, batch, *, backend=None, peak_weight: float = 1.0,
-            fused=None, grad_reduce_axes=None):
+            fused=None, grad_reduce_axes=None, grad_reduce_chunks=None):
     """AtacWorks loss: MSE(denoised signal) + BCE(peak calls)."""
     signal, peak_logits = forward(params, cfg, batch["noisy"], backend=backend,
                                   fused=fused,
-                                  grad_reduce_axes=grad_reduce_axes)
+                                  grad_reduce_axes=grad_reduce_axes,
+                                  grad_reduce_chunks=grad_reduce_chunks)
     mse = jnp.mean((signal - batch["clean"].astype(jnp.float32)) ** 2)
     labels = batch["peaks"].astype(jnp.float32)
     bce = jnp.mean(

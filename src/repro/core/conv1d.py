@@ -39,7 +39,8 @@ class DilatedConv1D:
               wblk: int | None = None, kblk: int | None = None,
               activation: str | None = None,
               residual: jax.Array | None = None,
-              out_dtype=None, grad_reduce_axes=None) -> jax.Array:
+              out_dtype=None, grad_reduce_axes=None,
+              grad_reduce_chunks=None) -> jax.Array:
         """x: (N, C_in, W) -> (N, C_out, Q), computing
         ``act(conv(x) + bias + residual)`` in one fused kernel call.
 
@@ -57,6 +58,9 @@ class DilatedConv1D:
         when the layer runs (and is differentiated) inside a
         ``shard_map`` body — the weight/bias gradients then all-reduce
         over those axes, fused after the bwd-weight pass (DESIGN.md §13).
+        ``grad_reduce_chunks`` > 1 chunks that all-reduce across the
+        bwd-weight pass's width partials so collective time overlaps the
+        remaining contraction (DESIGN.md §15).
 
         Example::
 
@@ -74,4 +78,5 @@ class DilatedConv1D:
                            dilation=dilation, padding=padding,
                            backend=backend, wblk=wblk, kblk=kblk,
                            out_dtype=out_dtype,
-                           grad_reduce_axes=grad_reduce_axes)
+                           grad_reduce_axes=grad_reduce_axes,
+                           grad_reduce_chunks=grad_reduce_chunks)

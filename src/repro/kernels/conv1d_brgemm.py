@@ -42,6 +42,17 @@ block staging over nblk samples.  ``repro.tune`` searches both axes per
 pass; the defaults (``tap_loop``, ``nblk=1``) reproduce the historical
 kernel exactly.
 
+Every kernel body also exists in a **software-pipelined** variant
+(``pipe >= 2``, DESIGN.md §15): the dilated footprint (and the cotangent
+tile, for bwd-weight) rotates through a ``pipe``-deep VMEM scratch via
+``pltpu.make_async_copy`` so the next tile's DMA is in flight while the
+current tile contracts, and the forward's fused-epilogue store streams
+out through a 2-slot buffer behind the next matmul.  In interpret mode
+the staging falls back to synchronous copies through the same buffers
+(``REPRO_PIPE_FORCE_ASYNC=1`` forces the real schedule for tests); the
+pipelined and synchronous bodies are bit-identical — same tap order,
+same fp32 accumulation.
+
 All kernels accept fp32 or bf16 inputs and accumulate in fp32
 (``preferred_element_type``), matching the AVX-512-BF16 contract.
 
@@ -68,6 +79,7 @@ Shape contract (callers — see ops.py — arrange the padding):
 from __future__ import annotations
 
 import functools
+import os
 from typing import Sequence
 
 import jax
@@ -82,6 +94,99 @@ except ImportError:  # pragma: no cover
     pltpu = None
 
 ALGS = ("tap_loop", "tap_packed")   # dense contraction formulations (§12)
+
+# Force the real async-DMA schedule even in interpret mode (the schedule-
+# equivalence tests use this; by default interpret runs the synchronous
+# staging fallback — the interpreter completes "async" copies inline, so
+# the lookahead schedule is pure bookkeeping there, DESIGN.md §15).
+ENV_FORCE_ASYNC = "REPRO_PIPE_FORCE_ASYNC"
+
+
+def canon_pipe(pipe) -> int:
+    """Normalize the pipeline-depth knob: None/0/1 -> 0 (the synchronous
+    kernel — a 1-deep "pipeline" has no lookahead), >= 2 -> that depth."""
+    p = int(pipe or 0)
+    return p if p >= 2 else 0
+
+
+def _sync_staging(interpret: bool) -> bool:
+    return interpret and os.environ.get(ENV_FORCE_ASYNC) != "1"
+
+
+class _MultiCopy:
+    """Start/wait a group of async copies as one unit (the bwd-weight
+    kernels stage the footprint and the cotangent tile per grid step)."""
+
+    def __init__(self, copies):
+        self._copies = copies
+
+    def start(self):
+        for c in self._copies:
+            c.start()
+
+    def wait(self):
+        for c in self._copies:
+            c.wait()
+
+
+def _pipe_schedule(step, total: int, depth: int, make_copy, sync: bool):
+    """Rotating-buffer staging schedule over a sequential grid axis
+    (DESIGN.md §15).  Tile ``t`` lives in slot ``t % depth``.
+
+    Async (compiled TPU, or interpret under ``REPRO_PIPE_FORCE_ASYNC=1``):
+    the first step starts tiles ``0..depth-2`` (warmup); every step starts
+    tile ``step+depth-1`` — the slot it overwrites was consumed at step
+    ``step-1`` — then waits tile ``step`` before computing from it, so
+    ``depth-1`` copies are always in flight behind the contraction.
+
+    Sync (the interpret fallback): copy tile ``step`` at use through the
+    same rotating buffers — identical data flow, no lookahead.
+    """
+    if sync:
+        c = make_copy(step)
+        c.start()
+        c.wait()
+        return
+
+    @pl.when(step == 0)
+    def _warmup():
+        for j in range(min(depth - 1, total)):
+            make_copy(j).start()
+
+    @pl.when(step + (depth - 1) < total)
+    def _ahead():
+        make_copy(step + (depth - 1)).start()
+
+    make_copy(step).wait()
+
+
+def _store_wait_slot(qt, make_copy, sync: bool):
+    """Before writing store-buffer slot ``qt % 2``: wait for the store
+    issued two tiles ago (the previous occupant of the slot)."""
+    if sync:
+        return
+
+    @pl.when(qt >= 2)
+    def _reuse():
+        make_copy(qt - 2).wait()
+
+
+def _store_start(qt, q_tiles: int, make_copy, sync: bool):
+    """Issue tile ``qt``'s output store; the copy drains behind tile
+    ``qt+1``'s matmul.  The final width step waits out the (up to) two
+    stores still in flight."""
+    c = make_copy(qt)
+    c.start()
+    if sync:
+        c.wait()
+        return
+
+    @pl.when(qt == q_tiles - 1)
+    def _drain():
+        @pl.when(qt >= 1)
+        def _prev():
+            make_copy(qt - 1).wait()
+        make_copy(qt).wait()
 
 
 def default_cblk(C: int, cap: int = 512) -> int:
@@ -274,6 +379,116 @@ def _fwd_kernel(*refs, S: int, dilation: int, wblk: int, nblk: int, alg: str,
         o_ref[i] = y[:, blk].astype(o_ref.dtype)
 
 
+def _fwd_kernel_pipe(*refs, S: int, dilation: int, wblk: int, nblk: int,
+                     kblk: int, alg: str, gather: bool, activation: str,
+                     has_bias: bool, has_residual: bool, save_preact: bool,
+                     pipe: int, q_tiles: int, sync: bool):
+    """Software-pipelined ``_fwd_kernel`` (DESIGN.md §15).
+
+    x and the activated output live in ANY (HBM on TPU); the dilated
+    footprint rotates through a ``pipe``-deep VMEM scratch so tile i+1's
+    DMA is in flight while tile i contracts, and the epilogue store of
+    tile i streams out behind tile i+1's matmul through a 2-slot buffer.
+    The width axis is sequential ("arbitrary") — the rotation needs
+    in-order tiles; batch/filter stay parallel.  Weight/bias/residual
+    tiles keep the native Blocked pipeline (they are revisited, not
+    refetched, across the width sweep).
+    """
+    it = iter(refs)
+    x_hbm, w_ref = next(it), next(it)
+    b_ref = next(it) if has_bias else None
+    r_ref = next(it) if has_residual else None
+    o_hbm = next(it)
+    u_ref = next(it) if save_preact else None
+    xbuf, xsem, obuf, osem = next(it), next(it), next(it), next(it)
+
+    n, kt, qt = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    F = wblk + (S - 1) * dilation
+
+    def x_copy(t):
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(n * nblk, nblk), :, pl.ds(t * wblk, F)],
+            xbuf.at[t % pipe], xsem.at[t % pipe])
+
+    _pipe_schedule(qt, q_tiles, pipe, x_copy, sync)
+    xs = xbuf[qt % pipe]                       # (nblk, C, F), staged
+
+    if alg == "tap_packed":
+        acc = _packed_fwd_acc(w_ref, xs, S, dilation, wblk, nblk, gather)
+    else:
+        acc = jnp.zeros((w_ref.shape[1], nblk * wblk), jnp.float32)
+        for s in range(S):
+            a = w_ref[s]
+            b = _folded_tap(xs, s, dilation, wblk, nblk)
+            acc += jnp.dot(a, b, preferred_element_type=jnp.float32)
+    r = _fold(r_ref, nblk) if has_residual else None
+    u, y = _epilogue_on_acc(acc, b_ref, r, activation)
+
+    def o_copy(t):
+        return pltpu.make_async_copy(
+            obuf.at[t % 2],
+            o_hbm.at[pl.ds(n * nblk, nblk), pl.ds(kt * kblk, kblk),
+                     pl.ds(t * wblk, wblk)],
+            osem.at[t % 2])
+
+    _store_wait_slot(qt, o_copy, sync)
+    for i in range(nblk):  # unfold the GEMM width back into per-sample tiles
+        blk = slice(i * wblk, (i + 1) * wblk)
+        if save_preact:
+            u_ref[i] = u[:, blk]
+        obuf[qt % 2, i] = y[:, blk].astype(obuf.dtype)
+    _store_start(qt, q_tiles, o_copy, sync)
+
+
+def _conv1d_fwd_pipe(x, w_in, bias, residual, *, N, C, K, S, Qp, dilation,
+                     wblk, kblk, alg, nblk, pipe, out_dtype, activation,
+                     save_preact, interpret):
+    """pallas_call plumbing of the pipelined forward: ANY-space x/y refs,
+    rotating footprint scratch + 2-slot store buffer + DMA semaphores."""
+    F = wblk + (S - 1) * dilation
+    grid = (N // nblk, K // kblk, Qp // wblk)
+    if alg == "tap_packed":
+        w_spec = pl.BlockSpec((kblk, S * C), lambda n, kt, qt: (kt, 0))
+    else:
+        w_spec = pl.BlockSpec((S, kblk, C), lambda n, kt, qt: (0, kt, 0))
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY), w_spec]
+    inputs = [x, w_in]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((kblk, 1), lambda n, kt, qt: (kt, 0)))
+        inputs.append(bias.reshape(K, 1))
+    if residual is not None:
+        in_specs.append(pl.BlockSpec((nblk, kblk, wblk),
+                                     lambda n, kt, qt: (n, kt, qt)))
+        inputs.append(residual)
+    out_specs = [pl.BlockSpec(memory_space=pltpu.ANY)]
+    out_shape = [jax.ShapeDtypeStruct((N, K, Qp), out_dtype)]
+    if save_preact:
+        out_specs.append(pl.BlockSpec((nblk, kblk, wblk),
+                                      lambda n, kt, qt: (n, kt, qt)))
+        out_shape.append(jax.ShapeDtypeStruct((N, K, Qp), jnp.float32))
+    scratch = [pltpu.VMEM((pipe, nblk, C, F), x.dtype),
+               pltpu.SemaphoreType.DMA((pipe,)),
+               pltpu.VMEM((2, nblk, kblk, wblk), out_dtype),
+               pltpu.SemaphoreType.DMA((2,))]
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel_pipe, S=S, dilation=dilation, wblk=wblk,
+                          nblk=nblk, kblk=kblk, alg=alg, gather=interpret,
+                          activation=activation, has_bias=bias is not None,
+                          has_residual=residual is not None,
+                          save_preact=save_preact, pipe=pipe,
+                          q_tiles=Qp // wblk,
+                          sync=_sync_staging(interpret)),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs if save_preact else out_specs[0],
+        out_shape=out_shape if save_preact else out_shape[0],
+        scratch_shapes=scratch,
+        compiler_params=_compiler_params(
+            ("parallel", "parallel", "arbitrary"), interpret),
+        interpret=interpret,
+    )(*inputs)
+
+
 def conv1d_fwd(
     x: jax.Array,
     w: jax.Array,
@@ -287,6 +502,7 @@ def conv1d_fwd(
     kblk: int | None = None,
     alg: str = "tap_loop",
     nblk: int = 1,
+    pipe: int = 0,
     out_dtype=None,
     interpret: bool = False,
 ):
@@ -299,6 +515,14 @@ def conv1d_fwd(
     ``alg`` selects the contraction formulation (``tap_loop`` /
     ``tap_packed``, see module docstring); ``nblk`` folds that many samples
     into the GEMM width dimension (requires ``N % nblk == 0``).
+
+    ``pipe >= 2`` runs the software-pipelined kernel body (DESIGN.md §15):
+    the dilated footprint rotates through a ``pipe``-deep VMEM scratch via
+    async copies so tile i+1's DMA overlaps tile i's contraction, and the
+    fused-epilogue store streams behind the next tile's matmul.  Bit-
+    identical to the synchronous kernel (same tap order, same fp32
+    accumulation); in interpret mode the staging falls back to synchronous
+    copies through the same buffers.
     """
     N, C, Wp = x.shape
     S, K, Cw = w.shape
@@ -313,6 +537,16 @@ def conv1d_fwd(
     grid = (N // nblk, K // kblk, Qp // wblk)
     out_dtype = out_dtype or x.dtype
     activation = canon(activation)
+    pipe = canon_pipe(pipe) if pltpu is not None else 0
+
+    if pipe:
+        w_in = (w.transpose(1, 0, 2).reshape(K, S * C)
+                if alg == "tap_packed" else w)
+        return _conv1d_fwd_pipe(
+            x, w_in, bias, residual, N=N, C=C, K=K, S=S, Qp=Qp,
+            dilation=dilation, wblk=wblk, kblk=kblk, alg=alg, nblk=nblk,
+            pipe=pipe, out_dtype=out_dtype, activation=activation,
+            save_preact=save_preact, interpret=interpret)
 
     if alg == "tap_packed":
         # host-side pre-pack: (S, K, C) -> (K, S*C), so the kernel's single
@@ -402,6 +636,55 @@ def _bwd_w_kernel(x_ref, g_ref, o_ref, *dbias_ref, S: int, dilation: int,
                                      keepdims=True)
 
 
+def _bwd_w_kernel_pipe(*refs, S: int, dilation: int, wblk: int, nblk: int,
+                       alg: str, gather: bool, with_dbias: bool, pipe: int,
+                       nq: int, total: int, sync: bool):
+    """Software-pipelined ``_bwd_w_kernel``: both operand tiles (footprint
+    + cotangent) rotate through ``pipe``-deep VMEM scratch, indexed by the
+    flattened sequential step ``n·nq + qt`` — the whole grid is one
+    in-order stream, so the rotation spans batch-fold boundaries too.  The
+    resident fp32 gradient block stays on the native Blocked path."""
+    it = iter(refs)
+    x_hbm, g_hbm = next(it), next(it)
+    o_ref = next(it)
+    dbias_ref = next(it) if with_dbias else None
+    xbuf, xsem, gbuf, gsem = next(it), next(it), next(it), next(it)
+
+    F = wblk + (S - 1) * dilation
+    step = pl.program_id(0) * nq + pl.program_id(1)
+
+    def copies(t):
+        slot = t % pipe
+        a, b = t // nq, t % nq
+        return _MultiCopy([
+            pltpu.make_async_copy(
+                x_hbm.at[pl.ds(a * nblk, nblk), :, pl.ds(b * wblk, F)],
+                xbuf.at[slot], xsem.at[slot]),
+            pltpu.make_async_copy(
+                g_hbm.at[pl.ds(a * nblk, nblk), :, pl.ds(b * wblk, wblk)],
+                gbuf.at[slot], gsem.at[slot])])
+
+    _pipe_schedule(step, total, pipe, copies, sync)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        if with_dbias:
+            dbias_ref[...] = jnp.zeros_like(dbias_ref)
+
+    xs = xbuf[step % pipe]                     # (nblk, C, F), staged
+    g = _fold(gbuf[step % pipe], nblk)         # (K, nblk*WBLK)
+    if alg == "tap_packed":
+        o_ref[...] += _packed_bwd_w(g, xs, S, dilation, wblk, nblk, gather)
+    else:
+        for s in range(S):
+            b = _folded_tap(xs, s, dilation, wblk, nblk)
+            o_ref[s] += jnp.dot(g, b.T, preferred_element_type=jnp.float32)
+    if with_dbias:
+        dbias_ref[...] += jnp.sum(g.astype(jnp.float32), axis=-1,
+                                  keepdims=True)
+
+
 def conv1d_bwd_weight(
     x: jax.Array,
     gout: jax.Array,
@@ -411,6 +694,7 @@ def conv1d_bwd_weight(
     wblk: int = 256,
     alg: str = "tap_loop",
     nblk: int = 1,
+    pipe: int = 0,
     with_dbias: bool = False,
     interpret: bool = False,
 ):
@@ -430,6 +714,7 @@ def conv1d_bwd_weight(
     F = wblk + (S - 1) * dilation
     grid = (N // nblk, Qp // wblk)
     packed = alg == "tap_packed"
+    pipe = canon_pipe(pipe) if pltpu is not None else 0
 
     if packed:
         out_specs = pl.BlockSpec((K, S * C), lambda n, qt: (0, 0))
@@ -441,17 +726,35 @@ def conv1d_bwd_weight(
         out_specs = [out_specs, pl.BlockSpec((K, 1), lambda n, qt: (0, 0))]
         out_shape = [out_shape, jax.ShapeDtypeStruct((K, 1), jnp.float32)]
 
-    out = pl.pallas_call(
-        functools.partial(_bwd_w_kernel, S=S, dilation=dilation, wblk=wblk,
-                          nblk=nblk, alg=alg, gather=interpret,
-                          with_dbias=with_dbias),
-        grid=grid,
-        in_specs=[
+    if pipe:
+        nq = Qp // wblk
+        kernel = functools.partial(
+            _bwd_w_kernel_pipe, S=S, dilation=dilation, wblk=wblk, nblk=nblk,
+            alg=alg, gather=interpret, with_dbias=with_dbias, pipe=pipe,
+            nq=nq, total=(N // nblk) * nq, sync=_sync_staging(interpret))
+        in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),
+                    pl.BlockSpec(memory_space=pltpu.ANY)]
+        scratch = [pltpu.VMEM((pipe, nblk, C, F), x.dtype),
+                   pltpu.SemaphoreType.DMA((pipe,)),
+                   pltpu.VMEM((pipe, nblk, K, wblk), gout.dtype),
+                   pltpu.SemaphoreType.DMA((pipe,))]
+    else:
+        kernel = functools.partial(
+            _bwd_w_kernel, S=S, dilation=dilation, wblk=wblk, nblk=nblk,
+            alg=alg, gather=interpret, with_dbias=with_dbias)
+        in_specs = [
             _overlap_spec((nblk, C, F), lambda n, qt: (n, 0, qt * wblk)),
             pl.BlockSpec((nblk, K, wblk), lambda n, qt: (n, 0, qt)),
-        ],
+        ]
+        scratch = []
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
+        scratch_shapes=scratch,
         compiler_params=_compiler_params(("arbitrary", "arbitrary"), interpret),
         interpret=interpret,
     )(x, gout)
@@ -491,6 +794,52 @@ def _dw_fwd_kernel(*refs, S: int, dilation: int, wblk: int, activation: str,
     o_ref[0] = y.astype(o_ref.dtype)
 
 
+def _dw_fwd_kernel_pipe(*refs, S: int, dilation: int, wblk: int, cblk: int,
+                        activation: str, has_bias: bool, has_residual: bool,
+                        save_preact: bool, pipe: int, q_tiles: int,
+                        sync: bool):
+    """Software-pipelined ``_dw_fwd_kernel``: same rotation/streaming as
+    the dense forward, on (1, cblk, ·) tiles of the VPU fma chain."""
+    it = iter(refs)
+    x_hbm, w_ref = next(it), next(it)
+    b_ref = next(it) if has_bias else None
+    r_ref = next(it) if has_residual else None
+    o_hbm = next(it)
+    u_ref = next(it) if save_preact else None
+    xbuf, xsem, obuf, osem = next(it), next(it), next(it), next(it)
+
+    n, ct, qt = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    F = wblk + (S - 1) * dilation
+
+    def x_copy(t):
+        return pltpu.make_async_copy(
+            x_hbm.at[pl.ds(n, 1), pl.ds(ct * cblk, cblk), pl.ds(t * wblk, F)],
+            xbuf.at[t % pipe], xsem.at[t % pipe])
+
+    _pipe_schedule(qt, q_tiles, pipe, x_copy, sync)
+    x = xbuf[qt % pipe][0]                     # (cblk, F), staged
+
+    acc = jnp.zeros((cblk, wblk), jnp.float32)
+    for s in range(S):
+        b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)
+        acc += w_ref[s][:, None].astype(jnp.float32) * b.astype(jnp.float32)
+    u, y = _epilogue_on_acc(acc, b_ref,
+                            r_ref[0] if has_residual else None, activation)
+    if save_preact:
+        u_ref[0] = u
+
+    def o_copy(t):
+        return pltpu.make_async_copy(
+            obuf.at[t % 2],
+            o_hbm.at[pl.ds(n, 1), pl.ds(ct * cblk, cblk),
+                     pl.ds(t * wblk, wblk)],
+            osem.at[t % 2])
+
+    _store_wait_slot(qt, o_copy, sync)
+    obuf[qt % 2, 0] = y.astype(obuf.dtype)
+    _store_start(qt, q_tiles, o_copy, sync)
+
+
 def depthwise_conv1d_fwd(
     x: jax.Array,
     w: jax.Array,
@@ -502,6 +851,7 @@ def depthwise_conv1d_fwd(
     dilation: int = 1,
     wblk: int = 256,
     cblk: int | None = None,
+    pipe: int = 0,
     out_dtype=None,
     interpret: bool = False,
 ):
@@ -521,11 +871,18 @@ def depthwise_conv1d_fwd(
     grid = (N, C // cblk, Qp // wblk)
     out_dtype = out_dtype or x.dtype
     activation = canon(activation)
+    pipe = canon_pipe(pipe) if pltpu is not None else 0
 
-    in_specs = [
-        _overlap_spec((1, cblk, F), lambda n, ct, qt: (n, ct, qt * wblk)),
-        pl.BlockSpec((S, cblk), lambda n, ct, qt: (0, ct)),
-    ]
+    if pipe:
+        in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),
+                    pl.BlockSpec((S, cblk), lambda n, ct, qt: (0, ct))]
+        dims = ("parallel", "parallel", "arbitrary")
+    else:
+        in_specs = [
+            _overlap_spec((1, cblk, F), lambda n, ct, qt: (n, ct, qt * wblk)),
+            pl.BlockSpec((S, cblk), lambda n, ct, qt: (0, ct)),
+        ]
+        dims = ("parallel", "parallel", "parallel")
     inputs = [x, w]
     if bias is not None:
         assert bias.shape == (C,), (bias.shape, C)
@@ -537,22 +894,37 @@ def depthwise_conv1d_fwd(
         inputs.append(residual)
 
     out_spec = pl.BlockSpec((1, cblk, wblk), lambda n, ct, qt: (n, ct, qt))
-    out_specs = [out_spec]
+    out_specs = [pl.BlockSpec(memory_space=pltpu.ANY) if pipe else out_spec]
     out_shape = [jax.ShapeDtypeStruct((N, C, Qp), out_dtype)]
     if save_preact:
         out_specs.append(out_spec)
         out_shape.append(jax.ShapeDtypeStruct((N, C, Qp), jnp.float32))
 
+    if pipe:
+        kernel = functools.partial(
+            _dw_fwd_kernel_pipe, S=S, dilation=dilation, wblk=wblk, cblk=cblk,
+            activation=activation, has_bias=bias is not None,
+            has_residual=residual is not None, save_preact=save_preact,
+            pipe=pipe, q_tiles=Qp // wblk, sync=_sync_staging(interpret))
+        scratch = [pltpu.VMEM((pipe, 1, cblk, F), x.dtype),
+                   pltpu.SemaphoreType.DMA((pipe,)),
+                   pltpu.VMEM((2, 1, cblk, wblk), out_dtype),
+                   pltpu.SemaphoreType.DMA((2,))]
+    else:
+        kernel = functools.partial(
+            _dw_fwd_kernel, S=S, dilation=dilation, wblk=wblk,
+            activation=activation, has_bias=bias is not None,
+            has_residual=residual is not None, save_preact=save_preact)
+        scratch = []
+
     return pl.pallas_call(
-        functools.partial(_dw_fwd_kernel, S=S, dilation=dilation, wblk=wblk,
-                          activation=activation, has_bias=bias is not None,
-                          has_residual=residual is not None,
-                          save_preact=save_preact),
+        kernel,
         grid=grid,
         in_specs=in_specs,
-        out_specs=out_specs if save_preact else out_spec,
+        out_specs=out_specs if save_preact else out_specs[0],
         out_shape=out_shape if save_preact else out_shape[0],
-        compiler_params=_compiler_params(("parallel", "parallel", "parallel"), interpret),
+        scratch_shapes=scratch,
+        compiler_params=_compiler_params(dims, interpret),
         interpret=interpret,
     )(*inputs)
 
@@ -576,6 +948,53 @@ def _dw_bwd_w_kernel(x_ref, g_ref, o_ref, *dbias_ref, S: int, dilation: int,
         dbias_ref[0][...] += jnp.sum(g, axis=-1, keepdims=True)
 
 
+def _dw_bwd_w_kernel_pipe(*refs, S: int, dilation: int, wblk: int, cblk: int,
+                          with_dbias: bool, pipe: int, nq: int, nc: int,
+                          total: int, sync: bool):
+    """Software-pipelined ``_dw_bwd_w_kernel``: footprint + cotangent tiles
+    rotate on the flattened (n·nq + qt)·nc + ct sequential step."""
+    it = iter(refs)
+    x_hbm, g_hbm = next(it), next(it)
+    o_ref = next(it)
+    dbias_ref = next(it) if with_dbias else None
+    xbuf, xsem, gbuf, gsem = next(it), next(it), next(it), next(it)
+
+    F = wblk + (S - 1) * dilation
+    step = ((pl.program_id(0) * nq + pl.program_id(1)) * nc
+            + pl.program_id(2))
+    first = (pl.program_id(0) == 0) & (pl.program_id(1) == 0)
+
+    def copies(t):
+        slot = t % pipe
+        n, r = t // (nq * nc), t % (nq * nc)
+        qi, ci = r // nc, r % nc
+        return _MultiCopy([
+            pltpu.make_async_copy(
+                x_hbm.at[pl.ds(n, 1), pl.ds(ci * cblk, cblk),
+                         pl.ds(qi * wblk, F)],
+                xbuf.at[slot], xsem.at[slot]),
+            pltpu.make_async_copy(
+                g_hbm.at[pl.ds(n, 1), pl.ds(ci * cblk, cblk),
+                         pl.ds(qi * wblk, wblk)],
+                gbuf.at[slot], gsem.at[slot])])
+
+    _pipe_schedule(step, total, pipe, copies, sync)
+
+    @pl.when(first)  # each (S, cblk) block zeroed at its first visit
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        if with_dbias:
+            dbias_ref[...] = jnp.zeros_like(dbias_ref)
+
+    x = xbuf[step % pipe][0]
+    g = gbuf[step % pipe][0].astype(jnp.float32)  # (CB, WBLK)
+    for s in range(S):
+        b = jax.lax.dynamic_slice_in_dim(x, s * dilation, wblk, axis=1)
+        o_ref[s] += jnp.sum(g * b.astype(jnp.float32), axis=-1)
+    if with_dbias:
+        dbias_ref[...] += jnp.sum(g, axis=-1, keepdims=True)
+
+
 def depthwise_conv1d_bwd_weight(
     x: jax.Array,
     gout: jax.Array,
@@ -584,6 +1003,7 @@ def depthwise_conv1d_bwd_weight(
     dilation: int = 1,
     wblk: int = 256,
     cblk: int | None = None,
+    pipe: int = 0,
     with_dbias: bool = False,
     interpret: bool = False,
 ):
@@ -599,6 +1019,7 @@ def depthwise_conv1d_bwd_weight(
     cblk = cblk or default_cblk(C)
     assert C % cblk == 0
     grid = (N, Qp // wblk, C // cblk)
+    pipe = canon_pipe(pipe) if pltpu is not None else 0
 
     out_specs = pl.BlockSpec((S, cblk), lambda n, qt, ct: (0, ct))
     out_shape = jax.ShapeDtypeStruct((S, C), jnp.float32)
@@ -606,16 +1027,35 @@ def depthwise_conv1d_bwd_weight(
         out_specs = [out_specs, pl.BlockSpec((cblk, 1), lambda n, qt, ct: (ct, 0))]
         out_shape = [out_shape, jax.ShapeDtypeStruct((C, 1), jnp.float32)]
 
-    out = pl.pallas_call(
-        functools.partial(_dw_bwd_w_kernel, S=S, dilation=dilation, wblk=wblk,
-                          with_dbias=with_dbias),
-        grid=grid,
-        in_specs=[
+    if pipe:
+        nq, nc = Qp // wblk, C // cblk
+        kernel = functools.partial(
+            _dw_bwd_w_kernel_pipe, S=S, dilation=dilation, wblk=wblk,
+            cblk=cblk, with_dbias=with_dbias, pipe=pipe, nq=nq, nc=nc,
+            total=N * nq * nc, sync=_sync_staging(interpret))
+        in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),
+                    pl.BlockSpec(memory_space=pltpu.ANY)]
+        scratch = [pltpu.VMEM((pipe, 1, cblk, F), x.dtype),
+                   pltpu.SemaphoreType.DMA((pipe,)),
+                   pltpu.VMEM((pipe, 1, cblk, wblk), gout.dtype),
+                   pltpu.SemaphoreType.DMA((pipe,))]
+    else:
+        kernel = functools.partial(
+            _dw_bwd_w_kernel, S=S, dilation=dilation, wblk=wblk,
+            with_dbias=with_dbias)
+        in_specs = [
             _overlap_spec((1, cblk, F), lambda n, qt, ct: (n, ct, qt * wblk)),
             pl.BlockSpec((1, cblk, wblk), lambda n, qt, ct: (n, ct, qt)),
-        ],
+        ]
+        scratch = []
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
+        scratch_shapes=scratch,
         compiler_params=_compiler_params(("arbitrary", "arbitrary", "arbitrary"), interpret),
         interpret=interpret,
     )(x, gout)

@@ -133,6 +133,7 @@ class PassConfig(NamedTuple):
     blk2: int | None = None
     alg: str | None = None       # 'tap_loop' | 'tap_packed' (dense pallas)
     nblk: int | None = None      # batch fold (dense pallas)
+    pipe: int | None = None      # software-pipeline depth (None/0 -> sync)
 
 
 def _as_pass_cfg(cfg) -> PassConfig | None:
@@ -159,7 +160,7 @@ def _resolve_auto(x, *, C, K, S, dilation, padding, wblk, kblk, depthwise,
     every pass's cache key, so a fused conv never reuses the unfused
     instance's tiles.
 
-    Returns ``(backend, wblk, kblk, alg, nblk, (bwd_data_cfg,
+    Returns ``(backend, wblk, kblk, alg, nblk, pipe, (bwd_data_cfg,
     bwd_weight_cfg))``.
     """
     from repro import tune  # late import: tune.measure calls back into ops
@@ -173,9 +174,9 @@ def _resolve_auto(x, *, C, K, S, dilation, padding, wblk, kblk, depthwise,
     for p in ("bwd_data", "bwd_weight"):
         cfg = tune.get_config(**kw, pass_=p, allow_measure=False)
         bwd.append(PassConfig(cfg.backend, cfg.wblk, cfg.kblk, cfg.alg,
-                              cfg.nblk))
+                              cfg.nblk, cfg.pipe))
     return (fwd.backend, wblk or fwd.wblk, kblk or fwd.kblk, fwd.alg,
-            fwd.nblk, tuple(bwd))
+            fwd.nblk, fwd.pipe, tuple(bwd))
 
 
 def _pad_amounts(S: int, dilation: int, padding: Padding) -> tuple[int, int]:
@@ -228,6 +229,62 @@ def _legal_nblk(nblk: int | None, N: int) -> int:
     return nblk if nblk and N % nblk == 0 else 1
 
 
+def _pipe_attrs(pipe, *, pass_, N, C, K, S, dilation, Q, dtype, depthwise,
+                wblk, kblk, alg, nblk) -> dict:
+    """Telemetry attrs for the pipelining axis of one pallas pass
+    (DESIGN.md §15): ``pipelined``/``pipe_depth`` record what was
+    dispatched; ``overlap_frac`` is the model-derived fraction of the
+    per-grid-step staged-copy time hidden behind the contraction
+    (``tune.cost.copy_hiding_fraction`` — the same roofline terms the
+    tuner ranks with), 0 for a synchronous kernel.  Interpret-mode
+    execution realises none of it (the fallback stages synchronously);
+    the honest container signal is the measured pipe-vs-sync race."""
+    p = int(pipe or 0)
+    out = dict(pipelined=p >= 2, pipe_depth=p, overlap_frac=0.0)
+    if p >= 2 and _obs.enabled():
+        try:
+            from repro import tune
+            from repro.tune import cost as _cost
+            prob = tune.ConvProblem(
+                N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
+                dtype=jnp.dtype(dtype).name, depthwise=depthwise,
+                pass_=pass_)
+            out["overlap_frac"] = _cost.copy_hiding_fraction(
+                prob, wblk=wblk, kblk=kblk, alg=alg, nblk=nblk, pipe=p,
+                device_kind=tune.device_kind())
+        except Exception:
+            pass  # attrs must never break the pass
+    return out
+
+
+def _chunk_ranges(n: int, chunks: int) -> list[tuple[int, int]]:
+    """Split ``n`` units into ``chunks`` contiguous, near-even [lo, hi)
+    ranges (clamped to at most one unit per chunk)."""
+    chunks = max(1, min(int(chunks), n))
+    base, rem = divmod(n, chunks)
+    out, lo = [], 0
+    for i in range(chunks):
+        hi = lo + base + (1 if i < rem else 0)
+        out.append((lo, hi))
+        lo = hi
+    return out
+
+
+def _chunked_psum_bwd_weight(run_range, ranges, axes):
+    """Chunked collective/compute overlap for the fused gradient reduction
+    (DESIGN.md §15): ``run_range(lo, hi)`` computes the bwd-weight partial
+    (dw or (dw, dbias)) over width units [lo, hi); each partial is psum'd
+    the moment it exists — chunk i's all-reduce has no data dependency on
+    chunk i+1's contraction, so XLA's async collectives overlap them —
+    and the reduced partials sum to the full gradient (fp32 throughout;
+    only the summation order differs from the single-psum path)."""
+    total = None
+    for lo, hi in ranges:
+        part = jax.lax.psum(run_range(lo, hi), axes)
+        total = part if total is None else jax.tree.map(jnp.add, total, part)
+    return total
+
+
 def _dtype_name(a) -> str | None:
     return None if a is None else jnp.dtype(a.dtype).name
 
@@ -274,7 +331,12 @@ class _FusedSpec(NamedTuple):
     per-pass configs (None -> static fallback derived in the bwd rule);
     ``alg``/``nblk`` are the forward's dense formulation + batch fold.
     ``reduce_axes`` names the mesh axes the weight/bias gradients psum over
-    (the data-parallel shard_map path, §13); None = single-device."""
+    (the data-parallel shard_map path, §13); None = single-device.
+    ``pipe`` is the forward kernel's software-pipeline depth (0 = the
+    synchronous kernel, §15); ``reduce_chunks`` splits the fused gradient
+    all-reduce into that many width chunks, psum'd as each chunk's
+    bwd-weight partial completes so collective time hides behind the
+    remaining contraction (1 = the PR 5 single fused psum)."""
     dilation: int
     wblk: int
     blk2: int | None
@@ -288,6 +350,8 @@ class _FusedSpec(NamedTuple):
     alg: str = "tap_loop"
     nblk: int = 1
     reduce_axes: tuple[str, ...] | None = None
+    pipe: int = 0
+    reduce_chunks: int = 1
 
     @property
     def out_jnp_dtype(self):
@@ -301,7 +365,7 @@ class _FusedSpec(NamedTuple):
 
 def _plain_fwd_padded(x, w, dilation, wblk, kblk, interpret,
                       pass_: str = "fwd", alg: str = "tap_loop",
-                      nblk: int = 1):
+                      nblk: int = 1, pipe: int = 0):
     """Epilogue-free forward: x (N, C, W) already logically padded; returns
     (N, K, Q) via the Pallas kernel, handling width round-up to the tile
     size.  Also the bwd-data engine (Alg. 3, ``pass_='bwd_data'``)."""
@@ -314,7 +378,7 @@ def _plain_fwd_padded(x, w, dilation, wblk, kblk, interpret,
         x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
     out = _k.conv1d_pass(pass_, x, w, dilation=dilation, wblk=wblk,
                          kblk=kblk, alg=alg, nblk=_legal_nblk(nblk, N),
-                         interpret=interpret)
+                         pipe=pipe, interpret=interpret)
     return out[:, :, :Q]
 
 
@@ -335,7 +399,7 @@ def _fused_fwd_padded(spec: _FusedSpec, x, w, bias, residual,
     out = _k.conv1d_pass(
         "fwd", x, w, bias=bias, residual=residual, activation=spec.activation,
         save_preact=save_preact, dilation=spec.dilation, wblk=spec.wblk,
-        kblk=spec.blk2, alg=spec.alg, nblk=spec.nblk,
+        kblk=spec.blk2, alg=spec.alg, nblk=spec.nblk, pipe=spec.pipe,
         out_dtype=spec.out_jnp_dtype, interpret=spec.interpret)
     if save_preact:
         y, u = out
@@ -370,7 +434,7 @@ def _epilogue_cotangent(spec: _FusedSpec, saved, gout):
     return du.astype(gout.dtype)
 
 
-def _epilogue_param_grads(spec: _FusedSpec, dwout, du):
+def _epilogue_param_grads(spec: _FusedSpec, dwout, du, reduced: bool = False):
     """Unpack the bwd-weight kernel result into (dw, dbias) in the primal
     dtypes, and derive dresidual (the masked cotangent passed through).
 
@@ -378,13 +442,16 @@ def _epilogue_param_grads(spec: _FusedSpec, dwout, du):
     gradient all-reduce fuses: one ``lax.psum`` of the (dw, dbias) pair,
     immediately downstream of the bwd-weight kernel and still on its fp32
     accumulator — per layer, so the reduce of layer *l* overlaps the
-    backward compute of layers < l (DESIGN.md §13).  ``dresidual`` is the
-    batch-sharded cotangent pass-through and stays local."""
+    backward compute of layers < l (DESIGN.md §13).  With
+    ``spec.reduce_chunks > 1`` the bwd rule instead psums per width chunk
+    (``_chunked_psum_bwd_weight``) and hands the already-reduced result in
+    with ``reduced=True``.  ``dresidual`` is the batch-sharded cotangent
+    pass-through and stays local."""
     if spec.bias_dtype is not None:
         dw, db = dwout
     else:
         dw, db = dwout, None
-    if spec.reduce_axes:
+    if spec.reduce_axes and not reduced:
         if db is not None:
             dw, db = jax.lax.psum((dw, db), spec.reduce_axes)
         else:
@@ -441,13 +508,20 @@ def _conv1d_pallas_bwd(spec, res, gout):
         # the pass's filter tile must divide C (bwd-data's filter count);
         # a kblk tuned for K need not — fall back to the divisor ladder
         kblk = bd.blk2 if bd.blk2 and C % bd.blk2 == 0 else pick_kblk(C)
+        bd_pipe = _k.canon_pipe(bd.pipe)
         bd_thunk = lambda: _plain_fwd_padded(  # noqa: E731
             g_pad, w_flip, d, bd.wblk or spec.wblk, kblk,
             spec.interpret, pass_="bwd_data",
-            alg=bd.alg or "tap_loop", nblk=bd.nblk or 1)
+            alg=bd.alg or "tap_loop", nblk=bd.nblk or 1, pipe=bd_pipe)
         bd_attrs = dict(backend="pallas", wblk=bd.wblk or spec.wblk,
                         kblk=kblk, alg=bd.alg or "tap_loop",
-                        nblk=bd.nblk or 1)
+                        nblk=bd.nblk or 1,
+                        **_pipe_attrs(bd_pipe, pass_="bwd_data", N=N, C=C,
+                                      K=K, S=S, dilation=d, Q=Q,
+                                      dtype=x.dtype, depthwise=False,
+                                      wblk=bd.wblk or spec.wblk, kblk=kblk,
+                                      alg=bd.alg or "tap_loop",
+                                      nblk=bd.nblk or 1))
     # bwd-data contracts over K and produces all W output columns
     dx = _obs_conv(
         "bwd_data", bd_thunk, args=(x, du), flops=2.0 * N * C * K * S * W,
@@ -458,28 +532,63 @@ def _conv1d_pallas_bwd(spec, res, gout):
     # gradient fused into the same sequential-grid pass when bias exists —
     # again under its own per-pass config.
     bw = spec.bwd_weight or PassConfig("pallas", spec.wblk, None)
+    with_dbias = spec.bias_dtype is not None
+    reduced = False
     if bw.backend == "xla":
         bw_thunk = lambda: _xla_conv1d_bwd_weight(  # noqa: E731
-            x, du, dilation=d, with_dbias=spec.bias_dtype is not None)
+            x, du, dilation=d, with_dbias=with_dbias)
         bw_attrs = dict(backend="xla")
+        if spec.reduce_axes and spec.reduce_chunks > 1:
+            # chunked collective/compute overlap (§15): psum each width
+            # chunk's partial the moment it exists
+            ranges = _chunk_ranges(Q, spec.reduce_chunks)
+            bw_thunk = lambda: _chunked_psum_bwd_weight(  # noqa: E731
+                lambda a, b: _xla_conv1d_bwd_weight(
+                    x[:, :, a:b + span], du[:, :, a:b],
+                    dilation=d, with_dbias=with_dbias),
+                ranges, spec.reduce_axes)
+            bw_attrs["reduce_chunks"] = len(ranges)
+            reduced = True
     else:
         wblk = bw.wblk or spec.wblk
+        bw_nblk = _legal_nblk(bw.nblk, N)
+        bw_alg = bw.alg or "tap_loop"
+        bw_pipe = _k.canon_pipe(bw.pipe)
         Qp = _round_up(Q, wblk)
         xp = (jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
               if Qp + span > W else x)
         gp = jnp.pad(du, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else du
-        bw_thunk = lambda: _k.conv1d_pass(  # noqa: E731
-            "bwd_weight", xp, gp, S=S, dilation=d, wblk=wblk,
-            alg=bw.alg or "tap_loop", nblk=_legal_nblk(bw.nblk, N),
-            with_dbias=spec.bias_dtype is not None, interpret=spec.interpret)
-        bw_attrs = dict(backend="pallas", wblk=wblk,
-                        alg=bw.alg or "tap_loop",
-                        nblk=_legal_nblk(bw.nblk, N))
+
+        def bw_range(a, b):
+            # width-tile-aligned slice: chunk boundaries are [lo, hi) in
+            # units of wblk tiles, so every chunk keeps the kernel's tiling
+            return _k.conv1d_pass(
+                "bwd_weight", xp[:, :, a * wblk:b * wblk + span],
+                gp[:, :, a * wblk:b * wblk], S=S, dilation=d, wblk=wblk,
+                alg=bw_alg, nblk=bw_nblk, pipe=bw_pipe,
+                with_dbias=with_dbias, interpret=spec.interpret)
+
+        bw_attrs = dict(backend="pallas", wblk=wblk, alg=bw_alg,
+                        nblk=bw_nblk,
+                        **_pipe_attrs(bw_pipe, pass_="bwd_weight", N=N, C=C,
+                                      K=K, S=S, dilation=d, Q=Q,
+                                      dtype=x.dtype, depthwise=False,
+                                      wblk=wblk, kblk=None, alg=bw_alg,
+                                      nblk=bw_nblk))
+        nq = Qp // wblk
+        if spec.reduce_axes and spec.reduce_chunks > 1 and nq > 1:
+            ranges = _chunk_ranges(nq, spec.reduce_chunks)
+            bw_thunk = lambda: _chunked_psum_bwd_weight(  # noqa: E731
+                bw_range, ranges, spec.reduce_axes)
+            bw_attrs["reduce_chunks"] = len(ranges)
+            reduced = True
+        else:
+            bw_thunk = lambda: bw_range(0, nq)  # noqa: E731
     dwout = _obs_conv(
         "bwd_weight", bw_thunk, args=(x, du), flops=2.0 * N * C * K * S * Q,
         attrs=dict(bw_attrs, N=N, C=C, K=K, S=S, dilation=d, Q=Q,
                    dtype=jnp.dtype(x.dtype).name, depthwise=False))
-    dw, dbias, dres = _epilogue_param_grads(spec, dwout, du)
+    dw, dbias, dres = _epilogue_param_grads(spec, dwout, du, reduced=reduced)
     return dx, dw.astype(w.dtype), dbias, dres
 
 
@@ -500,11 +609,13 @@ def conv1d(
     kblk: int | None = None,
     alg: str | None = None,
     nblk: int | None = None,
+    pipe: int | None = None,
     out_dtype=None,
     interpret: bool | None = None,
     bwd_data_cfg=None,
     bwd_weight_cfg=None,
     grad_reduce_axes=None,
+    grad_reduce_chunks: int | None = None,
 ) -> jax.Array:
     """1D dilated convolution with fused epilogue, paper semantics.
 
@@ -534,7 +645,10 @@ def conv1d(
     ``alg`` pins the dense contraction formulation (``tap_loop`` /
     ``tap_packed``, DESIGN.md §12) and ``nblk`` the batch fold of the
     forward kernel; both default to the tuner's choice under
-    backend='auto' and to the historical kernel otherwise.
+    backend='auto' and to the historical kernel otherwise.  ``pipe`` pins
+    the forward's software-pipeline depth (DESIGN.md §15): 0/1 the
+    synchronous kernel, >= 2 the double-buffered async-copy variant —
+    numerically identical, tuner-selected under backend='auto'.
 
     backend='auto' asks the tuning subsystem (``repro.tune``) to pick the
     backend and tile sizes **per pass**: the forward's, plus each backward
@@ -549,6 +663,9 @@ def conv1d(
     those axes: the weight/bias gradients are all-reduced over them, fused
     after the bwd-weight pass (DESIGN.md §13).  Use
     ``kernels.sharded.sharded_conv1d`` for the wrapped spelling.
+    ``grad_reduce_chunks`` > 1 splits that fused all-reduce into width
+    chunks psum'd as each bwd-weight partial completes, overlapping
+    collective time with the remaining contraction (DESIGN.md §15).
     """
     backend = backend or default_backend()
     activation = _ep.canon(activation)
@@ -566,14 +683,15 @@ def conv1d(
         assert residual.shape == (x.shape[0], K, Q), \
             (residual.shape, (x.shape[0], K, Q))
     if backend == "auto":
-        backend, wblk, kblk, auto_alg, auto_nblk, (auto_bd, auto_bw) = \
-            _resolve_auto(
-                x, C=C, K=K, S=S, dilation=dilation, padding=padding,
-                wblk=wblk, kblk=kblk, depthwise=False,
-                epilogue=_ep.signature(bias is not None, activation,
-                                       residual is not None))
+        (backend, wblk, kblk, auto_alg, auto_nblk, auto_pipe,
+         (auto_bd, auto_bw)) = _resolve_auto(
+            x, C=C, K=K, S=S, dilation=dilation, padding=padding,
+            wblk=wblk, kblk=kblk, depthwise=False,
+            epilogue=_ep.signature(bias is not None, activation,
+                                   residual is not None))
         alg = alg or auto_alg
         nblk = nblk or auto_nblk
+        pipe = pipe if pipe is not None else auto_pipe
         bwd_data_cfg = bwd_data_cfg or auto_bd
         bwd_weight_cfg = bwd_weight_cfg or auto_bw
     if backend in ("ref", "xla") and grad_reduce_axes:
@@ -602,8 +720,15 @@ def conv1d(
                           jnp.dtype(out_dtype).name if out_dtype else None,
                           bwd_data_cfg, bwd_weight_cfg,
                           alg or "tap_loop", _legal_nblk(nblk, x.shape[0]),
-                          grad_reduce_axes)
-        attrs.update(alg=spec.alg, nblk=spec.nblk, wblk=wblk, kblk=kblk)
+                          grad_reduce_axes, _k.canon_pipe(pipe),
+                          int(grad_reduce_chunks or 1)
+                          if grad_reduce_axes else 1)
+        attrs.update(alg=spec.alg, nblk=spec.nblk, wblk=wblk, kblk=kblk,
+                     **_pipe_attrs(spec.pipe, pass_="fwd", N=N, C=C, K=K,
+                                   S=S, dilation=dilation, Q=Q,
+                                   dtype=x.dtype, depthwise=False,
+                                   wblk=wblk, kblk=kblk, alg=spec.alg,
+                                   nblk=spec.nblk))
         thunk = lambda: _conv1d_pallas(spec, x, w, bias, residual)  # noqa: E731
     else:
         raise ValueError(f"unknown conv backend {backend!r}")
@@ -617,7 +742,7 @@ def conv1d(
 
 
 def _dw_plain_fwd_padded(x, w, dilation, wblk, cblk, interpret,
-                         pass_: str = "fwd"):
+                         pass_: str = "fwd", pipe: int = 0):
     N, C, W = x.shape
     S, _ = w.shape
     span = (S - 1) * dilation
@@ -626,7 +751,8 @@ def _dw_plain_fwd_padded(x, w, dilation, wblk, cblk, interpret,
     if Qp + span > W:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, Qp + span - W)))
     out = _k.conv1d_pass(pass_, x, w, depthwise=True, dilation=dilation,
-                         wblk=wblk, cblk=cblk, interpret=interpret)
+                         wblk=wblk, cblk=cblk, pipe=pipe,
+                         interpret=interpret)
     return out[:, :, :Q]
 
 
@@ -645,7 +771,8 @@ def _dw_fused_fwd_padded(spec: _FusedSpec, x, w, bias, residual,
         "fwd", x, w, depthwise=True, bias=bias, residual=residual,
         activation=spec.activation, save_preact=save_preact,
         dilation=spec.dilation, wblk=spec.wblk, cblk=spec.blk2,
-        out_dtype=spec.out_jnp_dtype, interpret=spec.interpret)
+        pipe=spec.pipe, out_dtype=spec.out_jnp_dtype,
+        interpret=spec.interpret)
     if save_preact:
         y, u = out
         return y[:, :, :Q], u[:, :, :Q]
@@ -696,11 +823,17 @@ def _dw_conv1d_pallas_bwd(spec, res, gout):
         bd_attrs = dict(backend="xla")
     else:
         cblk = _dw_legal_cblk(bd.blk2, C) or _dw_legal_cblk(spec.blk2, C)
+        bd_pipe = _k.canon_pipe(bd.pipe)
         bd_thunk = lambda: _dw_plain_fwd_padded(  # noqa: E731
             g_pad, w[::-1], d, bd.wblk or spec.wblk, cblk,
-            spec.interpret, pass_="bwd_data")
+            spec.interpret, pass_="bwd_data", pipe=bd_pipe)
         bd_attrs = dict(backend="pallas", wblk=bd.wblk or spec.wblk,
-                        cblk=cblk)
+                        cblk=cblk,
+                        **_pipe_attrs(bd_pipe, pass_="bwd_data", N=N, C=C,
+                                      K=C, S=S, dilation=d, Q=Q,
+                                      dtype=x.dtype, depthwise=True,
+                                      wblk=bd.wblk or spec.wblk, kblk=cblk,
+                                      alg=None, nblk=1))
     dx = _obs_conv(
         "bwd_data", bd_thunk, args=(x, du), flops=2.0 * N * C * S * W,
         attrs=dict(bd_attrs, N=N, C=C, K=C, S=S, dilation=d, Q=Q,
@@ -708,10 +841,21 @@ def _dw_conv1d_pallas_bwd(spec, res, gout):
     dx = dx.astype(x.dtype)
     # --- bwd-weight (sequential grid), under its own per-pass config
     bw = spec.bwd_weight or PassConfig("pallas", spec.wblk, spec.blk2)
+    with_dbias = spec.bias_dtype is not None
+    reduced = False
     if bw.backend == "xla":
         bw_thunk = lambda: _xla_dw_bwd_weight(  # noqa: E731
-            x, du, dilation=d, with_dbias=spec.bias_dtype is not None)
+            x, du, dilation=d, with_dbias=with_dbias)
         bw_attrs = dict(backend="xla")
+        if spec.reduce_axes and spec.reduce_chunks > 1:
+            ranges = _chunk_ranges(Q, spec.reduce_chunks)
+            bw_thunk = lambda: _chunked_psum_bwd_weight(  # noqa: E731
+                lambda a, b: _xla_dw_bwd_weight(
+                    x[:, :, a:b + span], du[:, :, a:b],
+                    dilation=d, with_dbias=with_dbias),
+                ranges, spec.reduce_axes)
+            bw_attrs["reduce_chunks"] = len(ranges)
+            reduced = True
     else:
         wblk = bw.wblk or spec.wblk
         Qp = _round_up(Q, wblk)
@@ -719,16 +863,35 @@ def _dw_conv1d_pallas_bwd(spec, res, gout):
               if Qp + span > W else x)
         gp = jnp.pad(du, ((0, 0), (0, 0), (0, Qp - Q))) if Qp > Q else du
         cblk = _dw_legal_cblk(bw.blk2, C) or _dw_legal_cblk(spec.blk2, C)
-        bw_thunk = lambda: _k.conv1d_pass(  # noqa: E731
-            "bwd_weight", xp, gp, depthwise=True, S=S, dilation=d, wblk=wblk,
-            cblk=cblk,
-            with_dbias=spec.bias_dtype is not None, interpret=spec.interpret)
-        bw_attrs = dict(backend="pallas", wblk=wblk, cblk=cblk)
+        bw_pipe = _k.canon_pipe(bw.pipe)
+
+        def bw_range(a, b):
+            return _k.conv1d_pass(
+                "bwd_weight", xp[:, :, a * wblk:b * wblk + span],
+                gp[:, :, a * wblk:b * wblk], depthwise=True, S=S,
+                dilation=d, wblk=wblk, cblk=cblk, pipe=bw_pipe,
+                with_dbias=with_dbias, interpret=spec.interpret)
+
+        bw_attrs = dict(backend="pallas", wblk=wblk, cblk=cblk,
+                        **_pipe_attrs(bw_pipe, pass_="bwd_weight", N=N,
+                                      C=C, K=C, S=S, dilation=d, Q=Q,
+                                      dtype=x.dtype, depthwise=True,
+                                      wblk=wblk, kblk=cblk, alg=None,
+                                      nblk=1))
+        nq = Qp // wblk
+        if spec.reduce_axes and spec.reduce_chunks > 1 and nq > 1:
+            ranges = _chunk_ranges(nq, spec.reduce_chunks)
+            bw_thunk = lambda: _chunked_psum_bwd_weight(  # noqa: E731
+                bw_range, ranges, spec.reduce_axes)
+            bw_attrs["reduce_chunks"] = len(ranges)
+            reduced = True
+        else:
+            bw_thunk = lambda: bw_range(0, nq)  # noqa: E731
     dwout = _obs_conv(
         "bwd_weight", bw_thunk, args=(x, du), flops=2.0 * N * C * S * Q,
         attrs=dict(bw_attrs, N=N, C=C, K=C, S=S, dilation=d, Q=Q,
                    dtype=jnp.dtype(x.dtype).name, depthwise=True))
-    dw, dbias, dres = _epilogue_param_grads(spec, dwout, du)
+    dw, dbias, dres = _epilogue_param_grads(spec, dwout, du, reduced=reduced)
     return dx, dw.astype(w.dtype), dbias, dres
 
 
@@ -747,11 +910,13 @@ def depthwise_conv1d(
     backend: str | None = None,
     wblk: int | None = None,
     cblk: int | None = None,
+    pipe: int | None = None,
     out_dtype=None,
     interpret: bool | None = None,
     bwd_data_cfg=None,
     bwd_weight_cfg=None,
     grad_reduce_axes=None,
+    grad_reduce_chunks: int | None = None,
 ) -> jax.Array:
     """Depthwise 1D conv with fused epilogue.  x: (N, C, W), w: (S, C)
     -> (N, C, Q); bias (C,), residual (N, C, Q), same epilogue order as
@@ -764,7 +929,10 @@ def depthwise_conv1d(
     ``bwd_data_cfg``/``bwd_weight_cfg`` pin a pass explicitly.
     ``grad_reduce_axes`` marks the call as batch-sharded inside a
     ``shard_map``: weight/bias gradients all-reduce over the named mesh
-    axes, fused after the bwd-weight pass (DESIGN.md §13).
+    axes, fused after the bwd-weight pass (DESIGN.md §13);
+    ``grad_reduce_chunks`` > 1 chunks that psum across width partials
+    (DESIGN.md §15).  ``pipe`` pins the software-pipeline depth as in
+    ``conv1d``.
 
     Example (Mamba2-style causal conv, shapes only)::
 
@@ -795,11 +963,13 @@ def depthwise_conv1d(
             (residual.shape, (x.shape[0], C, Q))
     if backend == "auto":
         # depthwise kernels have no alg/nblk axes — drop the dense knobs
-        backend, wblk, cblk, _, _, (auto_bd, auto_bw) = _resolve_auto(
+        (backend, wblk, cblk, _, _, auto_pipe,
+         (auto_bd, auto_bw)) = _resolve_auto(
             x, C=C, K=C, S=S, dilation=dilation, padding=padding,
             wblk=wblk, kblk=cblk, depthwise=True,
             epilogue=_ep.signature(bias is not None, activation,
                                    residual is not None))
+        pipe = pipe if pipe is not None else auto_pipe
         bwd_data_cfg = bwd_data_cfg or auto_bd
         bwd_weight_cfg = bwd_weight_cfg or auto_bw
     if backend in ("ref", "xla") and grad_reduce_axes:
@@ -826,8 +996,15 @@ def depthwise_conv1d(
                           _dtype_name(bias), _dtype_name(residual),
                           jnp.dtype(out_dtype).name if out_dtype else None,
                           bwd_data_cfg, bwd_weight_cfg,
-                          reduce_axes=grad_reduce_axes)
-        attrs.update(wblk=wblk, cblk=cblk)
+                          reduce_axes=grad_reduce_axes,
+                          pipe=_k.canon_pipe(pipe),
+                          reduce_chunks=int(grad_reduce_chunks or 1)
+                          if grad_reduce_axes else 1)
+        attrs.update(wblk=wblk, cblk=cblk,
+                     **_pipe_attrs(spec.pipe, pass_="fwd", N=N, C=C, K=C,
+                                   S=S, dilation=dilation, Q=Q,
+                                   dtype=x.dtype, depthwise=True,
+                                   wblk=wblk, kblk=cblk, alg=None, nblk=1))
         thunk = lambda: _dw_conv1d_pallas(spec, x, w, bias, residual)  # noqa: E731
     else:
         raise ValueError(f"unknown conv backend {backend!r}")

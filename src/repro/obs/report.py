@@ -10,7 +10,9 @@ breakdown.  ``scripts/obs_report.py`` is the CLI; tests import
 Sections (keys of ``aggregate``'s result):
   provenance  the log's identity block
   spans       per-name count / p50 / p99 / total seconds
-  conv_cells  per (cell, pass): count, p50 ms, median efficiency
+  conv_cells  per (cell, pass): count, p50 ms, median efficiency, plus
+              the pipelining axis (max pipe depth dispatched, median
+              model-derived overlap fraction — DESIGN.md §15)
   tuner       cache hits / misses / legacy upgrades / hit rate
   cost_model  predicted-vs-measured ratio distribution over search traces
   steps       train.step count + latency percentiles + phase breakdown
@@ -56,7 +58,7 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
                       {})
     spans: dict[str, list[float]] = defaultdict(list)
     cells: dict[tuple[str, str], dict[str, list[float]]] = defaultdict(
-        lambda: {"dur": [], "eff": [], "gflops": []})
+        lambda: {"dur": [], "eff": [], "gflops": [], "pipe": [], "ovl": []})
     counters: dict[str, float] = defaultdict(float)
     searches: list[dict] = []
     phase_durs: dict[str, list[float]] = defaultdict(list)
@@ -73,6 +75,9 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
                     c["eff"].append(attrs["efficiency"])
                 if "gflops_per_s" in attrs:
                     c["gflops"].append(attrs["gflops_per_s"])
+                if "pipe_depth" in attrs:  # pipelining axis (DESIGN.md §15)
+                    c["pipe"].append(int(attrs["pipe_depth"]))
+                    c["ovl"].append(float(attrs.get("overlap_frac", 0.0)))
             if name.startswith("train.phase."):
                 phase_durs[name[len("train.phase."):]].append(r["dur"])
         elif kind == "counter":
@@ -82,6 +87,15 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
                 (int(attrs.get("step", -1)), r["value"]))
         elif kind == "event" and name == "tune.search.candidate":
             searches.append(attrs)
+        elif (kind == "event" and name.startswith("conv1d.")
+                and name.endswith(".trace")):
+            # jitted dispatches emit zero-duration trace events instead of
+            # timed spans — still the record of which pipeline depth ran
+            if "pipe_depth" in attrs:
+                c = cells[(_conv_cell_key(attrs),
+                           name[len("conv1d."):-len(".trace")])]
+                c["pipe"].append(int(attrs["pipe_depth"]))
+                c["ovl"].append(float(attrs.get("overlap_frac", 0.0)))
 
     hits = counters.get("tune.cache.hit", 0)
     misses = counters.get("tune.cache.miss", 0)
@@ -127,6 +141,11 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
                 "count": len(c["dur"]), "p50_ms": _pct(c["dur"], 0.5) * 1e3,
                 "efficiency_p50": _pct(c["eff"], 0.5),
                 "gflops_per_s_p50": _pct(c["gflops"], 0.5),
+                "pipe_depth_max": max(c["pipe"], default=0),
+                # overlap over pipelined dispatches only — mixing in the
+                # synchronous spans' zeros would hide a broken estimate
+                "overlap_frac_p50": _pct(
+                    [o for p, o in zip(c["pipe"], c["ovl"]) if p >= 2], 0.5),
             } for (cell, pass_), c in sorted(cells.items())},
         "tuner": tuner,
         "cost_model": cost_model,
@@ -161,10 +180,13 @@ def render_text(agg: dict[str, Any]) -> str:
                    f"{_fmt(s['total_s'], 's'):>9s}")
     out += ["", "-- conv1d efficiency (achieved fraction of roofline peak)"]
     for cell, c in agg["conv_cells"].items():
+        pipe = (f" pipe={c['pipe_depth_max']} "
+                f"ovl={_fmt(c['overlap_frac_p50'])}"
+                if c.get("pipe_depth_max", 0) >= 2 else "")
         out.append(f"  {cell:54s} n={c['count']:<4d} "
                    f"{_fmt(c['p50_ms'], 'ms'):>9s} "
                    f"eff={_fmt(c['efficiency_p50'])} "
-                   f"({_fmt(c['gflops_per_s_p50'])} GFLOP/s)")
+                   f"({_fmt(c['gflops_per_s_p50'])} GFLOP/s){pipe}")
     t = agg["tuner"]
     out += ["", f"-- tuner cache: hits {t['hits']} misses {t['misses']} "
                 f"legacy-upgrades {t['legacy_upgrades']} "
@@ -204,7 +226,32 @@ def check(agg: dict[str, Any]) -> list[str]:
         missing.append("steps.phases (no train.phase.* breakdown)")
     if not (agg["tuner"]["hits"] or agg["tuner"]["misses"]):
         missing.append("tuner (no cache hit/miss counters)")
+    missing += _zero_overlap_cells(agg)
     return missing
+
+
+def _zero_overlap_cells(agg: dict[str, Any]) -> list[str]:
+    """Pipelined conv cells whose model-derived overlap fraction is zero
+    (or missing) — a pipelined dispatch that hides nothing is either a
+    broken cost estimate or a degenerate single-tile pipeline the space
+    pruning should have rejected.  Vacuous when nothing pipelined ran."""
+    bad = [cell for cell, c in agg["conv_cells"].items()
+           if c.get("pipe_depth_max", 0) >= 2
+           and not (c.get("overlap_frac_p50", 0.0) > 0.0)]
+    return [f"pipelining (pipelined cell reports zero overlap_frac: {c})"
+            for c in bad]
+
+
+def check_pipelining(agg: dict[str, Any]) -> list[str]:
+    """The bench-smoke pipelining gate: unlike :func:`check` (a training
+    log's sections), this requires that pipelined conv passes actually ran
+    — a sweep log with zero pipelined cells means the ``|pipe:``
+    candidates never dispatched — and that each reports a nonzero
+    model-derived overlap fraction."""
+    if not any(c.get("pipe_depth_max", 0) >= 2
+               for c in agg["conv_cells"].values()):
+        return ["pipelining (no pipelined conv1d pass spans in the log)"]
+    return _zero_overlap_cells(agg)
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -217,6 +264,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="exit 1 unless conv efficiency, step breakdown "
                          "and tuner sections are all present (CI gate)")
+    ap.add_argument("--check-pipelining", action="store_true",
+                    help="exit 1 unless pipelined conv passes ran and "
+                         "every pipelined cell reports a nonzero overlap "
+                         "fraction (bench-smoke CI gate)")
     args = ap.parse_args(argv)
     events = read_events(args.log)
     if not events:
@@ -225,8 +276,9 @@ def main(argv: list[str] | None = None) -> int:
     agg = aggregate(events)
     print(json.dumps(agg, indent=1, default=str) if args.json
           else render_text(agg))
-    if args.check:
-        missing = check(agg)
+    missing = (check(agg) if args.check else []) + (
+        check_pipelining(agg) if args.check_pipelining else [])
+    if args.check or args.check_pipelining:
         if missing:
             print("\nSMOKE GATE FAILED — missing sections:")
             for m in missing:

@@ -38,7 +38,7 @@ from repro.launch.mesh import dp_axis_names, dp_size
 from repro.train.losses import make_loss_fn
 
 
-def make_sharded_grad_fn(cfg, mesh, *, loss_fn=None):
+def make_sharded_grad_fn(cfg, mesh, *, loss_fn=None, grad_reduce_chunks=None):
     """value_and_grad(loss, has_aux=True) over a data-parallel mesh.
 
     ``loss_fn(params, batch) -> (loss, aux)`` defaults to the family loss
@@ -46,6 +46,14 @@ def make_sharded_grad_fn(cfg, mesh, *, loss_fn=None):
     family.  The returned function has the same call signature and return
     structure as ``jax.value_and_grad(loss_fn, has_aux=True)``; batches
     must have their leading (batch) dim divisible by the mesh's dp size.
+
+    ``grad_reduce_chunks`` > 1 (conv family, default loss only) breaks
+    each layer's fused gradient psum into that many width chunks, psummed
+    as the bwd-weight partials complete (DESIGN.md §15): chunk i's
+    all-reduce has no data dependency on chunk i+1's contraction, so
+    XLA's async collectives overlap them — on top of the per-layer
+    overlap the fused reduction already gives.  Same gradients up to fp32
+    summation order.
     """
     axes = dp_axis_names(mesh)
     if not axes:
@@ -56,7 +64,8 @@ def make_sharded_grad_fn(cfg, mesh, *, loss_fn=None):
     fused_reduce = cfg.family == "conv"
     if loss_fn is None:
         loss_fn = make_loss_fn(
-            cfg, grad_reduce_axes=axes if fused_reduce else None)
+            cfg, grad_reduce_axes=axes if fused_reduce else None,
+            grad_reduce_chunks=grad_reduce_chunks if fused_reduce else None)
 
     def local_grad(params, batch):
         def scaled_loss(p, b):

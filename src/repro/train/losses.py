@@ -60,14 +60,16 @@ def streamed_xent(params, hidden, labels, cfg):
     return total / (B * T)
 
 
-def make_loss_fn(cfg, *, grad_reduce_axes=None):
+def make_loss_fn(cfg, *, grad_reduce_axes=None, grad_reduce_chunks=None):
     """Per-family (loss, aux) function over (params, batch).
 
     ``grad_reduce_axes`` marks the loss as running inside a data-parallel
     ``shard_map`` body (``train/data_parallel.py``): the conv family
     threads it down to every fused kernel call so weight/bias gradients
-    all-reduce inside the custom VJPs (DESIGN.md §13).  Other families
-    ignore it — their sharded grad fn reduces the whole gradient tree
+    all-reduce inside the custom VJPs (DESIGN.md §13).
+    ``grad_reduce_chunks`` > 1 additionally chunks each layer's psum
+    across its bwd-weight width partials (DESIGN.md §15).  Other families
+    ignore both — their sharded grad fn reduces the whole gradient tree
     instead."""
     model = get_model(cfg)
 
@@ -76,7 +78,8 @@ def make_loss_fn(cfg, *, grad_reduce_axes=None):
 
         def conv_loss(params, batch):
             return blocks.loss_fn(params, cfg, batch,
-                                  grad_reduce_axes=grad_reduce_axes)
+                                  grad_reduce_axes=grad_reduce_axes,
+                                  grad_reduce_chunks=grad_reduce_chunks)
         return conv_loss
 
     if cfg.family == "encdec":

@@ -68,6 +68,7 @@ class TunedConfig:
     sec: float | None = None     # measured seconds (if any)
     alg: str | None = None       # dense formulation (None -> tap_loop)
     nblk: int | None = None      # batch fold (None -> 1)
+    pipe: int | None = None      # software-pipeline depth (None/0 -> sync)
 
 
 def device_kind() -> str:
@@ -80,11 +81,11 @@ def measurement_enabled() -> bool:
 
 def _make_problem(*, N, C, K, S, dilation, Q, dtype, padding="VALID",
                   depthwise=False, epilogue="none", pass_="fwd",
-                  alg=None, nblk=None) -> ConvProblem:
+                  alg=None, nblk=None, pipe=None) -> ConvProblem:
     return ConvProblem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
                        dtype=str(jax.numpy.dtype(dtype)), padding=padding,
                        depthwise=depthwise, epilogue=epilogue, pass_=pass_,
-                       alg=alg, nblk=nblk)
+                       alg=alg, nblk=nblk, pipe=pipe)
 
 
 def _default_config(prob: ConvProblem) -> TunedConfig:
@@ -97,9 +98,11 @@ def _default_config(prob: ConvProblem) -> TunedConfig:
         # the divisor-of-C ladder is the static fallback
         blk2 = ops.pick_kblk(prob.C)
     # a constrained problem's default still honors the pinned axes
+    # (pipe: the synchronous kernel, like every config that predates §15)
     return TunedConfig(backend,
                        ops.pick_wblk(prob.q_out, prob.S, prob.dilation),
-                       blk2, "default", alg=prob.alg, nblk=prob.nblk)
+                       blk2, "default", alg=prob.alg, nblk=prob.nblk,
+                       pipe=prob.pipe)
 
 
 def tune_problem(prob: ConvProblem, *, cache: TuneCache | None = None,
@@ -141,17 +144,17 @@ def tune_problem(prob: ConvProblem, *, cache: TuneCache | None = None,
                 # obs_report turns these into the cost-model error section
                 _obs.event("tune.search.candidate", problem=key,
                            backend=c.backend, wblk=c.wblk, kblk=c.kblk,
-                           alg=c.alg, nblk=c.nblk,
+                           alg=c.alg, nblk=c.nblk, pipe=c.pipe,
                            predicted_s=_cost.estimate_seconds(
                                c, prob, device_kind=device_kind()),
                            measured_s=sec)
             sec, best = min(timed, key=lambda t: t[0])
             cfg = TunedConfig(best.backend, best.wblk, best.kblk, "measured",
-                              sec, best.alg, best.nblk)
+                              sec, best.alg, best.nblk, best.pipe)
         else:
             best = ranked[0]
             cfg = TunedConfig(best.backend, best.wblk, best.kblk, "cost",
-                              alg=best.alg, nblk=best.nblk)
+                              alg=best.alg, nblk=best.nblk, pipe=best.pipe)
     cache.put(key, {**best.as_entry(), "source": cfg.source, "sec": cfg.sec})
     return cfg
 
@@ -160,6 +163,7 @@ def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
          padding: str = "VALID", depthwise: bool = False,
          epilogue: str = "none", pass_: str = "fwd",
          alg: str | None = None, nblk: int | None = None,
+         pipe: int | None = None,
          shards: int = 1,
          cache: TuneCache | None = None, measure: bool = True,
          top_k: int = 4, iters: int = 5, warmup: int = 2,
@@ -188,7 +192,8 @@ def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
     """
     prob = _make_problem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
                          dtype=dtype, padding=padding, depthwise=depthwise,
-                         epilogue=epilogue, pass_=pass_, alg=alg, nblk=nblk)
+                         epilogue=epilogue, pass_=pass_, alg=alg, nblk=nblk,
+                         pipe=pipe)
     if shards != 1:
         prob = prob.localized(shards)
     return tune_problem(prob, cache=cache, measure=measure, top_k=top_k,
@@ -216,11 +221,12 @@ def get_config_for(prob: ConvProblem, *, cache: TuneCache | None = None,
             # pre-§12 dense entry measured on the historical kernel: it
             # reads back as (tap_loop, unfolded) rather than being re-tuned
             _obs.counter("tune.cache.legacy_upgrade", problem=key)
-        # legacy entries have no alg/nblk fields: they were measured on the
-        # historical kernel, so they read back as (tap_loop, unfolded)
+        # legacy entries have no alg/nblk/pipe fields: they were measured on
+        # the historical kernel, so they read back as (tap_loop, unfolded,
+        # synchronous)
         return TunedConfig(hit["backend"], hit.get("wblk"), hit.get("kblk"),
                            "cache", hit.get("sec"), hit.get("alg"),
-                           hit.get("nblk"))
+                           hit.get("nblk"), hit.get("pipe"))
     _obs.counter("tune.cache.miss", problem=key, pass_=prob.pass_)
     if allow_measure is None:
         allow_measure = measurement_enabled()
@@ -233,12 +239,14 @@ def get_config(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
                dtype, padding: str = "VALID", depthwise: bool = False,
                epilogue: str = "none", pass_: str = "fwd",
                alg: str | None = None, nblk: int | None = None,
+               pipe: int | None = None,
                cache: TuneCache | None = None,
                allow_measure: bool | None = None) -> TunedConfig:
     """Keyword spelling of ``get_config_for``."""
     prob = _make_problem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
                          dtype=dtype, padding=padding, depthwise=depthwise,
-                         epilogue=epilogue, pass_=pass_, alg=alg, nblk=nblk)
+                         epilogue=epilogue, pass_=pass_, alg=alg, nblk=nblk,
+                         pipe=pipe)
     return get_config_for(prob, cache=cache, allow_measure=allow_measure)
 
 

@@ -27,7 +27,11 @@ to one contraction formulation / batch fold appends ``|alg:tap_packed`` /
 unconstrained problem — the form every ``backend='auto'`` lookup uses —
 appends nothing, its entry simply *records* the winning ``alg``/``nblk``
 alongside wblk/kblk.  Legacy entries without those fields read back as the
-historical kernel (tap_loop, unfolded).
+historical kernel (tap_loop, unfolded).  The pipeline-depth axis
+(DESIGN.md §15) follows suit: a ``pipe`` constraint appends ``|pipe:2``
+(``|pipe:0`` pins the synchronous kernel — distinct from None/free), the
+free problem records the winning ``pipe`` in its entry, and legacy
+entries without the field read back as the synchronous kernel.
 
 Path resolution: explicit argument > ``REPRO_TUNE_CACHE`` env var >
 ``~/.cache/repro/tune_cache.json``.  Writes are atomic (tmp file + rename)
@@ -54,7 +58,7 @@ def cache_key(*, device_kind: str, dtype: str, N: int, C: int, K: int,
               S: int, dilation: int, Q: int, padding: str,
               depthwise: bool = False, epilogue: str = "none",
               pass_: str = "fwd", alg: str | None = None,
-              nblk: int | None = None) -> str:
+              nblk: int | None = None, pipe: int | None = None) -> str:
     kind = "dw" if depthwise else "dense"
     base = (f"{device_kind}|{dtype}|N{N}|C{C}|K{K}|S{S}|d{dilation}"
             f"|Q{Q}|{padding}|{kind}")
@@ -70,6 +74,11 @@ def cache_key(*, device_kind: str, dtype: str, N: int, C: int, K: int,
         base = f"{base}|alg:{alg}"
     if nblk:
         base = f"{base}|nblk:{nblk}"
+    # pipeline-depth constraint (DESIGN.md §15): pipe=0 *is* a constraint
+    # (pin the synchronous kernel) and must tag distinctly from None (free),
+    # so the truthiness idiom above does not apply here
+    if pipe is not None:
+        base = f"{base}|pipe:{pipe}"
     return base
 
 

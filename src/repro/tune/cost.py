@@ -1,8 +1,11 @@
 """Analytic roofline cost model for ranking tuner candidates — pass-aware.
 
 Estimates wall-clock for each (backend, wblk, kblk) candidate of a
-``ConvProblem`` from three terms and returns
-``max(compute, memory) + grid overhead``:
+``ConvProblem`` from three terms — compute, memory, and grid overhead —
+combined per the candidate's pipeline schedule (serial ``compute +
+copy`` for the synchronous Pallas kernels, ``max(compute, copy)`` for a
+pipelined one on TPU; the library backend keeps the classic roofline
+``max``):
 
   * compute — useful MACs *on the padded width* ``Qp = round_up(q, wblk)``
     against the pass's output width ``q = problem.q_out`` (bwd-data is one
@@ -46,6 +49,18 @@ Batch folding (``nblk``) shows up as fewer grid cells (overhead), fewer
 tap-block restages (weight traffic is charged per batch×filter-tile cell),
 and a wider GEMM — measurement decides where that wins.
 
+The software-pipeline axis (``pipe``, DESIGN.md §15) changes how the
+compute and copy terms *combine* per grid step: the synchronous kernel
+serializes staging and contraction (``compute + copy``); a pipelined
+kernel on TPU hides the smaller of the two behind the larger each steady
+step (``max(compute, copy)`` + the un-hidden warmup copy of the first
+tile).  Off TPU the interpret fallback stages synchronously, so the model
+charges the serial time *plus* a small rotation-bookkeeping penalty —
+cost-only ranking must never reward a pipeline the device cannot realise.
+``copy_hiding_fraction`` exposes the same terms as the fraction of copy
+time the schedule would hide — the model-derived ``overlap_frac`` the obs
+spans record.
+
 The model only needs to *rank* candidates (prune the space before
 measuring, or pick a default when measurement is disabled), so the peak
 numbers are deliberately coarse.
@@ -78,6 +93,10 @@ EFF_SEQ_GRID = 0.6
 MXU_DIM = 128                   # systolic array edge
 VMEM_BW_RATIO = 8.0             # VMEM bandwidth as a multiple of HBM bw
 OCC_FLOOR = 1e-3                # never divide compute by a zero occupancy
+# per-depth-unit penalty for a pipeline the device cannot realise (the
+# interpret fallback's rotation bookkeeping): keeps off-TPU cost-only
+# ranking on the synchronous kernel
+PIPE_OFF_TPU_PENALTY = 0.05
 
 
 def mxu_occupancy(m: float, k: float, n: float) -> float:
@@ -87,6 +106,55 @@ def mxu_occupancy(m: float, k: float, n: float) -> float:
     frac = (min(1.0, m / MXU_DIM) * min(1.0, k / MXU_DIM)
             * min(1.0, n / MXU_DIM))
     return max(frac, OCC_FLOOR)
+
+
+def _pipe_combine(comp: float, copy: float, pipe: int, steps: int,
+                  on_tpu: bool) -> float:
+    """Combine the pass's compute and staged-copy seconds per the pipeline
+    schedule (DESIGN.md §15).
+
+    Synchronous (``pipe < 2``): the kernel waits on every staged tile
+    before contracting it — the terms serialize (``comp + copy``).
+    Pipelined on TPU: tile i+1's DMA is in flight while tile i contracts,
+    so each steady step costs ``max`` of the two; only the warmup copy of
+    the first tile of each sweep (1 of ``steps``) cannot hide.  Off TPU
+    (interpret fallback stages synchronously) or on a single-step sweep a
+    pipelined body is the serial time plus rotation bookkeeping — never
+    cheaper, so cost-only ranking keeps the synchronous kernel where the
+    device cannot realise the overlap.
+    """
+    serial = comp + copy
+    if pipe < 2:
+        return serial
+    if not on_tpu or steps < 2:
+        return serial * (1.0 + PIPE_OFF_TPU_PENALTY * pipe)
+    return max(comp, copy) + copy / steps
+
+
+def copy_hiding_fraction(prob: ConvProblem, *, wblk: int,
+                         kblk: int | None = None, alg: str | None = None,
+                         nblk: int | None = None, pipe: int = 0,
+                         device_kind: str = "cpu") -> float:
+    """Model-derived fraction of the pass's staged-copy time the pipeline
+    schedule hides behind the contraction (the ``overlap_frac`` recorded
+    in the obs conv-pass spans, DESIGN.md §15).
+
+    Computed from the same roofline terms the ranking uses, *as if* the
+    async DMA engages — i.e. what the schedule is worth on hardware with a
+    DMA engine.  Interpret-mode execution realises none of it (the
+    fallback stages synchronously); the honest container signal is the
+    measured pipelined-vs-synchronous race.  0 for a synchronous kernel or
+    a single-step sweep.
+    """
+    p = int(pipe or 0)
+    if p < 2:
+        return 0.0
+    cand = Candidate("pallas", wblk, kblk, alg, nblk, p)
+    comp, copy, steps, _, _, _ = _pallas_step_terms(cand, prob,
+                                                    device_kind=device_kind)
+    if copy <= 0.0 or steps < 2:
+        return 0.0
+    return (min(comp, copy) / copy) * (steps - 1) / steps
 
 
 def estimate_seconds(cand: Candidate, prob: ConvProblem, *,
@@ -123,6 +191,38 @@ def estimate_seconds(cand: Candidate, prob: ConvProblem, *,
         # peak on both the compute and the traffic axis
         return max(flops / peaks.flops_per_s, mem / peaks.bytes_per_s) / eff
 
+    comp, copy, steps, pack_sec, ovh_sec, seq = _pallas_step_terms(
+        cand, prob, device_kind=device_kind)
+    eff = EFF_PALLAS_TPU if is_tpu else EFF_PALLAS_INTERPRET
+    core = _pipe_combine(comp, copy, int(cand.pipe or 0), steps, is_tpu)
+    return core / (eff * seq) + pack_sec + ovh_sec
+
+
+def _pallas_step_terms(cand: Candidate, prob: ConvProblem, *,
+                       device_kind: str = "cpu"
+                       ) -> tuple[float, float, int, float, float, float]:
+    """Raw roofline terms of one Pallas candidate, split the way the
+    pipeline schedule combines them: ``(comp, copy, steps, pack_sec,
+    overhead_sec, seq_derate)``.
+
+    ``comp`` is the occupancy-derated MXU seconds of the whole pass,
+    ``copy`` the HBM seconds of everything the kernel *stages or stores
+    per grid step* (the traffic a software pipeline can overlap), and
+    ``steps`` the length of one rotation sweep — the divisor of the
+    un-hidden warmup copy (width tiles for the forward-shaped passes,
+    which restart the rotation per (batch, filter-tile) cell; the whole
+    flattened sequential grid for bwd-weight, §15).  Derates (interpret
+    efficiency, the sequential-grid factor) are left to the caller so the
+    hiding *fraction* can be read off these terms directly.
+    """
+    peaks = peaks_for(device_kind)
+    is_tpu = "tpu" in device_kind.lower() or device_kind.lower().startswith("v")
+    db = prob.dtype_bytes
+    nf = prob.n_filters
+    q = prob.q_out
+    has_bias, _, has_residual = _epi.parse(prob.pass_epilogue)
+    flops = conv1d_flops(prob.N, prob.C, 1 if prob.depthwise else prob.K,
+                         prob.S, q)
     wblk = cand.wblk
     alg = cand.alg or "tap_loop"
     nblk = cand.nblk or 1
@@ -132,7 +232,6 @@ def estimate_seconds(cand: Candidate, prob: ConvProblem, *,
     F = wblk + prob.span
     q_tiles = Qp // wblk
     n_cells = max(1, prob.N // nblk)
-    eff = EFF_PALLAS_TPU if is_tpu else EFF_PALLAS_INTERPRET
     # the packed operand is a VMEM->VMEM copy the tap loop never pays
     vmem_bw = peaks.bytes_per_s * VMEM_BW_RATIO
 
@@ -166,9 +265,9 @@ def estimate_seconds(cand: Candidate, prob: ConvProblem, *,
         # pair per *sample*: charge both, so nblk cannot launder per-tile
         # overhead away
         stages = (prob.N * q_tiles * (c_tiles if prob.depthwise else 1))
-        return (max(flops / (peaks.flops_per_s * occ), mem / peaks.bytes_per_s)
-                / (eff * EFF_SEQ_GRID) + pack_sec
-                + (cells + stages) * CELL_OVERHEAD_SEC)
+        return (flops / (peaks.flops_per_s * occ), mem / peaks.bytes_per_s,
+                cells, pack_sec, (cells + stages) * CELL_OVERHEAD_SEC,
+                EFF_SEQ_GRID)
 
     # forward-shaped passes (fwd / bwd-data's transposed GEMM)
     nb = cand.kblk or prob.blk2_dim
@@ -203,8 +302,8 @@ def estimate_seconds(cand: Candidate, prob: ConvProblem, *,
     stores = prob.N * b_tiles * q_tiles
     pack_sec = (db * prob.S * prob.contraction * b_tiles * prob.N * Qp
                 / vmem_bw if packed else 0.0)
-    return (max(flops / (peaks.flops_per_s * occ), mem / peaks.bytes_per_s)
-            / eff + pack_sec + (cells + stores) * CELL_OVERHEAD_SEC)
+    return (flops / (peaks.flops_per_s * occ), mem / peaks.bytes_per_s,
+            q_tiles, pack_sec, (cells + stores) * CELL_OVERHEAD_SEC, 1.0)
 
 
 def rank(cands: list[Candidate], prob: ConvProblem, *,

@@ -78,12 +78,14 @@ def time_candidate(cand: Candidate, prob: ConvProblem, *, iters: int = 5,
             return conv(x, w, bias=bias, activation=activation,
                         residual=residual, dilation=prob.dilation,
                         padding=prob.padding, backend=cand.backend,
-                        wblk=cand.wblk, **{blk2_kw: cand.kblk}, **alg_kw)
+                        wblk=cand.wblk, pipe=cand.pipe,
+                        **{blk2_kw: cand.kblk}, **alg_kw)
         return median_time(f, x, w, iters=iters, warmup=warmup)
 
     # backward pass: pin the candidate onto the target pass of the custom
     # VJP (forward + other pass at defaults) and time the cotangent pull.
-    cfg = (cand.backend, cand.wblk, cand.kblk, cand.alg, cand.nblk)
+    cfg = (cand.backend, cand.wblk, cand.kblk, cand.alg, cand.nblk,
+           cand.pipe)
     bwd_kw = {"bwd_data_cfg": cfg if prob.pass_ == "bwd_data" else None,
               "bwd_weight_cfg": cfg if prob.pass_ == "bwd_weight" else None}
 

@@ -24,6 +24,12 @@ N = 4  # batch (paper used 56/64; scaled to the 1-core container)
 SMOKE = dict(N=1, C=8, K=8, S=3, dilation=2, Q=128, dtype="float32",
              padding="SAME")
 
+# The pipelining race (DESIGN.md §15) needs at least two width tiles to
+# have anything to double-buffer — the Q=128 smoke cell is a single tile
+# at the minimum wblk, so its pipe-race arm runs this wider instance
+# (4 tiles at wblk=128) instead.
+SMOKE_PIPE = dict(SMOKE, Q=512)
+
 # The AtacWorks training cell (paper Table 1 / the 6.86x e2e win) in both
 # precisions: the skinny C=K=15/16, S=51, d=8 body-conv shape the
 # tap-packed formulation (DESIGN.md §12) exists for.  ``scripts/tune.py

@@ -38,7 +38,10 @@ shape coordinates: None (the default, and the form every
 dense contraction formulation (tap_loop / tap_packed) and batch fold, and
 keeps the legacy untagged key.  Setting them restricts the candidate
 space to that formulation/fold and tags the key (``|alg:``/``|nblk:``) so
-head-to-head per-alg measurements get their own cache entries.
+head-to-head per-alg measurements get their own cache entries.  ``pipe``
+(DESIGN.md §15) is the same kind of constraint for the software-pipeline
+depth: None = free (tuner races pipelined vs synchronous), 0 pins the
+synchronous kernel, >= 2 pins that depth and tags the key ``|pipe:``.
 """
 from __future__ import annotations
 
@@ -73,6 +76,7 @@ class ConvProblem:
     pass_: str = PASS_FWD
     alg: str | None = None       # constrain the formulation (None = free)
     nblk: int | None = None      # constrain the batch fold (None = free)
+    pipe: int | None = None      # constrain the pipeline depth (None = free)
 
     def __post_init__(self):
         if self.pass_ not in PASSES:
@@ -81,6 +85,10 @@ class ConvProblem:
             raise ValueError(f"unknown alg {self.alg!r}; expected {ALGS}")
         if self.nblk is not None and (self.nblk < 1 or self.N % self.nblk):
             raise ValueError(f"nblk {self.nblk} does not divide N={self.N}")
+        if self.pipe is not None and self.pipe != 0 and self.pipe < 2:
+            raise ValueError(
+                f"pipe {self.pipe} invalid: 0 (synchronous) or >= 2 "
+                "(a 1-deep pipeline has no lookahead)")
         # canonicalize the dtype spelling so keys are stable however built
         object.__setattr__(self, "dtype", str(jnp.dtype(self.dtype)))
 
@@ -160,4 +168,5 @@ class ConvProblem:
                          C=self.C, K=self.K, S=self.S, dilation=self.dilation,
                          Q=self.Q, padding=self.padding,
                          depthwise=self.depthwise, epilogue=self.epilogue,
-                         pass_=self.pass_, alg=self.alg, nblk=self.nblk)
+                         pass_=self.pass_, alg=self.alg, nblk=self.nblk,
+                         pipe=self.pipe)

@@ -40,6 +40,14 @@ Legality for the Pallas kernels (the shape contract of
 ``prob.alg`` / ``prob.nblk`` constrain the respective axis to one value
 (how per-alg head-to-head measurements are keyed); None searches both
 formulations and every legal fold.
+
+The software-pipeline depth (``pipe``, DESIGN.md §15) is the newest axis:
+0 is the synchronous kernel, depth >= 2 rotates the staged operand tiles
+through a ``pipe``-deep VMEM scratch (plus a 2-slot streamed output
+buffer on forward-shaped passes), so the *extra* in-flight buffers are
+charged to the VMEM budget here — a pipeline that does not fit is never
+enumerated.  Pipelined candidates need >= 2 width tiles (a single-tile
+grid has nothing to look ahead to).
 """
 from __future__ import annotations
 
@@ -55,6 +63,7 @@ LANE = 128                      # TPU lane tile; wblk must be a multiple
 WBLK_CHOICES = (128, 256, 512, 1024)
 KBLK_CHOICES = (8, 16, 32, 64, 128, 256, 512)
 NBLK_CHOICES = (1, 2, 4, 8)      # batch folds searched (must divide N)
+PIPE_CHOICES = (0, 2, 3)         # pipeline depths searched (0 = synchronous)
 VMEM_BUDGET_BYTES = 8 * 2 ** 20  # half of ~16 MiB VMEM (double buffering)
 MAX_PAD_WASTE = 2.0              # round_up(Q, wblk) may at most double work
 
@@ -66,10 +75,12 @@ class Candidate:
     kblk: int | None = None      # pass's second tile knob (kblk/cblk)
     alg: str | None = None       # dense formulation (pallas dense only)
     nblk: int | None = None      # batch fold (pallas dense only)
+    pipe: int | None = None      # software-pipeline depth (0/None = sync)
 
     def as_entry(self) -> dict:
         return {"backend": self.backend, "wblk": self.wblk,
-                "kblk": self.kblk, "alg": self.alg, "nblk": self.nblk}
+                "kblk": self.kblk, "alg": self.alg, "nblk": self.nblk,
+                "pipe": self.pipe}
 
 
 def round_up(x: int, m: int) -> int:
@@ -77,39 +88,51 @@ def round_up(x: int, m: int) -> int:
 
 
 def vmem_footprint_bytes(prob: ConvProblem, wblk: int, kblk: int | None,
-                         alg: str = "tap_loop", nblk: int = 1) -> int:
+                         alg: str = "tap_loop", nblk: int = 1,
+                         pipe: int = 0) -> int:
     """VMEM working set of one grid cell of the problem's pass.
 
     Forward-shaped passes (fwd, bwd-data) stage footprint + taps + output
     tile + fp32 accumulator (+ the forward's fused epilogue operands).
     The bwd-weight pass keeps its fp32 gradient block resident instead.
     Batch folding stages nblk samples per cell; tap_packed adds the packed
-    (S·ctr, nblk·WBLK) operand copy.
+    (S·ctr, nblk·WBLK) operand copy.  A software pipeline (``pipe >= 2``,
+    DESIGN.md §15) rotates the staged operand tiles through ``pipe`` VMEM
+    slots — (pipe-1) extra footprint copies (and cotangent-tile copies for
+    bwd-weight), plus one extra output tile for the forward-shaped passes'
+    2-slot streamed store.
     """
     db = prob.dtype_bytes
     F = wblk + prob.span
     packed = alg == "tap_packed"
+    extra = max(0, int(pipe or 0) - 1)   # in-flight buffers beyond the sync 1
     if prob.pass_ == "bwd_weight":
         if prob.depthwise:
             cblk = kblk or default_cblk(prob.C)
             # resident (S, cblk) fp32 dw tile + x tile + cotangent tile + dbias
-            return 4 * prob.S * cblk + db * (cblk * F + cblk * wblk) + 4 * cblk
+            return (4 * prob.S * cblk + db * (cblk * F + cblk * wblk) + 4 * cblk
+                    + extra * db * (cblk * F + cblk * wblk))
         # resident (S, K, C) fp32 dw block + x tiles + cotangent tiles
         # + dbias (+ the packed operand for tap_packed)
         pack = db * prob.S * prob.C * nblk * wblk if packed else 0
         return (4 * prob.S * prob.K * prob.C
                 + db * nblk * (prob.C * F + prob.K * wblk) + 4 * prob.K
-                + pack)
+                + pack
+                + extra * db * nblk * (prob.C * F + prob.K * wblk))
     has_bias, _, has_residual = _ep.parse(prob.pass_epilogue)
     nb = kblk or prob.blk2_dim   # filter rows per cell (cblk if depthwise)
     ep_bytes = db * (nb * has_bias + nblk * nb * wblk * has_residual)
     if prob.depthwise:          # x tile (cblk, F), w (S, cblk), out + fp32 acc
         return (db * (nb * F + prob.S * nb + nb * wblk)
-                + 4 * nb * wblk + ep_bytes)
+                + 4 * nb * wblk + ep_bytes
+                + extra * db * nb * F
+                + (db * nb * wblk if extra else 0))  # 2nd streamed out slot
     ctr = prob.contraction      # C fwd, K for bwd-data's transposed GEMM
     pack = db * prob.S * ctr * nblk * wblk if packed else 0
     return (db * (nblk * ctr * F + prob.S * nb * ctr + nblk * nb * wblk)
-            + 4 * nb * nblk * wblk + ep_bytes + pack)  # fp32 accumulator
+            + 4 * nb * nblk * wblk + ep_bytes + pack   # fp32 accumulator
+            + extra * db * nblk * ctr * F
+            + (db * nblk * nb * wblk if extra else 0))  # 2nd streamed out slot
 
 
 def _alg_choices(prob: ConvProblem) -> list[str]:
@@ -129,6 +152,16 @@ def _nblk_choices(prob: ConvProblem) -> list[int]:
     if prob.nblk is not None:
         return [prob.nblk]
     return [n for n in NBLK_CHOICES if prob.N % n == 0]
+
+
+def _pipe_choices(prob: ConvProblem) -> list[int]:
+    """Pipeline depths searched: every pass has a pipelined body, so the
+    axis is only constrained by the problem's ``pipe`` pin (the per-depth
+    legality — >= 2 width tiles, VMEM fit — is checked per candidate in
+    ``enumerate_candidates``)."""
+    if prob.pipe is not None:
+        return [prob.pipe]
+    return list(PIPE_CHOICES)
 
 
 def legal_tile_choices(prob: ConvProblem, *,
@@ -173,11 +206,17 @@ def enumerate_candidates(prob: ConvProblem, *,
         for alg in _alg_choices(prob):
             for nblk in _nblk_choices(prob):
                 for wblk, kblk in tiles:
-                    if (alg, nblk) != ("tap_loop", 1) and \
-                            vmem_footprint_bytes(prob, wblk, kblk, alg,
-                                                 nblk) > budget:
-                        continue   # packed/folded working set blew VMEM
-                    cands.append(Candidate("pallas", wblk, kblk, alg, nblk))
+                    for pipe in _pipe_choices(prob):
+                        pipe = int(pipe or 0)
+                        if pipe and round_up(prob.q_out, wblk) // wblk < 2:
+                            continue  # single width tile: nothing to overlap
+                        if ((alg, nblk, pipe) != ("tap_loop", 1, 0)
+                                and vmem_footprint_bytes(
+                                    prob, wblk, kblk, alg, nblk,
+                                    pipe) > budget):
+                            continue  # packed/folded/pipelined set blew VMEM
+                        cands.append(Candidate("pallas", wblk, kblk, alg,
+                                               nblk, pipe))
     if backends is None or "xla" in backends:
         cands.append(Candidate("xla"))
     return cands
