@@ -1,0 +1,139 @@
+"""Streaming-serving latency/throughput: ring-buffer stream vs recompute.
+
+The streaming conv path (DESIGN.md §16) carries per-layer ring buffers of
+the last ``(S-1)*dilation`` input columns, so each served chunk costs
+O(W_chunk) work regardless of how much history the stream has.  The only
+state-free alternative is *full recompute*: re-running the one-shot causal
+forward over the last ``receptive_field + chunk`` columns and keeping the
+final ``chunk`` outputs.  This benchmark times both arms per (dilation,
+batch, chunk) cell:
+
+  * streaming arm — the jitted ``core.streaming.stream_step`` per-chunk
+    latency (p50/p99 over timed calls) plus the derived throughput
+    (streams/s = batch/p50, samples/s = batch*chunk/p50),
+  * baseline arm — the jitted ``blocks.forward(padding="CAUSAL")`` over a
+    ``receptive_field(cfg) + chunk``-wide window (what a stateless server
+    pays for the same chunk of outputs).
+
+``speedup`` = baseline/streaming p50.  Two dilation variants run so the
+artifact shows the gap *growing with the receptive field* — the baseline
+window scales with ``(S-1)*dilation`` while the streaming arm does not.
+
+Emits ``BENCH_serving.json`` in the shared artifact schema (CI uploads the
+``--smoke`` run's file).  ``--smoke`` uses the reduced config; ``--full``
+widens the batch/chunk grid.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_entry, write_bench_json
+from repro import configs
+from repro.configs.base import reduced
+
+
+def _chunk_flops(cfg, batch: int, chunk: int) -> float:
+    """Useful forward FLOPs of one streamed chunk (the 25-layer stack's
+    conv-family formula over ``chunk`` output columns)."""
+    from repro.core.blocks import N_RES_BLOCKS
+    C, S = cfg.conv_channels, cfg.conv_filter
+    per_pt = 2 * S * (C + 2 * N_RES_BLOCKS * C * C + 2 * C)
+    return float(batch * chunk * per_pt)
+
+
+def _sample_times(fn, *args, iters: int, warmup: int = 2) -> list[float]:
+    """Per-call wall-clock samples (not just the median — the artifact
+    reports p99 request latency, which ``time_fn`` discards)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    out = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def _pct(vals: list[float], q: float) -> float:
+    s = sorted(vals)
+    return s[min(len(s) - 1, max(0, round(q * (len(s) - 1))))]
+
+
+def run(smoke: bool = False, full: bool = False):
+    from repro.core import blocks, streaming
+
+    base = configs.get("atacworks")
+    if smoke:
+        # reduced stack, two dilations: enough to show the receptive-field
+        # scaling without CI paying for the 10k-column baseline window
+        cells = [reduced(base, conv_dilation=2), reduced(base, conv_dilation=8)]
+        batches, chunks, iters = [2], [64], 3
+    else:
+        cells = [dataclasses.replace(base, conv_dilation=2), base]
+        batches = [4, 16] if full else [4]
+        chunks, iters = [128, 512], (10 if full else 5)
+
+    rows = []
+    for cfg in cells:
+        model_params = blocks.init_params(jax.random.key(0), cfg)
+        rf = streaming.receptive_field(cfg)
+        for batch in batches:
+            state = streaming.init_stream_state(cfg, batch)
+            for chunk in chunks:
+                key = jax.random.key(batch * 1000 + chunk)
+                x = jax.random.normal(key, (batch, chunk), jnp.float32)
+
+                step = jax.jit(lambda p, s, c: streaming.stream_step(
+                    p, cfg, s, c))
+                ts = _sample_times(step, model_params, state, x,
+                                   iters=iters)
+
+                window = jax.random.normal(key, (batch, rf + chunk),
+                                           jnp.float32)
+                fwd = jax.jit(lambda p, w: blocks.forward(
+                    p, cfg, w, padding="CAUSAL"))
+                tb = _sample_times(fwd, model_params, window, iters=iters)
+
+                p50, p99, b50 = _pct(ts, 0.5), _pct(ts, 0.99), _pct(tb, 0.5)
+                rows.append(dict(
+                    arch=cfg.name, dilation=cfg.conv_dilation,
+                    receptive_field=rf, batch=batch, chunk=chunk,
+                    p50_ms=p50 * 1e3, p99_ms=p99 * 1e3,
+                    baseline_ms=b50 * 1e3, speedup=b50 / p50,
+                    streams_per_s=batch / p50,
+                    samples_per_s=batch * chunk / p50,
+                    flops=_chunk_flops(cfg, batch, chunk), sec=p50))
+    return rows
+
+
+def main(smoke: bool = False, full: bool = False,
+         json_path: str = "BENCH_serving.json"):
+    rows = run(smoke=smoke, full=full)
+    cols = ["arch", "dilation", "receptive_field", "batch", "chunk",
+            "p50_ms", "p99_ms", "baseline_ms", "speedup", "streams_per_s",
+            "samples_per_s"]
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(f"{r[c]:.4g}" if isinstance(r[c], float) else str(r[c])
+                       for c in cols))
+    if json_path:
+        entries = {
+            (f"serve|{r['arch']}|d{r['dilation']}|B{r['batch']}"
+             f"|chunk{r['chunk']}"): bench_entry(
+                r["sec"], flops=r["flops"], source="streaming",
+                p99_ms=r["p99_ms"], baseline_ms=r["baseline_ms"],
+                speedup=r["speedup"], streams_per_s=r["streams_per_s"],
+                samples_per_s=r["samples_per_s"],
+                receptive_field=r["receptive_field"])
+            for r in rows}
+        write_bench_json(json_path, entries)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv, full="--full" in sys.argv)

@@ -28,6 +28,7 @@ DOCTEST_MODULES = [
     "repro.kernels.ops",
     "repro.kernels.sharded",
     "repro.core.conv1d",
+    "repro.core.streaming",
     "repro.tune",
     "repro.obs",
 ]

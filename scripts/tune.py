@@ -7,6 +7,7 @@ all three passes (fwd, bwd_data, bwd_weight) per shape.
     PYTHONPATH=src python scripts/tune.py --smoke                  # CI: tiny shape, 3 passes
     PYTHONPATH=src python scripts/tune.py --smoke --measure --pipe # + pipe-vs-sync race keys
     PYTHONPATH=src python scripts/tune.py --figset atacworks --dp 4  # per-shard (local-N) cells
+    PYTHONPATH=src python scripts/tune.py --figset serving         # streaming-serve chunk cells
 
 Writes one cache entry per (S, Q, pass) cell of the selected figure(s) —
 ``repro.tune.presets`` mirrors the sweep benchmark, so afterwards
@@ -27,7 +28,7 @@ import jax.numpy as jnp
 
 from repro import tune
 from repro.tune.presets import (FIGSETS, SMOKE_PIPE, atacworks_shapes,
-                                figset_shapes, smoke_shapes)
+                                figset_shapes, serving_shapes, smoke_shapes)
 from repro.tune.problem import PASSES
 
 
@@ -35,9 +36,12 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
     ap.add_argument("--figset", default="all",
-                    choices=[*FIGSETS, "atacworks", "all"],
+                    choices=[*FIGSETS, "atacworks", "serving", "all"],
                     help="paper figure to cover ('atacworks' = the e2e "
-                         "training cells, both precisions)")
+                         "training cells, both precisions; 'serving' = "
+                         "the streaming-inference chunk cells at decode "
+                         "batch sizes — forward pass only unless "
+                         "--passes overrides, DESIGN.md §16)")
     ap.add_argument("--full", action="store_true",
                     help="full S/Q grid instead of the CI-sized subset")
     ap.add_argument("--measure", action="store_true",
@@ -95,6 +99,11 @@ def main(argv=None):
     elif args.figset == "atacworks":
         work = [("atacworks", prob) for prob in atacworks_shapes()]
         race_work = list(work)
+    elif args.figset == "serving":
+        work = [("serving", prob) for prob in serving_shapes()]
+        race_work = list(work)
+        if args.passes == "all":  # serving never differentiates
+            passes = ["fwd"]
     else:
         names = list(FIGSETS) if args.figset == "all" else [args.figset]
         work = [(name, prob) for name in names

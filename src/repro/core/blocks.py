@@ -51,7 +51,7 @@ def _fused_default() -> bool:
 
 
 def forward(params, cfg, x, *, backend=None, fused=None, grad_reduce_axes=None,
-            grad_reduce_chunks=None):
+            grad_reduce_chunks=None, padding="SAME"):
     """x: (B, W) noisy coverage track -> (signal (B, W), peak_logits (B, W)).
 
     ``grad_reduce_axes``: mesh axes the batch shards over when this runs
@@ -59,40 +59,49 @@ def forward(params, cfg, x, *, backend=None, fused=None, grad_reduce_axes=None,
     gradient then all-reduces over them, fused per layer after its
     bwd-weight pass (DESIGN.md §13).  ``grad_reduce_chunks`` > 1 further
     chunks each layer's psum across its bwd-weight width partials
-    (DESIGN.md §15)."""
+    (DESIGN.md §15).  ``padding="CAUSAL"`` is the streaming-servable
+    variant (every layer looks back only) — it is the one-shot reference
+    the chunked ``core.streaming`` path matches bitwise (DESIGN.md §16)."""
     if fused is None:
         fused = _fused_default()
     if not fused:
         return forward_unfused(params, cfg, x, backend=backend,
-                               grad_reduce_axes=grad_reduce_axes)
+                               grad_reduce_axes=grad_reduce_axes,
+                               padding=padding)
     d = cfg.conv_dilation
     gra = grad_reduce_axes
     grc = grad_reduce_chunks
     h = x[:, None, :]  # (B, 1, W)
     h = DilatedConv1D.apply(params["stem"], h, dilation=d, backend=backend,
+                            padding=padding,
                             activation="relu", grad_reduce_axes=gra,
                             grad_reduce_chunks=grc)
     for blk in params["res"]:
         r = DilatedConv1D.apply(blk["conv1"], h, dilation=d, backend=backend,
+                                padding=padding,
                                 activation="relu", grad_reduce_axes=gra,
                                 grad_reduce_chunks=grc)
         h = DilatedConv1D.apply(blk["conv2"], r, dilation=d, backend=backend,
+                                padding=padding,
                                 activation="relu", residual=h,
                                 grad_reduce_axes=gra,
                                 grad_reduce_chunks=grc)
     signal = DilatedConv1D.apply(params["head_signal"], h, dilation=d,
                                  backend=backend, activation="relu",
+                                 padding=padding,
                                  out_dtype=jnp.float32,
                                  grad_reduce_axes=gra,
                                  grad_reduce_chunks=grc)[:, 0, :]
     peak = DilatedConv1D.apply(params["head_peak"], h, dilation=d,
                                backend=backend, out_dtype=jnp.float32,
+                               padding=padding,
                                grad_reduce_axes=gra,
                                grad_reduce_chunks=grc)[:, 0, :]
     return signal, peak
 
 
-def forward_unfused(params, cfg, x, *, backend=None, grad_reduce_axes=None):
+def forward_unfused(params, cfg, x, *, backend=None, grad_reduce_axes=None,
+                    padding="SAME"):
     """Pre-fusion baseline: conv, bias-add, fp32 relu round-trip, and
     residual-add as four separate XLA ops per layer.  Kept only as the
     fused-vs-unfused comparison arm of ``bench_atacworks_e2e`` — the model
@@ -105,6 +114,7 @@ def forward_unfused(params, cfg, x, *, backend=None, grad_reduce_axes=None):
 
     def conv_bias(p, h):
         y = DilatedConv1D.apply({"w": p["w"]}, h, dilation=cfg.conv_dilation,
+                                padding=padding,
                                 backend=backend, grad_reduce_axes=axes)
         b = p["b"]
         if axes:  # bias-add is outside the kernel here
@@ -135,3 +145,26 @@ def loss_fn(params, cfg, batch, *, backend=None, peak_weight: float = 1.0,
         jnp.maximum(peak_logits, 0) - peak_logits * labels
         + jnp.log1p(jnp.exp(-jnp.abs(peak_logits))))
     return mse + peak_weight * bce, {"mse": mse, "bce": bce}
+
+
+def init_stream_state(cfg, batch, dtype=jnp.float32):
+    """Streaming-serving state for the conv family — the causal-conv
+    analogue of ``init_cache`` on the decoder families (per-layer
+    ring buffers of the last ``(S-1)*dilation`` input columns).  The
+    streaming step itself lives in ``repro.core.streaming`` (DESIGN.md
+    §16); this re-export gives ``get_model(cfg)`` a uniform serving
+    surface."""
+    from repro.core import streaming
+    return streaming.init_stream_state(cfg, batch, dtype)
+
+
+def stream_step(params, cfg, state, chunk, **kw):
+    """One chunked streaming step; see ``repro.core.streaming.stream_step``."""
+    from repro.core import streaming
+    return streaming.stream_step(params, cfg, state, chunk, **kw)
+
+
+def prefill(params, cfg, history, **kw):
+    """Fused prefill; see ``repro.core.streaming.prefill``."""
+    from repro.core import streaming
+    return streaming.prefill(params, cfg, history, **kw)

@@ -1,0 +1,181 @@
+"""Streaming inference for the dilated-conv family (DESIGN.md §16).
+
+The AtacWorks-style stack has a huge receptive field — 25 causal layers
+each reaching back ``(S-1)*dilation`` columns (400 for the paper's S=51,
+d=8: 10 000 positions total) — so serving chunked input by re-running the
+full receptive field per chunk redoes O(R) work for O(W_chunk) new
+outputs.  This module is the stateful alternative, the causal-conv
+analogue of the SSM conv state in ``models/mamba2.py``:
+
+  * **Ring-buffer state** — one ``(B, C_in, (S-1)*d)`` buffer per conv
+    layer (:func:`init_stream_state`), holding exactly the input columns
+    the next chunk's outputs reach back over.  A fresh buffer is zeros,
+    which *is* the CAUSAL left-padding — so a fresh stream and a one-shot
+    ``blocks.forward(..., padding="CAUSAL")`` agree from the first column.
+  * **Streaming step** — :func:`stream_step` runs every layer as ONE
+    VALID-padded pass over ``state ++ chunk`` through the tuned kernels
+    (``kernels.ops.conv1d_streaming``: tap_packed/tap_loop, fused
+    epilogue, pipelining all inherited) and slides each buffer; outputs
+    are **bitwise** equal (fp32) to the same columns of the one-shot
+    causal forward wherever the backend preserves tap order (ref/pallas
+    always; the xla library may reassociate a degenerate width-1
+    dispatch by ~1 ULP), with zero recompute of the warm-up region.
+  * **Fused prefill** — :func:`prefill` initialises the state from a
+    prompt/history in one full-sequence pass: it *is* ``stream_step`` on a
+    fresh state, so the per-layer ring buffers fall out as a by-product of
+    the forward, not a second pass.
+
+Streaming is causal by construction; SAME/VALID padding need future
+context and raise :class:`StreamingUnsupported` (serve the full sequence
+through ``blocks.forward`` instead).
+
+Example (prefill-then-stream ≡ one-shot, tiny shapes)::
+
+    >>> import jax, jax.numpy as jnp
+    >>> from repro import configs
+    >>> from repro.configs.base import reduced
+    >>> from repro.core import blocks, streaming
+    >>> cfg = reduced(configs.get("atacworks"), conv_dilation=2)
+    >>> params = blocks.init_params(jax.random.key(0), cfg)
+    >>> x = jax.random.normal(jax.random.key(1), (2, 48), jnp.float32)
+    >>> (sig, _), state = streaming.prefill(params, cfg, x[:, :32])
+    >>> (sig2, _), state = streaming.stream_step(params, cfg, state,
+    ...                                          x[:, 32:])
+    >>> one, _ = blocks.forward(params, cfg, x, padding="CAUSAL")
+    >>> bool(jnp.array_equal(jnp.concatenate([sig, sig2], 1), one))
+    True
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+class StreamingUnsupported(ValueError):
+    """The requested conv configuration has no streaming form."""
+
+
+def validate_streamable(padding: str = "CAUSAL") -> None:
+    """Raise :class:`StreamingUnsupported` unless ``padding`` is CAUSAL.
+
+    SAME/VALID padding make output position t depend on *future* input
+    columns; a chunked stream has not received them yet, so there is no
+    state that closes the gap — those configurations are served as
+    full-sequence (one-shot) forwards, not streams."""
+    if padding != "CAUSAL":
+        raise StreamingUnsupported(
+            f"streaming conv1d requires CAUSAL padding; {padding!r} needs "
+            "future context at every output position — run the one-shot "
+            "blocks.forward over the full sequence instead")
+
+
+def layer_span(cfg) -> int:
+    """Columns of carried state per layer: ``(S-1) * dilation``."""
+    return (cfg.conv_filter - 1) * cfg.conv_dilation
+
+
+def receptive_field(cfg) -> int:
+    """Total look-back of the 25-layer stack — what a stateless server
+    would re-run per chunk (the BENCH_serving baseline arm)."""
+    from repro.core.blocks import N_RES_BLOCKS
+    return (2 * N_RES_BLOCKS + 3) * layer_span(cfg)
+
+
+def init_stream_state(cfg, batch: int, dtype=jnp.float32):
+    """Fresh per-layer ring buffers, a pytree mirroring the params tree.
+
+    ``dtype`` must match the stream's *input* dtype (the activations keep
+    the input dtype through the stack — the kernels' mixed-dtype rule), so
+    state updates splice without a cast."""
+    span = cfg.conv_dilation * (cfg.conv_filter - 1)
+    C = cfg.conv_channels
+    buf = lambda c_in: jnp.zeros((batch, c_in, span), dtype)  # noqa: E731
+    from repro.core.blocks import N_RES_BLOCKS
+    return {
+        "stem": buf(1),
+        "res": [{"conv1": buf(C), "conv2": buf(C)}
+                for _ in range(N_RES_BLOCKS)],
+        "head_signal": buf(C),
+        "head_peak": buf(C),
+    }
+
+
+def _fused_default() -> bool:
+    from repro.core.blocks import _fused_default as f
+    return f()
+
+
+def stream_step(params, cfg, state, chunk, *, backend=None, fused=None,
+                padding: str = "CAUSAL"):
+    """One streaming step of the conv stack.
+
+    chunk: (B, W_chunk) new input columns -> ``((signal, peak_logits),
+    new_state)`` with both outputs (B, W_chunk) — the causal forward's
+    values for exactly those columns, computed without touching the
+    receptive-field history (each layer is one VALID pass over
+    ``state ++ chunk``).  ``fused``/``backend`` select the same epilogue
+    fusion and kernel dispatch as ``blocks.forward``; mixing them between
+    prefill and stream steps breaks bitwise (not allclose) equivalence.
+    """
+    validate_streamable(padding)
+    if fused is None:
+        fused = _fused_default()
+    d = cfg.conv_dilation
+    new = {"res": []}
+
+    def layer(p, buf, h, **kw):
+        if fused:
+            return kops.conv1d_streaming(h, p["w"], state=buf,
+                                         bias=p.get("b"), dilation=d,
+                                         backend=backend, **kw)
+        # unfused composition: conv in the kernel, bias/act/residual as
+        # separate ops — mirrors blocks.forward_unfused op for op
+        y, nbuf = kops.conv1d_streaming(h, p["w"], state=buf, dilation=d,
+                                        backend=backend)
+        y = y + p["b"][None, :, None].astype(y.dtype)
+        act = kw.get("activation")
+        res = kw.get("residual")
+        if res is not None:
+            y = (res + y).astype(jnp.float32)
+        elif act is not None or kw.get("out_dtype") is not None:
+            y = y.astype(jnp.float32)
+        if act == "relu":
+            y = jax.nn.relu(y)
+        out_dtype = kw.get("out_dtype")
+        y = y.astype(out_dtype if out_dtype is not None else h.dtype)
+        return y, nbuf
+
+    h = chunk[:, None, :]  # (B, 1, W)
+    h, new["stem"] = layer(params["stem"], state["stem"], h,
+                           activation="relu")
+    for blk, buf in zip(params["res"], state["res"]):
+        r, s1 = layer(blk["conv1"], buf["conv1"], h, activation="relu")
+        h, s2 = layer(blk["conv2"], buf["conv2"], r, activation="relu",
+                      residual=h)
+        new["res"].append({"conv1": s1, "conv2": s2})
+    signal, new["head_signal"] = layer(
+        params["head_signal"], state["head_signal"], h, activation="relu",
+        out_dtype=jnp.float32)
+    peak, new["head_peak"] = layer(
+        params["head_peak"], state["head_peak"], h, out_dtype=jnp.float32)
+    return (signal[:, 0, :], peak[:, 0, :]), new
+
+
+def prefill(params, cfg, history, *, backend=None, fused=None,
+            padding: str = "CAUSAL"):
+    """Initialise streaming state from a prompt/history in ONE pass.
+
+    history: (B, W_hist) -> ``((signal, peak_logits), state)``.  This is
+    ``stream_step`` on a fresh (zeros = causal padding) state: the
+    full-sequence forward runs once through the tuned kernels and every
+    layer's ring buffer is emitted as a by-product of that same pass —
+    there is no second state-extraction sweep.  The history's outputs come
+    for free; continuing with ``stream_step`` on the returned state is
+    bitwise identical (fp32) to one-shot-forwarding the concatenated
+    sequence."""
+    validate_streamable(padding)
+    state = init_stream_state(cfg, history.shape[0], history.dtype)
+    return stream_step(params, cfg, state, history, backend=backend,
+                       fused=fused)

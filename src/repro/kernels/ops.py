@@ -737,6 +737,122 @@ def conv1d(
 
 
 # ---------------------------------------------------------------------------
+# Streaming (chunked causal) conv1d — ring-buffer state, zero recompute
+# ---------------------------------------------------------------------------
+
+
+def conv_stream_state(batch: int, c_in: int, S: int, dilation: int,
+                      dtype=jnp.float32) -> jax.Array:
+    """Fresh per-layer streaming state: the last ``(S-1)*dilation`` input
+    columns the causal conv's receptive field reaches back over, zeros when
+    no history exists yet (zeros ARE the causal left-padding, so a fresh
+    state is exactly the CAUSAL one-shot contract).  Shape
+    ``(batch, c_in, (S-1)*dilation)``."""
+    return jnp.zeros((batch, c_in, (S - 1) * dilation), dtype)
+
+
+def _stream_call(conv_fn, x, w, state, span, kwargs):
+    """Shared streaming engine: prepend the carried footprint, run ONE
+    VALID-padded pass over ``span + W_chunk`` columns (Q = W_chunk — only
+    the new positions are computed, nothing in the warm-up region is
+    redone), and slide the ring buffer to the last ``span`` inputs."""
+    N, C, W = x.shape
+    assert state.shape == (N, C, span), \
+        (f"streaming state shape {state.shape} does not match "
+         f"(N={N}, C_in={C}, span={span})")
+    if state.dtype != x.dtype:
+        raise ValueError(
+            f"streaming state dtype {state.dtype} != chunk dtype {x.dtype}; "
+            "init the state with the stream's input dtype")
+    xc = jnp.concatenate([state, x], axis=-1) if span else x
+    y = conv_fn(xc, w, padding="VALID", **kwargs)
+    new_state = xc[:, :, xc.shape[-1] - span:]
+    return y, new_state
+
+
+def conv1d_streaming(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    state: jax.Array,
+    bias: jax.Array | None = None,
+    activation: str | None = None,
+    residual: jax.Array | None = None,
+    dilation: int = 1,
+    backend: str | None = None,
+    wblk: int | None = None,
+    kblk: int | None = None,
+    alg: str | None = None,
+    nblk: int | None = None,
+    pipe: int | None = None,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One streaming step of a *causal* dilated conv1d: compute the outputs
+    for a new chunk only, carrying O((S-1)*dilation) state instead of
+    re-running the receptive field.
+
+    x: (N, C, W_chunk) new input columns; ``state``: the ring buffer from
+    :func:`conv_stream_state` (fresh stream) or the previous step's return.
+    Returns ``(y, new_state)`` with y (N, K, W_chunk) — **bitwise** equal
+    (fp32; allclose in bf16) to the same columns of a one-shot
+    ``conv1d(full_x, w, padding="CAUSAL")``: the concatenated
+    ``[state | chunk]`` window feeds every output position exactly the taps
+    the full sequence would, through the same tuned kernels (tap order, fp32
+    accumulation, fused epilogue all inherited; ``backend='auto'`` resolves
+    the (N, Q=W_chunk, padding=VALID, epilogue) instance from the tuning
+    cache — pre-populate with ``scripts/tune.py --figset serving``).
+
+    Example (state round-trip, shapes only)::
+
+        >>> import jax, jax.numpy as jnp
+        >>> from repro.kernels import ops
+        >>> w = jnp.ones((3, 4, 4))                 # (S, K, C)
+        >>> st = ops.conv_stream_state(2, 4, S=3, dilation=2)
+        >>> st.shape                                # (N, C, (S-1)*d)
+        (2, 4, 4)
+        >>> y, st = ops.conv1d_streaming(jnp.ones((2, 4, 16)), w, state=st,
+        ...                              dilation=2)
+        >>> y.shape, st.shape
+        ((2, 4, 16), (2, 4, 4))
+    """
+    S, K, C = w.shape
+    return _stream_call(
+        conv1d, x, w, state, (S - 1) * dilation,
+        dict(bias=bias, activation=activation, residual=residual,
+             dilation=dilation, backend=backend, wblk=wblk, kblk=kblk,
+             alg=alg, nblk=nblk, pipe=pipe, out_dtype=out_dtype,
+             interpret=interpret))
+
+
+def depthwise_conv1d_streaming(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    state: jax.Array,
+    bias: jax.Array | None = None,
+    activation: str | None = None,
+    residual: jax.Array | None = None,
+    dilation: int = 1,
+    backend: str | None = None,
+    wblk: int | None = None,
+    cblk: int | None = None,
+    pipe: int | None = None,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Streaming step of the causal depthwise conv1d (the Mamba2/Zamba2
+    decode conv, here with the dilation axis kept general); same state
+    contract and equivalence guarantee as :func:`conv1d_streaming`."""
+    S, C = w.shape
+    return _stream_call(
+        depthwise_conv1d, x, w, state, (S - 1) * dilation,
+        dict(bias=bias, activation=activation, residual=residual,
+             dilation=dilation, backend=backend, wblk=wblk, cblk=cblk,
+             pipe=pipe, out_dtype=out_dtype, interpret=interpret))
+
+
+# ---------------------------------------------------------------------------
 # Depthwise conv1d (Mamba2/Zamba2 causal conv)
 # ---------------------------------------------------------------------------
 

@@ -4,6 +4,13 @@
     forward(params, cfg, tokens, *, extra_embeds=None) -> (logits, aux)
     init_cache(cfg, batch, max_len, dtype) -> cache          (decoders)
     decode_step(params, cfg, cache, tokens, pos) -> (logits, cache)
+
+The conv family serves through ring-buffer streaming instead of a KV
+cache (DESIGN.md §16) and exposes the analogous surface:
+
+    init_stream_state(cfg, batch, dtype) -> state
+    prefill(params, cfg, history) -> ((signal, peak), state)
+    stream_step(params, cfg, state, chunk) -> ((signal, peak), state)
 """
 from __future__ import annotations
 

@@ -16,6 +16,9 @@ Sections (keys of ``aggregate``'s result):
   tuner       cache hits / misses / legacy upgrades / hit rate
   cost_model  predicted-vs-measured ratio distribution over search traces
   steps       train.step count + latency percentiles + phase breakdown
+  serving     streaming conv serving latency (``serve.conv.chunk`` /
+              ``serve.conv.prefill`` request spans): per-chunk p50/p99
+              plus streams/s and samples/s throughput (DESIGN.md §16)
   shards      per-shard step-time stats + straggler verdicts (the gauges
               drive ``runtime/straggler.py`` detection offline)
   counters    raw counter totals
@@ -63,6 +66,7 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
     searches: list[dict] = []
     phase_durs: dict[str, list[float]] = defaultdict(list)
     shard_steps: dict[int, list[tuple[int, float]]] = defaultdict(list)
+    serve_spans: dict[str, list[tuple[float, dict]]] = defaultdict(list)
 
     for r in events:
         kind, name, attrs = r["kind"], r["name"], r.get("attrs", {})
@@ -80,6 +84,8 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
                     c["ovl"].append(float(attrs.get("overlap_frac", 0.0)))
             if name.startswith("train.phase."):
                 phase_durs[name[len("train.phase."):]].append(r["dur"])
+            if name.startswith("serve.conv."):
+                serve_spans[name[len("serve.conv."):]].append((r["dur"], attrs))
         elif kind == "counter":
             counters[name] += r["value"]
         elif kind == "gauge" and name == "train.shard.step_time":
@@ -117,6 +123,24 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
     steps["phases"] = {p: _span_stats(phase_durs[p])
                        for p in PHASES if p in phase_durs}
 
+    serving: dict[str, Any] = {}
+    for phase, recs in sorted(serve_spans.items()):
+        durs = [d for d, _ in recs]
+        s = dict(_span_stats(durs))
+        # with_request_spans stamps batch/chunk as static span attrs
+        s["batch"] = max((int(a.get("batch", 1)) for _, a in recs), default=1)
+        chunk = max((int(a.get("chunk", 0)) for _, a in recs), default=0)
+        if chunk:
+            s["chunk"] = chunk
+        total = s["total_s"]
+        # stream-chunks (batch slots) retired per second of serving wall time
+        s["streams_per_s"] = (len(durs) * s["batch"] / total
+                              if total > 0 else float("nan"))
+        if chunk:
+            s["samples_per_s"] = (len(durs) * s["batch"] * chunk / total
+                                  if total > 0 else float("nan"))
+        serving[phase] = s
+
     shards: dict[str, Any] = {}
     stragglers: list[int] = []
     if shard_steps:
@@ -150,6 +174,7 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
         "tuner": tuner,
         "cost_model": cost_model,
         "steps": steps,
+        "serving": serving,
         "shards": {"per_shard": shards, "stragglers": stragglers},
         "counters": dict(counters),
     }
@@ -202,6 +227,16 @@ def render_text(agg: dict[str, Any]) -> str:
             f"p99 {_fmt(st['p99_s'] * 1e3, 'ms')}"]
     for ph, s in st.get("phases", {}).items():
         out.append(f"     phase {ph:10s} p50 {_fmt(s['p50_s'] * 1e3, 'ms')}")
+    if agg.get("serving"):
+        out.append("-- serving (streaming conv request latency)")
+        for phase, s in agg["serving"].items():
+            thr = (f" {_fmt(s['samples_per_s'])} samples/s"
+                   if "samples_per_s" in s else "")
+            out.append(f"     {phase:8s} n={s['count']:<5d} "
+                       f"p50 {_fmt(s['p50_s'] * 1e3, 'ms')} "
+                       f"p99 {_fmt(s['p99_s'] * 1e3, 'ms')} "
+                       f"batch={s['batch']} "
+                       f"{_fmt(s['streams_per_s'])} stream-chunks/s{thr}")
     sh = agg["shards"]
     if sh["per_shard"]:
         out.append("-- shards")
@@ -242,6 +277,19 @@ def _zero_overlap_cells(agg: dict[str, Any]) -> list[str]:
             for c in bad]
 
 
+def check_serving(agg: dict[str, Any]) -> list[str]:
+    """The serve-smoke CI gate: an instrumented streaming-serve run must
+    have produced per-chunk request spans (``serve.conv.chunk``) with a
+    measurable throughput — a log without them means the serving loop
+    never timed its jitted step through ``with_request_spans``."""
+    s = agg.get("serving", {}).get("chunk")
+    if not s or not s["count"]:
+        return ["serving (no serve.conv.chunk request spans in the log)"]
+    if not (s.get("streams_per_s", 0.0) > 0.0):
+        return ["serving (serve.conv.chunk spans report zero throughput)"]
+    return []
+
+
 def check_pipelining(agg: dict[str, Any]) -> list[str]:
     """The bench-smoke pipelining gate: unlike :func:`check` (a training
     log's sections), this requires that pipelined conv passes actually ran
@@ -268,6 +316,10 @@ def main(argv: list[str] | None = None) -> int:
                     help="exit 1 unless pipelined conv passes ran and "
                          "every pipelined cell reports a nonzero overlap "
                          "fraction (bench-smoke CI gate)")
+    ap.add_argument("--check-serving", action="store_true",
+                    help="exit 1 unless streaming-serve per-chunk request "
+                         "spans with nonzero throughput are present "
+                         "(serve-smoke CI gate)")
     args = ap.parse_args(argv)
     events = read_events(args.log)
     if not events:
@@ -277,8 +329,9 @@ def main(argv: list[str] | None = None) -> int:
     print(json.dumps(agg, indent=1, default=str) if args.json
           else render_text(agg))
     missing = (check(agg) if args.check else []) + (
-        check_pipelining(agg) if args.check_pipelining else [])
-    if args.check or args.check_pipelining:
+        check_pipelining(agg) if args.check_pipelining else []) + (
+        check_serving(agg) if args.check_serving else [])
+    if args.check or args.check_pipelining or args.check_serving:
         if missing:
             print("\nSMOKE GATE FAILED — missing sections:")
             for m in missing:

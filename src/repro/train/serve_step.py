@@ -52,6 +52,47 @@ def make_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
     return model.init_cache(cfg, batch, max_len, dtype=dtype)
 
 
+def make_conv_stream_state(cfg, batch: int, dtype=jnp.float32):
+    """Streaming state for the conv family: per-layer ring buffers of the
+    last ``(S-1)*dilation`` input columns (``repro.core.streaming``) — the
+    causal-conv analogue of ``make_cache`` on the decoder families."""
+    from repro.core import streaming
+    return streaming.init_stream_state(cfg, batch, dtype)
+
+
+def make_conv_stream_step(cfg, *, backend=None, fused=None):
+    """One jit-able chunked streaming step for the conv family.
+
+    ``stream_step(params, state, chunk)`` computes the causal forward's
+    outputs for the chunk's columns only — O(W_chunk) work against the
+    carried O((S-1)*dilation)-per-layer state, zero recompute of the
+    receptive field — and returns ``((signal, peak_logits), new_state)``.
+    Jit with ``donate_argnums=(1,)`` so the ring buffers update in place.
+    """
+    from repro.core import streaming
+
+    def stream_step(params, state, chunk):
+        return streaming.stream_step(params, cfg, state, chunk,
+                                     backend=backend, fused=fused)
+
+    return stream_step
+
+
+def make_conv_prefill_step(cfg, *, backend=None, fused=None):
+    """Fused streaming prefill for the conv family: ONE full-sequence pass
+    over a history/prompt that emits every layer's ring buffer as a
+    by-product (``repro.core.streaming.prefill``) — no second
+    state-extraction sweep.  ``prefill_step(params, history)`` returns
+    ``((signal, peak_logits), state)``; continue with the stream step."""
+    from repro.core import streaming
+
+    def prefill_step(params, history):
+        return streaming.prefill(params, cfg, history, backend=backend,
+                                 fused=fused)
+
+    return prefill_step
+
+
 def make_prefill_step(cfg):
     """Prefill: full-sequence forward, logits for the LAST position only
     (the (B, T, V) logits tensor is never materialised).  This is what the

@@ -45,6 +45,33 @@ ATACWORKS_CELLS = [
 ]
 
 
+# Serving-shaped cells (DESIGN.md §16): the streaming conv1d path issues
+# VALID-padded passes of width span + chunk with Q = chunk, at decode-style
+# batch sizes — nothing the training figsets cover.  Every fused epilogue
+# signature the AtacWorks streaming stack emits is keyed separately
+# (epilogue is part of the cache key), so a streaming step under
+# ``backend='auto'`` resolves tuned plans for each of its layer kinds
+# instead of falling back to the static ladder.  ``scripts/tune.py
+# --figset serving`` pre-populates these (forward pass only — serving
+# never differentiates).
+SERVING_CHUNKS = [128, 512]
+SERVING_BATCHES = [4, 16]
+# body convs dominate (2*11 of 25 layers): conv1 is bias+relu, conv2 is
+# bias+relu+residual; the unfused instance rides along for baselines
+SERVING_EPILOGUES = ["b+relu", "b+relu+r", "none"]
+
+
+def serving_shapes():
+    """The streaming-serving work-list (same schema as ``figset_shapes``,
+    plus an ``epilogue`` field): the paper's AtacWorks body-conv shape at
+    chunked widths × decode batch sizes × the streaming epilogues."""
+    for batch in SERVING_BATCHES:
+        for chunk in SERVING_CHUNKS:
+            for ep in SERVING_EPILOGUES:
+                yield dict(N=batch, C=15, K=15, S=51, dilation=8, Q=chunk,
+                           dtype="float32", padding="VALID", epilogue=ep)
+
+
 def atacworks_shapes():
     """The AtacWorks-cell work-list (same schema as ``figset_shapes``)."""
     yield from (dict(p) for p in ATACWORKS_CELLS)

@@ -1,0 +1,379 @@
+"""Streaming conv1d serving (DESIGN.md §16, docs/serving.md).
+
+Five contracts:
+
+  * **kernel equivalence**: chunked ``conv1d_streaming`` /
+    ``depthwise_conv1d_streaming`` over any chunk schedule (width 1,
+    primes, tiles, ragged tails) must reproduce the one-shot CAUSAL
+    conv — *bitwise* in fp32 (same tap order, same fp32 accumulation),
+    allclose in bf16 — fused and plain epilogue, across backends;
+  * **model equivalence**: ``core.streaming``'s prefill-then-stream over
+    the 25-layer stack ≡ ``blocks.forward(padding="CAUSAL")``, fused and
+    unfused, and the state round-trips through the checkpointer;
+  * **serving loop**: ``ConvStreamServer``'s padded-batch compaction
+    serves every ragged stream the exact one-shot outputs;
+  * **errors**: non-causal padding raises ``StreamingUnsupported``
+    (``SystemExit`` at the launcher), dtype-mismatched state raises;
+  * **tuning + telemetry**: ``--figset serving`` pre-populates cells
+    that ``get_config`` resolves from the cache, and serve request spans
+    aggregate into the ``obs_report`` serving section / its CI gate.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs, tune
+from repro.configs.base import reduced
+from repro.core import blocks, streaming
+from repro.kernels import ops
+
+jax.config.update("jax_enable_x64", False)
+
+CHUNK_SCHEDULES = [
+    [1, 1, 1, 1],          # sample-at-a-time decode
+    [7, 7, 7, 7],          # odd width, not tile-aligned
+    [64, 29],              # tile-sized then a ragged tail
+    [1, 7, 64, 29],        # mixed arrival
+]
+
+
+def _operands(dtype, depthwise, N=2, C=6, K=5, S=5, W=101):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((N, C, W)).astype(np.float32), dtype)
+    wshape = (S, C) if depthwise else (S, K, C)
+    w = jnp.asarray(0.1 * rng.standard_normal(wshape).astype(np.float32),
+                    dtype)
+    nf = C if depthwise else K
+    b = jnp.asarray(0.1 * rng.standard_normal(nf).astype(np.float32), dtype)
+    r = jnp.asarray(0.1 * rng.standard_normal((N, nf, W)).astype(np.float32),
+                    dtype)
+    return x, w, b, r
+
+
+def _assert_match(got, want, dtype):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    if dtype == jnp.float32:
+        assert np.array_equal(got, want), \
+            f"fp32 streaming not bitwise (maxdiff {np.abs(got - want).max()})"
+    else:
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Kernel-level: chunked streaming == one-shot CAUSAL
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunks", CHUNK_SCHEDULES,
+                         ids=lambda c: "x".join(map(str, c)))
+@pytest.mark.parametrize("fused", [False, True], ids=["plain", "fused"])
+@pytest.mark.parametrize("depthwise", [False, True], ids=["dense", "dw"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+def test_kernel_streaming_matches_oneshot(dtype, depthwise, fused, chunks):
+    S, d = 5, 3
+    W = sum(chunks)
+    x, w, b, r = _operands(dtype, depthwise, S=S, W=W)
+    N, C = x.shape[:2]
+    ep = (dict(bias=b, activation="relu", residual=r) if fused else {})
+    one = (ops.depthwise_conv1d if depthwise else ops.conv1d)(
+        x, w, dilation=d, padding="CAUSAL",
+        **({**ep, "residual": r} if fused else {}))
+
+    stream = (ops.depthwise_conv1d_streaming if depthwise
+              else ops.conv1d_streaming)
+    state = ops.conv_stream_state(N, C, S, d, dtype)
+    outs, pos = [], 0
+    for c in chunks:
+        kw = dict(ep)
+        if fused:
+            kw["residual"] = r[:, :, pos:pos + c]
+        y, state = stream(x[:, :, pos:pos + c], w, state=state, dilation=d,
+                          **kw)
+        outs.append(y)
+        pos += c
+    _assert_match(jnp.concatenate(outs, -1), one, dtype)
+    # the carried footprint is exactly the last (S-1)*d input columns
+    # (left-zero-padded while the stream is younger than the span)
+    span = (S - 1) * d
+    padded = jnp.concatenate(
+        [jnp.zeros((N, C, span), dtype), x], -1)[:, :, -span:]
+    assert np.array_equal(np.asarray(state, np.float32),
+                          np.asarray(padded, np.float32))
+
+
+@pytest.mark.parametrize("backend", ["ref", "xla", "pallas"])
+def test_kernel_streaming_bitwise_across_backends(backend):
+    x, w, _, _ = _operands(jnp.float32, False, S=5, W=101)
+    one = ops.conv1d(x, w, dilation=3, padding="CAUSAL", backend=backend)
+    state = ops.conv_stream_state(2, 6, 5, 3)
+    outs, pos = [], 0
+    for c in [1, 7, 64, 29]:
+        y, state = ops.conv1d_streaming(x[:, :, pos:pos + c], w, state=state,
+                                        dilation=3, backend=backend)
+        outs.append(y)
+        pos += c
+    assert np.array_equal(np.asarray(jnp.concatenate(outs, -1)),
+                          np.asarray(one))
+
+
+def test_kernel_streaming_state_dtype_mismatch_raises():
+    x, w, _, _ = _operands(jnp.bfloat16, False, S=5, W=16)
+    state = ops.conv_stream_state(2, 6, 5, 3, jnp.float32)
+    with pytest.raises(ValueError, match="dtype"):
+        ops.conv1d_streaming(x, w, state=state, dilation=3)
+
+
+def test_kernel_streaming_no_state_when_S1():
+    """S=1 has an empty footprint: the stream step is stateless."""
+    x, w, _, _ = _operands(jnp.float32, False, S=1, W=32)
+    state = ops.conv_stream_state(2, 6, 1, 3)
+    assert state.shape[-1] == 0
+    y, new = ops.conv1d_streaming(x, w, state=state, dilation=3)
+    assert new.shape[-1] == 0
+    assert np.array_equal(np.asarray(y),
+                          np.asarray(ops.conv1d(x, w, dilation=3,
+                                                padding="CAUSAL")))
+
+
+# ---------------------------------------------------------------------------
+# Model-level: prefill-then-stream == one-shot causal forward
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = reduced(configs.get("atacworks"), conv_dilation=2)
+    params = blocks.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 101)).astype(np.float32))
+    return cfg, params, x
+
+
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "unfused"])
+@pytest.mark.parametrize("chunks", [[101], [32, 40, 29], [1, 7, 64, 29]],
+                         ids=lambda c: "x".join(map(str, c)))
+def test_model_streaming_matches_oneshot(tiny, fused, chunks):
+    """backend='ref' pins our BRGEMM tap order, so bitwise equality is
+    testable for every chunk schedule.  (The library backend is bitwise
+    too at real chunk widths — the serve-loop test below covers it — but
+    may reassociate a degenerate width-1 dispatch by ~1 ULP.)"""
+    cfg, params, x = tiny
+    want_sig, want_peak = blocks.forward(params, cfg, x, padding="CAUSAL",
+                                         fused=fused, backend="ref")
+    state = streaming.init_stream_state(cfg, x.shape[0])
+    sigs, peaks, pos = [], [], 0
+    for c in chunks:
+        (s, p), state = streaming.stream_step(params, cfg, state,
+                                              x[:, pos:pos + c], fused=fused,
+                                              backend="ref")
+        sigs.append(s)
+        peaks.append(p)
+        pos += c
+    assert np.array_equal(np.asarray(jnp.concatenate(sigs, 1)),
+                          np.asarray(want_sig))
+    assert np.array_equal(np.asarray(jnp.concatenate(peaks, 1)),
+                          np.asarray(want_peak))
+
+
+def test_model_prefill_then_stream_matches_oneshot(tiny):
+    cfg, params, x = tiny
+    want_sig, _ = blocks.forward(params, cfg, x, padding="CAUSAL")
+    (sig_h, _), state = streaming.prefill(params, cfg, x[:, :48])
+    (sig_t, _), _ = streaming.stream_step(params, cfg, state, x[:, 48:])
+    got = jnp.concatenate([sig_h, sig_t], 1)
+    assert np.array_equal(np.asarray(got), np.asarray(want_sig))
+
+
+def test_model_streaming_jit_matches_eager(tiny):
+    """The serving loop jits the step; jit vs eager must stay bitwise."""
+    cfg, params, x = tiny
+    step = jax.jit(lambda p, s, c: streaming.stream_step(p, cfg, s, c))
+    state_j = streaming.init_stream_state(cfg, x.shape[0])
+    state_e = streaming.init_stream_state(cfg, x.shape[0])
+    for pos in range(0, 101, 32):
+        chunk = x[:, pos:pos + 32]
+        (sj, pj), state_j = step(params, state_j, chunk)
+        (se, pe), state_e = streaming.stream_step(params, cfg, state_e, chunk)
+        assert np.array_equal(np.asarray(sj), np.asarray(se))
+        assert np.array_equal(np.asarray(pj), np.asarray(pe))
+
+
+def test_model_state_checkpoint_roundtrip(tiny, tmp_path):
+    """A served stream survives a server restart: save the ring buffers,
+    restore into a fresh template, and the continuation is bitwise."""
+    from repro.checkpoint.checkpoint import Checkpointer
+
+    cfg, params, x = tiny
+    (_, _), state = streaming.prefill(params, cfg, x[:, :48])
+    ckpt = Checkpointer(str(tmp_path / "serve_ckpt"))
+    ckpt.save(state, step=7)
+    assert ckpt.latest_step() == 7
+    template = streaming.init_stream_state(cfg, x.shape[0])
+    restored = ckpt.restore(template)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), state, restored)
+    (sig_a, _), _ = streaming.stream_step(params, cfg, state, x[:, 48:])
+    (sig_b, _), _ = streaming.stream_step(params, cfg, restored, x[:, 48:])
+    assert np.array_equal(np.asarray(sig_a), np.asarray(sig_b))
+
+
+def test_receptive_field_formula(tiny):
+    cfg, _, _ = tiny
+    span = (cfg.conv_filter - 1) * cfg.conv_dilation
+    assert streaming.layer_span(cfg) == span
+    assert streaming.receptive_field(cfg) == \
+        (2 * blocks.N_RES_BLOCKS + 3) * span
+
+
+def test_non_causal_padding_raises(tiny):
+    cfg, params, x = tiny
+    state = streaming.init_stream_state(cfg, x.shape[0])
+    for padding in ("SAME", "VALID"):
+        with pytest.raises(streaming.StreamingUnsupported, match="CAUSAL"):
+            streaming.stream_step(params, cfg, state, x, padding=padding)
+        with pytest.raises(streaming.StreamingUnsupported):
+            streaming.prefill(params, cfg, x, padding=padding)
+
+
+# ---------------------------------------------------------------------------
+# Serving loop: padded-batch compaction over ragged streams
+# ---------------------------------------------------------------------------
+
+
+def test_serve_loop_ragged_streams_match_oneshot(tiny):
+    from repro.launch.serve import ConvStreamServer, StreamRequest
+
+    cfg, params, _ = tiny
+    rng = np.random.default_rng(2)
+    server = ConvStreamServer(params, cfg, batch=2, chunk=32, prompt_len=16)
+    lengths = [70, 33, 95]  # 3 ragged streams over 2 slots: queueing + reuse
+    reqs = []
+    for rid, n in enumerate(lengths):
+        hist = rng.normal(size=16).astype(np.float32) if rid % 2 else None
+        reqs.append(StreamRequest(rid, rng.normal(size=n).astype(np.float32),
+                                  history=hist))
+        server.submit(reqs[-1])
+    done = server.run()
+    assert len(done) == len(lengths) and all(r.done for r in reqs)
+    for req in reqs:
+        full = (np.concatenate([req.history, req.track])
+                if req.history is not None else req.track)
+        sig, peak = blocks.forward(params, cfg, jnp.asarray(full)[None],
+                                   padding="CAUSAL")
+        off = len(full) - len(req.track)
+        got_sig, got_peak = req.result()
+        assert np.array_equal(got_sig, np.asarray(sig)[0, off:])
+        assert np.array_equal(got_peak, np.asarray(peak)[0, off:])
+
+
+def test_serve_launcher_rejects_same_padding():
+    from repro.launch import serve
+
+    with pytest.raises(SystemExit, match="streaming"):
+        serve.main(["--arch", "atacworks", "--smoke", "--conv-padding",
+                    "same"])
+
+
+# ---------------------------------------------------------------------------
+# Tuning: the serving figset pre-populates resolvable cells
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = str(tmp_path / "tune_cache.json")
+    monkeypatch.setenv(tune.cache.ENV_CACHE_PATH, path)
+    tune.reset_default_cache()
+    yield path
+    tune.reset_default_cache()
+
+
+def test_serving_shapes_schema():
+    shapes = list(tune.presets.serving_shapes())
+    assert len(shapes) == (len(tune.presets.SERVING_BATCHES)
+                           * len(tune.presets.SERVING_CHUNKS)
+                           * len(tune.presets.SERVING_EPILOGUES))
+    for prob in shapes:
+        assert prob["padding"] == "VALID"  # state ++ chunk, Q = chunk
+        assert prob["Q"] in tune.presets.SERVING_CHUNKS
+        assert prob["epilogue"] in ("b+relu", "b+relu+r", "none")
+
+
+def test_tune_script_serving_figset(tmp_cache):
+    spec = importlib.util.spec_from_file_location(
+        "tune_script", os.path.join(os.path.dirname(__file__), "..",
+                                    "scripts", "tune.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    mod.main(["--figset", "serving", "--cache", tmp_cache])
+
+    entries = json.load(open(tmp_cache))
+    shapes = list(tune.presets.serving_shapes())
+    for prob in shapes:
+        key = tune.cache_key(device_kind=tune.device_kind(),
+                             dtype=prob["dtype"], N=prob["N"], C=prob["C"],
+                             K=prob["K"], S=prob["S"],
+                             dilation=prob["dilation"], Q=prob["Q"],
+                             padding=prob["padding"],
+                             epilogue=prob["epilogue"])
+        assert key in entries, key
+        # forward-only: the serving figset never tunes backward passes
+        assert not any("|pass:" in k for k in entries)
+
+    # a streaming step's instance resolves from the cache, no measurement
+    prob = dict(shapes[0])
+    prob.pop("dtype")
+    hit = tune.get_config(**prob, dtype=jnp.float32,
+                          cache=tune.TuneCache(tmp_cache))
+    assert hit.source == "cache"
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: request spans -> obs_report serving section + CI gate
+# ---------------------------------------------------------------------------
+
+
+def test_obs_serving_section_and_gate(tiny, tmp_path, monkeypatch):
+    from repro import obs
+    from repro.launch.serve import ConvStreamServer, StreamRequest
+    from repro.obs import report
+
+    cfg, params, _ = tiny
+    path = str(tmp_path / "tel.jsonl")
+    monkeypatch.setenv("REPRO_TELEMETRY", "1")
+    monkeypatch.setenv("REPRO_TELEMETRY_PATH", path)
+    obs.enable(path)
+    try:
+        rng = np.random.default_rng(3)
+        server = ConvStreamServer(params, cfg, batch=2, chunk=32,
+                                  prompt_len=16)
+        server.submit(StreamRequest(
+            0, rng.normal(size=80).astype(np.float32),
+            history=rng.normal(size=16).astype(np.float32)))
+        server.run()
+    finally:
+        obs.disable()
+
+    agg = report.aggregate_path(path)
+    serving = agg["serving"]
+    assert serving["chunk"]["count"] >= 1
+    assert serving["chunk"]["batch"] == 2 and serving["chunk"]["chunk"] == 32
+    assert serving["chunk"]["streams_per_s"] > 0
+    assert serving["chunk"]["samples_per_s"] > 0
+    assert serving["prefill"]["count"] == 1
+    assert report.check_serving(agg) == []
+    assert "serving" in report.render_text(agg)
+
+    # the gate fails a log with no serve spans
+    empty = report.aggregate([])
+    assert report.check_serving(empty)
+    assert report.main([path, "--check-serving"]) == 0
