@@ -23,6 +23,16 @@ Two protocols, because "device" means different silicon in different runs:
     device processes 1/D-th of the batch, and per-device throughput stays
     within the tax of the 1-device run.
 
+A third axis (DESIGN.md §17): ``--layouts`` runs 2D ``(data, model)``
+meshes — ``DPxMP`` cells — where the model axis K-shards every conv layer
+(tensor parallelism).  Model-parallel rows additionally time the bwd-data
+model psum both ways, single all-reduce vs chunked
+(``model_reduce_chunks``), reporting the chunked step as the primary
+``step_time_s`` next to ``model_psum_single_s`` and the speedup.  The
+default smoke arch for layout runs is the paper's BF16 Cooper Lake
+variant (``atacworks-bf16``, C=K=16) because the fp32 AtacWorks body
+(C=K=15) does not divide over mp=2.
+
 Runs in a SUBPROCESS so the virtual-device XLA_FLAGS never leak into the
 calling process (smoke tests and other benches must keep seeing 1 device).
 
@@ -30,6 +40,8 @@ calling process (smoke tests and other benches must keep seeing 1 device).
     PYTHONPATH=src:. python benchmarks/bench_scaling.py --devices 1,2,4,8 \
         --batch 16 --width 4096 --steps 5
     PYTHONPATH=src:. python benchmarks/bench_scaling.py --weak --batch 2
+    PYTHONPATH=src:. python benchmarks/bench_scaling.py \
+        --arch atacworks-bf16 --layouts 1x1,4x1,4x2,2x4 --batch 8
 """
 from __future__ import annotations
 
@@ -50,7 +62,7 @@ if args["force_host"]:  # must happen before jax initialises
 import jax
 from repro import configs
 from repro.data.synthetic import make_batch
-from repro.launch.mesh import make_data_mesh
+from repro.launch.mesh import make_data_mesh, make_grid_mesh
 from repro.models import get_model
 from repro.train.train_step import init_state, make_train_step
 from repro.tune.measure import median_time
@@ -60,34 +72,58 @@ model = get_model(cfg)
 params = model.init_params(jax.random.key(0), cfg)
 
 rows = []
-for d in args["devices"]:
-    gbatch = args["batch"] * (d if args["weak"] else 1)
-    mesh = make_data_mesh(d)
+for dp, mp in args["layouts"]:
+    d = dp * mp
+    if mp > 1 and cfg.conv_channels %% mp:
+        raise SystemExit(
+            f"layout {dp}x{mp}: conv_channels={cfg.conv_channels} does not "
+            "divide over the model axis (pick a divisible arch, e.g. "
+            "atacworks-bf16 with C=K=16; DESIGN.md \N{SECTION SIGN}17)")
+    # the batch shards over the data axis only (devices along 'model'
+    # see the same shard), so --weak grows it with dp, not dp*mp
+    gbatch = args["batch"] * (dp if args["weak"] else 1)
+    mesh = make_data_mesh(dp) if mp == 1 else make_grid_mesh(dp, mp)
     # d == 1 exercises the plain single-program step (the baseline);
-    # d > 1 the shard_map data-parallel path
-    step = jax.jit(make_train_step(cfg, total_steps=100,
-                                   mesh=mesh if d > 1 else None))
+    # d > 1 the shard_map data/model-parallel path
+    step = jax.jit(make_train_step(
+        cfg, total_steps=100, mesh=mesh if d > 1 else None,
+        model_reduce_chunks=args["model_chunks"] if mp > 1 else None))
     batch = make_batch(cfg, gbatch, args["width"], seed=0)
     state = init_state(params)
     sec = median_time(step, state, batch,
                       iters=args["iters"], warmup=args["warmup"])
-    rows.append(dict(devices=d, global_batch=gbatch,
-                     local_batch=gbatch // d, step_time_s=sec,
-                     samples_per_s=gbatch / sec))
-    print(f"# dp={d:2d} batch={gbatch:3d} step={sec*1e3:8.1f}ms "
-          f"{gbatch/sec:8.2f} samples/s", flush=True)
+    row = dict(devices=d, dp=dp, mp=mp, global_batch=gbatch,
+               local_batch=gbatch // dp, step_time_s=sec,
+               samples_per_s=gbatch / sec)
+    note = ""
+    if mp > 1:
+        # the chunked-vs-single model-psum head-to-head: same layout,
+        # bwd-data dx all-reduced in one piece instead of overlapped
+        # width chunks (DESIGN.md \N{SECTION SIGN}17)
+        single = jax.jit(make_train_step(cfg, total_steps=100, mesh=mesh))
+        sec1 = median_time(single, state, batch,
+                           iters=args["iters"], warmup=args["warmup"])
+        row["model_psum_single_s"] = sec1
+        row["model_psum_chunks"] = args["model_chunks"]
+        row["model_psum_chunked_speedup"] = sec1 / sec
+        note = f" psum-chunk x{sec1 / sec:.2f}"
+    rows.append(row)
+    print(f"# dp={dp:2d} mp={mp} batch={gbatch:3d} step={sec*1e3:8.1f}ms "
+          f"{gbatch/sec:8.2f} samples/s{note}", flush=True)
 print("JSON:" + json.dumps(rows))
 """
 
 
-def run(*, arch: str, devices: list[int], batch: int, width: int,
-        iters: int, warmup: int, weak: bool, force_host: bool = True):
-    child_args = dict(arch=arch, devices=devices, batch=batch, width=width,
+def run(*, arch: str, layouts: list[tuple[int, int]], batch: int, width: int,
+        iters: int, warmup: int, weak: bool, force_host: bool = True,
+        model_chunks: int = 2):
+    child_args = dict(arch=arch, layouts=layouts, batch=batch, width=width,
                       iters=iters, warmup=warmup, weak=weak,
-                      force_host=force_host)
+                      force_host=force_host, model_chunks=model_chunks)
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    src = _CHILD % {"ndev": max(devices), "args": json.dumps(child_args)}
+    src = _CHILD % {"ndev": max(dp * mp for dp, mp in layouts),
+                    "args": json.dumps(child_args)}
     proc = subprocess.run([sys.executable, "-c", src], env=env,
                           capture_output=True, text=True, timeout=3000)
     sys.stderr.write(proc.stderr[-2000:] if proc.returncode else "")
@@ -120,9 +156,21 @@ def run(*, arch: str, devices: list[int], batch: int, width: int,
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__,
                                  formatter_class=argparse.RawDescriptionHelpFormatter)
-    ap.add_argument("--arch", default="atacworks")
+    ap.add_argument("--arch", default=None,
+                    help="model config (default atacworks; atacworks-bf16 "
+                         "when --smoke/--layouts include a model axis — "
+                         "C=K=15 does not divide over mp)")
     ap.add_argument("--devices", default="1,2,4,8",
                     help="comma list of data-parallel device counts")
+    ap.add_argument("--layouts", default=None,
+                    help="comma list of DPxMP mesh layouts (e.g. "
+                         "'1x1,4x1,4x2'): overrides --devices and runs "
+                         "each on a 2D (data, model) mesh — the model "
+                         "axis K-shards the conv layers (DESIGN.md §17)")
+    ap.add_argument("--model-chunks", type=int, default=2,
+                    help="model_reduce_chunks for the chunked bwd-data "
+                         "model psum on mp>1 layouts (the single-psum "
+                         "baseline is always timed alongside)")
     ap.add_argument("--batch", type=int, default=8,
                     help="global batch (per-device batch with --weak)")
     ap.add_argument("--width", type=int, default=4096,
@@ -136,20 +184,33 @@ def main(argv=None):
                     help="use the real device set instead of virtual "
                          "host devices")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI cell: 1 vs 8 virtual devices, small width")
+                    help="CI cell: dp-only layouts 1/2/8 plus the 4x2 "
+                         "(data, model) grid, 8 virtual devices, small "
+                         "width")
     ap.add_argument("--json", default="BENCH_scaling.json")
     args = ap.parse_args(argv)
 
-    devices = [int(d) for d in args.devices.split(",")]
+    if args.layouts:
+        layouts = []
+        for cell in args.layouts.split(","):
+            dp, _, mp = cell.lower().partition("x")
+            layouts.append((int(dp), int(mp or 1)))
+    else:
+        layouts = [(int(d), 1) for d in args.devices.split(",")]
     batch, width, iters = args.batch, args.width, args.iters
     if args.smoke:
-        devices, batch, width, iters = [1, 2, 8], 8, 2048, 3
+        layouts, batch, width, iters = [(1, 1), (2, 1), (8, 1), (4, 2)], 8, 2048, 3
+    has_mp = any(mp > 1 for _, mp in layouts)
+    # the fp32 AtacWorks body (C=K=15) cannot K-shard over mp=2; the
+    # paper's BF16 variant (C=K=16) is the layout-grid default
+    arch = args.arch or ("atacworks-bf16" if has_mp else "atacworks")
 
-    rows = run(arch=args.arch, devices=devices, batch=batch, width=width,
+    rows = run(arch=arch, layouts=layouts, batch=batch, width=width,
                iters=iters, warmup=args.warmup, weak=args.weak,
-               force_host=not args.no_force_host)
+               force_host=not args.no_force_host,
+               model_chunks=args.model_chunks)
 
-    cols = ["devices", "global_batch", "step_time_s", "samples_per_s",
+    cols = ["dp", "mp", "global_batch", "step_time_s", "samples_per_s",
             "per_device_samples_per_s", "efficiency"]
     print(",".join(cols))
     for r in rows:
@@ -157,15 +218,27 @@ def main(argv=None):
                        for c in cols))
 
     from benchmarks.common import bench_entry, write_bench_json
-    entries = {
-        f"{args.arch}|W{width}|B{r['global_batch']}|dp{r['devices']}|"
-        f"{r['mode']}": bench_entry(
+    entries = {}
+    for r in rows:
+        # dp-only rows keep the historical dp{D} key so the cross-PR
+        # trajectory stays comparable; 2D layouts get dp{D}xmp{M}
+        layout = (f"dp{r['devices']}" if r["mp"] == 1
+                  else f"dp{r['dp']}xmp{r['mp']}")
+        extra = {}
+        if r["mp"] > 1:
+            extra = dict(model_psum_single_s=r["model_psum_single_s"],
+                         model_psum_chunks=r["model_psum_chunks"],
+                         model_psum_chunked_speedup=r[
+                             "model_psum_chunked_speedup"])
+        entries[f"{arch}|W{width}|B{r['global_batch']}|{layout}|"
+                f"{r['mode']}"] = bench_entry(
             r["step_time_s"],
             samples_per_s=r["samples_per_s"],
             per_device_samples_per_s=r["per_device_samples_per_s"],
             efficiency=r["efficiency"],
-            source="shard_map" if r["devices"] > 1 else "single-device")
-        for r in rows}
+            dp=r["dp"], mp=r["mp"],
+            source="shard_map" if r["devices"] > 1 else "single-device",
+            **extra)
     write_bench_json(args.json, entries)
     return rows
 

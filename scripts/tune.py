@@ -7,6 +7,7 @@ all three passes (fwd, bwd_data, bwd_weight) per shape.
     PYTHONPATH=src python scripts/tune.py --smoke                  # CI: tiny shape, 3 passes
     PYTHONPATH=src python scripts/tune.py --smoke --measure --pipe # + pipe-vs-sync race keys
     PYTHONPATH=src python scripts/tune.py --figset atacworks --dp 4  # per-shard (local-N) cells
+    PYTHONPATH=src python scripts/tune.py --smoke --mp 2           # tensor-parallel local-K/-C cells
     PYTHONPATH=src python scripts/tune.py --figset serving         # streaming-serve chunk cells
 
 Writes one cache entry per (S, Q, pass) cell of the selected figure(s) —
@@ -28,7 +29,8 @@ import jax.numpy as jnp
 
 from repro import tune
 from repro.tune.presets import (FIGSETS, SMOKE_PIPE, atacworks_shapes,
-                                figset_shapes, serving_shapes, smoke_shapes)
+                                figset_shapes, model_sharded_shapes,
+                                serving_shapes, smoke_shapes)
 from repro.tune.problem import PASSES
 
 
@@ -73,6 +75,15 @@ def main(argv=None):
                          "the local N = N/dp each shard_map shard traces "
                          "and looks up (DESIGN.md §13; cells whose batch "
                          "doesn't divide are skipped with a note)")
+    ap.add_argument("--mp", type=int, default=1,
+                    help="pre-tune the PER-SHARD views of each cell under "
+                         "this much model (tensor) parallelism: both the "
+                         "local-K (dense K-sharded layer) and local-C "
+                         "(sharded-input / depthwise channel-group) views "
+                         "are cached at the shapes each model shard "
+                         "traces (DESIGN.md §17; cells where neither "
+                         "K nor C divides are skipped with a note); "
+                         "composes with --dp")
     ap.add_argument("--cache", default=None,
                     help="cache file (default: $REPRO_TUNE_CACHE or "
                          "~/.cache/repro/tune_cache.json)")
@@ -117,45 +128,65 @@ def main(argv=None):
             print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype}: "
                   f"skipped (N={prob['N']} does not divide over dp={args.dp})")
             continue
-        for pass_ in passes:
-            cfg = tune.tune(**prob, dtype=dtype, pass_=pass_, cache=cache,
-                            shards=args.dp, measure=args.measure,
-                            iters=args.iters, top_k=args.top_k,
-                            backends=backends)
-            n += 1
-            sec = f" {cfg.sec:.3e}s" if cfg.sec is not None else ""
-            dp = f" dp={args.dp}" if args.dp != 1 else ""
-            print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype}{dp} "
-                  f"{pass_:>10}: {cfg.backend} wblk={cfg.wblk} "
-                  f"kblk={cfg.kblk} alg={cfg.alg or 'tap_loop'} "
-                  f"nblk={cfg.nblk or 1} [{cfg.source}]{sec}")
+        views = [(None, prob)]
+        if args.mp != 1:
+            views = list(model_sharded_shapes([prob], args.mp))
+            if not views:
+                print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype}: "
+                      f"skipped (neither K={prob['K']} nor C={prob['C']} "
+                      f"divides over mp={args.mp})")
+                continue
+        for view, vprob in views:
+            for pass_ in passes:
+                cfg = tune.tune(**vprob, dtype=dtype, pass_=pass_,
+                                cache=cache, shards=args.dp,
+                                measure=args.measure, iters=args.iters,
+                                top_k=args.top_k, backends=backends)
+                n += 1
+                sec = f" {cfg.sec:.3e}s" if cfg.sec is not None else ""
+                dp = f" dp={args.dp}" if args.dp != 1 else ""
+                mp = f" mp={args.mp}:{view}" if view else ""
+                print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype}"
+                      f"{dp}{mp} {pass_:>10}: {cfg.backend} wblk={cfg.wblk} "
+                      f"kblk={cfg.kblk} alg={cfg.alg or 'tap_loop'} "
+                      f"nblk={cfg.nblk or 1} [{cfg.source}]{sec}")
     if args.pipe:
         for name, prob in race_work:
             prob = dict(prob)
             dtype = jnp.dtype(prob.pop("dtype"))
             if prob["N"] % args.dp:
                 continue  # already reported by the free loop above
-            for pass_ in passes:
-                for pv in (0, 2):
-                    try:
-                        cfg = tune.tune(**prob, dtype=dtype, pass_=pass_,
-                                        cache=cache, shards=args.dp,
-                                        measure=args.measure,
-                                        iters=args.iters, top_k=args.top_k,
-                                        backends=("pallas",), pipe=pv)
-                    except ValueError:
-                        # pinned pipe depth has no legal candidate here
-                        # (e.g. a single-tile Q) — nothing to race
+            views = [(None, prob)]
+            if args.mp != 1:
+                # indivisible cells were already reported above
+                views = list(model_sharded_shapes([prob], args.mp))
+            for view, vprob in views:
+                mp = f" mp={args.mp}:{view}" if view else ""
+                for pass_ in passes:
+                    for pv in (0, 2):
+                        try:
+                            cfg = tune.tune(**vprob, dtype=dtype,
+                                            pass_=pass_, cache=cache,
+                                            shards=args.dp,
+                                            measure=args.measure,
+                                            iters=args.iters,
+                                            top_k=args.top_k,
+                                            backends=("pallas",), pipe=pv)
+                        except ValueError:
+                            # pinned pipe depth has no legal candidate here
+                            # (e.g. a single-tile Q) — nothing to race
+                            print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6}"
+                                  f"{mp} {pass_:>10} pipe:{pv}: skipped "
+                                  "(no legal pipelined tile)")
+                            continue
+                        n += 1
+                        sec = (f" {cfg.sec:.3e}s"
+                               if cfg.sec is not None else "")
                         print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} "
-                              f"{pass_:>10} pipe:{pv}: skipped "
-                              "(no legal pipelined tile)")
-                        continue
-                    n += 1
-                    sec = f" {cfg.sec:.3e}s" if cfg.sec is not None else ""
-                    print(f"{name} S={prob['S']:>2} Q={prob['Q']:>6} {dtype} "
-                          f"{pass_:>10} pipe:{pv}: wblk={cfg.wblk} "
-                          f"kblk={cfg.kblk} alg={cfg.alg or 'tap_loop'} "
-                          f"nblk={cfg.nblk or 1} [{cfg.source}]{sec}")
+                              f"{dtype}{mp} {pass_:>10} pipe:{pv}: "
+                              f"wblk={cfg.wblk} kblk={cfg.kblk} "
+                              f"alg={cfg.alg or 'tap_loop'} "
+                              f"nblk={cfg.nblk or 1} [{cfg.source}]{sec}")
     print(f"\n{n} entries -> {cache.path} ({len(cache)} total)")
 
 

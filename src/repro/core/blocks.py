@@ -51,7 +51,8 @@ def _fused_default() -> bool:
 
 
 def forward(params, cfg, x, *, backend=None, fused=None, grad_reduce_axes=None,
-            grad_reduce_chunks=None, padding="SAME"):
+            grad_reduce_chunks=None, padding="SAME", model_axis=None,
+            model_parallel=1, model_reduce_chunks=None):
     """x: (B, W) noisy coverage track -> (signal (B, W), peak_logits (B, W)).
 
     ``grad_reduce_axes``: mesh axes the batch shards over when this runs
@@ -61,9 +62,31 @@ def forward(params, cfg, x, *, backend=None, fused=None, grad_reduce_axes=None,
     chunks each layer's psum across its bwd-weight width partials
     (DESIGN.md §15).  ``padding="CAUSAL"`` is the streaming-servable
     variant (every layer looks back only) — it is the one-shot reference
-    the chunked ``core.streaming`` path matches bitwise (DESIGN.md §16)."""
+    the chunked ``core.streaming`` path matches bitwise (DESIGN.md §16).
+
+    ``model_axis``/``model_parallel`` additionally K-shard every
+    shardable conv layer over that mesh axis (tensor parallelism,
+    DESIGN.md §17) — params stay replicated, each layer slices its own
+    filter block (``kernels.sharded.shard_param``), computes at local K,
+    and reassembles via ``model_concat``; ``model_reduce_chunks`` chunks
+    each layer's bwd-data model psum.  Requires the fused path and
+    C % model_parallel == 0 (the heads' K=1 layers run replicated —
+    their gradients are identical on every model shard, since shards
+    along 'model' see the same data shard)."""
     if fused is None:
         fused = _fused_default()
+    mp = int(model_parallel) if model_axis is not None else 1
+    if mp > 1:
+        if not fused:
+            raise ValueError(
+                "model-parallel forward requires the fused path "
+                "(REPRO_FUSED_EPILOGUE=0 / fused=False is the pre-fusion "
+                "benchmark baseline only)")
+        return _forward_model_sharded(
+            params, cfg, x, backend=backend, padding=padding,
+            grad_reduce_axes=grad_reduce_axes,
+            grad_reduce_chunks=grad_reduce_chunks, model_axis=model_axis,
+            mp=mp, model_reduce_chunks=model_reduce_chunks)
     if not fused:
         return forward_unfused(params, cfg, x, backend=backend,
                                grad_reduce_axes=grad_reduce_axes,
@@ -100,6 +123,72 @@ def forward(params, cfg, x, *, backend=None, fused=None, grad_reduce_axes=None,
     return signal, peak
 
 
+def _mp_apply(p, h, *, cfg, backend, padding, mp, axis, gra, grc, mrc,
+              activation=None, residual=None, out_dtype=None,
+              input_grad=True):
+    """Apply one conv layer K-sharded over the model axis (inside a
+    shard_map body, DESIGN.md §17).
+
+    Shardable layers (K % mp == 0): slice this shard's filter block from
+    the replicated params (``shard_param`` — its VJP zero-pads + psums the
+    block gradients back to a full replicated dw/dbias), slice the
+    residual activation with a plain ``shard_block`` (its cotangent stays
+    shard-local), run the conv at local K with the dx model-psum fused
+    into its VJP (``model_reduce_axes``, chunked by ``mrc``), and
+    reassemble with ``model_concat`` (gather whose VJP takes this shard's
+    block, pairing with the in-VJP psum).  ``input_grad=False`` skips the
+    dx psum for layers whose input cotangent is never consumed (the
+    stem — x is data, not a function of params).
+
+    Unshardable layers (the heads' K=1 < mp) run replicated: every model
+    shard computes the identical layer on the identical (data-sharded)
+    input, so the data-axis grad reduction alone already yields the same
+    full gradient on every shard."""
+    from repro.kernels import sharded as sh
+
+    K = p["w"].shape[1]
+    if mp == 1 or K % mp:
+        return DilatedConv1D.apply(
+            p, h, dilation=cfg.conv_dilation, backend=backend,
+            padding=padding, activation=activation, residual=residual,
+            out_dtype=out_dtype, grad_reduce_axes=gra,
+            grad_reduce_chunks=grc)
+    local = {"w": sh.shard_param(p["w"], 1, mp, axis)}
+    if "b" in p:
+        local["b"] = sh.shard_param(p["b"], 0, mp, axis)
+    res_l = (sh.shard_block(residual, 1, mp, axis)
+             if residual is not None else None)
+    y = DilatedConv1D.apply(
+        local, h, dilation=cfg.conv_dilation, backend=backend,
+        padding=padding, activation=activation, residual=res_l,
+        out_dtype=out_dtype, grad_reduce_axes=gra, grad_reduce_chunks=grc,
+        model_reduce_axes=(axis,) if input_grad else None,
+        model_reduce_chunks=mrc)
+    return sh.model_concat(y, 1, mp, axis)
+
+
+def _forward_model_sharded(params, cfg, x, *, backend, padding,
+                           grad_reduce_axes, grad_reduce_chunks, model_axis,
+                           mp, model_reduce_chunks):
+    """The fused forward with every shardable layer K-sharded over
+    ``model_axis`` (see ``forward``; same layer graph, same math)."""
+    kw = dict(cfg=cfg, backend=backend, padding=padding, mp=mp,
+              axis=model_axis, gra=grad_reduce_axes,
+              grc=grad_reduce_chunks, mrc=model_reduce_chunks)
+    h = x[:, None, :]  # (B, 1, W)
+    # stem: x is training data — nothing upstream needs dx, skip its psum
+    h = _mp_apply(params["stem"], h, activation="relu", input_grad=False,
+                  **kw)
+    for blk in params["res"]:
+        r = _mp_apply(blk["conv1"], h, activation="relu", **kw)
+        h = _mp_apply(blk["conv2"], r, activation="relu", residual=h, **kw)
+    signal = _mp_apply(params["head_signal"], h, activation="relu",
+                       out_dtype=jnp.float32, **kw)[:, 0, :]
+    peak = _mp_apply(params["head_peak"], h, out_dtype=jnp.float32,
+                     **kw)[:, 0, :]
+    return signal, peak
+
+
 def forward_unfused(params, cfg, x, *, backend=None, grad_reduce_axes=None,
                     padding="SAME"):
     """Pre-fusion baseline: conv, bias-add, fp32 relu round-trip, and
@@ -133,12 +222,16 @@ def forward_unfused(params, cfg, x, *, backend=None, grad_reduce_axes=None,
 
 
 def loss_fn(params, cfg, batch, *, backend=None, peak_weight: float = 1.0,
-            fused=None, grad_reduce_axes=None, grad_reduce_chunks=None):
+            fused=None, grad_reduce_axes=None, grad_reduce_chunks=None,
+            model_axis=None, model_parallel=1, model_reduce_chunks=None):
     """AtacWorks loss: MSE(denoised signal) + BCE(peak calls)."""
     signal, peak_logits = forward(params, cfg, batch["noisy"], backend=backend,
                                   fused=fused,
                                   grad_reduce_axes=grad_reduce_axes,
-                                  grad_reduce_chunks=grad_reduce_chunks)
+                                  grad_reduce_chunks=grad_reduce_chunks,
+                                  model_axis=model_axis,
+                                  model_parallel=model_parallel,
+                                  model_reduce_chunks=model_reduce_chunks)
     mse = jnp.mean((signal - batch["clean"].astype(jnp.float32)) ** 2)
     labels = batch["peaks"].astype(jnp.float32)
     bce = jnp.mean(

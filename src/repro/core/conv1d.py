@@ -40,7 +40,8 @@ class DilatedConv1D:
               activation: str | None = None,
               residual: jax.Array | None = None,
               out_dtype=None, grad_reduce_axes=None,
-              grad_reduce_chunks=None) -> jax.Array:
+              grad_reduce_chunks=None, model_reduce_axes=None,
+              model_reduce_chunks=None) -> jax.Array:
         """x: (N, C_in, W) -> (N, C_out, Q), computing
         ``act(conv(x) + bias + residual)`` in one fused kernel call.
 
@@ -62,6 +63,13 @@ class DilatedConv1D:
         bwd-weight pass's width partials so collective time overlaps the
         remaining contraction (DESIGN.md §15).
 
+        ``model_reduce_axes`` marks the layer as *filter-sharded* over
+        those mesh axes (tensor parallelism, DESIGN.md §17): params hold
+        only this shard's K rows, and the input gradient is finished
+        with a model-axis psum after the bwd-data pass —
+        ``model_reduce_chunks`` > 1 overlaps that psum with the
+        remaining bwd-data contraction, chunk by chunk.
+
         Example::
 
             >>> import jax, jax.numpy as jnp
@@ -79,4 +87,6 @@ class DilatedConv1D:
                            backend=backend, wblk=wblk, kblk=kblk,
                            out_dtype=out_dtype,
                            grad_reduce_axes=grad_reduce_axes,
-                           grad_reduce_chunks=grad_reduce_chunks)
+                           grad_reduce_chunks=grad_reduce_chunks,
+                           model_reduce_axes=model_reduce_axes,
+                           model_reduce_chunks=model_reduce_chunks)

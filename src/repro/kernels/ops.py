@@ -40,6 +40,18 @@
     custom VJP) reduce through an identity-with-psum-cotangent wrapper on
     w/bias.  ``kernels/sharded.py`` wraps all of this into batch-sharded
     entry points.
+  * **model-axis sharded contraction** (``model_reduce_axes``,
+    DESIGN.md §17): inside a ``shard_map`` that shards the *filter*
+    dimension K over a tensor-parallel mesh axis, the forward and
+    bwd-weight passes are psum-free (each shard owns its filter rows),
+    but bwd-data contracts over the sharded K — each shard's ``dx`` is a
+    partial sum.  Passing the model axis name(s) finishes that
+    contraction with a ``lax.psum`` fused after the bwd-data pass;
+    ``model_reduce_chunks`` > 1 splits it across disjoint width chunks so
+    chunk i's all-reduce overlaps chunk i+1's contraction (the §15
+    machinery applied to the activation-gradient collective).  Dense
+    only: a channel-group-sharded depthwise conv has no cross-shard
+    contraction, so ``depthwise_conv1d`` rejects the argument.
 
 Blocking bookkeeping lives here: width is padded up to a multiple of the
 width tile WBLK and sliced back, mirroring the paper's "block length 64"
@@ -285,6 +297,60 @@ def _chunked_psum_bwd_weight(run_range, ranges, axes):
     return total
 
 
+def _static_axis_size(axes) -> int:
+    """Product of the named mesh axis sizes, resolved statically from the
+    trace's axis env (``psum`` of a Python literal folds to a constant
+    under shard_map); 0 when no axis context is available."""
+    try:
+        n = 1
+        for a in axes:
+            n *= jax.lax.psum(1, a)
+        return int(n)
+    except Exception:
+        return 0
+
+
+def _model_psum_event(arr, axes, *, chunk: int, chunks: int, cell=None):
+    """Record one model-axis activation all-reduce as a ``conv.psum.model``
+    event (the psum itself runs inside jit/shard_map tracing, so a timed
+    span is impossible — chunk index, payload bytes, and the mesh extent
+    in the attrs are what ``obs.report`` aggregates, DESIGN.md §17)."""
+    if _obs.enabled():
+        _obs.event("conv.psum.model", axes=",".join(axes), chunk=chunk,
+                   chunks=chunks, mp=_static_axis_size(axes),
+                   bytes=int(arr.size) * jnp.dtype(arr.dtype).itemsize,
+                   **(cell or {}))
+
+
+def _model_psum(dx, axes, *, cell=None):
+    """Single (unchunked) model-axis psum finishing a K-sharded bwd-data
+    contraction: each shard's ``dx`` summed only its local filter rows."""
+    _model_psum_event(dx, axes, chunk=0, chunks=1, cell=cell)
+    return jax.lax.psum(dx, axes)
+
+
+def _chunked_psum_bwd_data(run_range, ranges, axes, *, cell=None):
+    """Chunked model-axis all-reduce of the bwd-data pass (DESIGN.md §17).
+
+    Under K-sharding each shard's dx is a *partial* contraction (its local
+    filter rows only).  ``run_range(lo, hi)`` computes the dx columns of
+    width-chunk [lo, hi); each chunk is psum'd over the model axes the
+    moment it exists — chunk i's all-reduce has no data dependency on
+    chunk i+1's contraction, so XLA's async collectives overlap them —
+    and the reduced chunks concatenate back along width.  Unlike the
+    bwd-weight chunking (which *sums* partials, reordering the fp32
+    accumulation), the chunks here are disjoint column ranges: every
+    output column sums the identical operand set in the identical order,
+    so the result is bitwise equal to the single-psum path when chunk
+    boundaries respect the kernel's width tiling."""
+    parts = []
+    for i, (lo, hi) in enumerate(ranges):
+        part = run_range(lo, hi)
+        _model_psum_event(part, axes, chunk=i, chunks=len(ranges), cell=cell)
+        parts.append(jax.lax.psum(part, axes))
+    return jnp.concatenate(parts, axis=-1)
+
+
 def _dtype_name(a) -> str | None:
     return None if a is None else jnp.dtype(a.dtype).name
 
@@ -322,6 +388,27 @@ def _psum_cotangent_bwd(axes, _, g):
 _psum_cotangent.defvjp(_psum_cotangent_fwd, _psum_cotangent_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _model_psum_cotangent(axes: tuple[str, ...], cell, p):
+    """``_psum_cotangent`` for the model-axis dx reduction on the xla/ref
+    top-level paths, emitting the same ``conv.psum.model`` telemetry
+    record the custom-VJP paths do (``cell`` is the layer identity as a
+    hashable tuple of attrs — nondiff args must hash)."""
+    return p
+
+
+def _model_psum_cotangent_fwd(axes, cell, p):
+    return p, None
+
+
+def _model_psum_cotangent_bwd(axes, cell, _, g):
+    return (_model_psum(g, axes, cell=dict(cell)),)
+
+
+_model_psum_cotangent.defvjp(_model_psum_cotangent_fwd,
+                             _model_psum_cotangent_bwd)
+
+
 class _FusedSpec(NamedTuple):
     """Static (hashable) configuration of one fused conv instance — the
     nondiff argument of the custom_vjp s.  ``blk2`` is kblk for the dense
@@ -336,7 +423,11 @@ class _FusedSpec(NamedTuple):
     synchronous kernel, §15); ``reduce_chunks`` splits the fused gradient
     all-reduce into that many width chunks, psum'd as each chunk's
     bwd-weight partial completes so collective time hides behind the
-    remaining contraction (1 = the PR 5 single fused psum)."""
+    remaining contraction (1 = the PR 5 single fused psum).
+    ``model_axes`` names the mesh axes the *filter dimension* K is sharded
+    over (tensor parallelism, §17): bwd-data's dx is then a partial
+    contraction finished with a psum over those axes, chunked across
+    ``model_chunks`` disjoint width ranges (1 = one psum)."""
     dilation: int
     wblk: int
     blk2: int | None
@@ -352,6 +443,8 @@ class _FusedSpec(NamedTuple):
     reduce_axes: tuple[str, ...] | None = None
     pipe: int = 0
     reduce_chunks: int = 1
+    model_axes: tuple[str, ...] | None = None
+    model_chunks: int = 1
 
     @property
     def out_jnp_dtype(self):
@@ -501,32 +594,74 @@ def _conv1d_pallas_bwd(spec, res, gout):
     bd = spec.bwd_data or PassConfig("pallas", spec.wblk, None)
     g_pad = jnp.pad(du, ((0, 0), (0, 0), (span, span)))
     w_flip = w[::-1].transpose(0, 2, 1)  # (S, C, K)
+    cell = dict(N=N, C=C, K=K, S=S, dilation=d, Q=Q,
+                dtype=jnp.dtype(x.dtype).name, depthwise=False)
     if bd.backend == "xla":
-        bd_thunk = lambda: _ref._xla_conv1d_f32(g_pad, w_flip, d)  # noqa: E731
         bd_attrs = dict(backend="xla")
+        if spec.model_axes and spec.model_chunks > 1 and W > 1:
+            # K is device-sharded (§17): finish the partial contraction
+            # with the model-axis psum, chunked on raw output columns
+            ranges = _chunk_ranges(W, spec.model_chunks)
+            bd_thunk = lambda: _chunked_psum_bwd_data(  # noqa: E731
+                lambda a, b: _ref._xla_conv1d_f32(
+                    g_pad[:, :, a:b + span], w_flip, d),
+                ranges, spec.model_axes, cell=cell)
+            bd_attrs["model_chunks"] = len(ranges)
+        elif spec.model_axes:
+            bd_thunk = lambda: _model_psum(  # noqa: E731
+                _ref._xla_conv1d_f32(g_pad, w_flip, d), spec.model_axes,
+                cell=cell)
+        else:
+            bd_thunk = lambda: _ref._xla_conv1d_f32(g_pad, w_flip, d)  # noqa: E731
     else:
         # the pass's filter tile must divide C (bwd-data's filter count);
         # a kblk tuned for K need not — fall back to the divisor ladder
         kblk = bd.blk2 if bd.blk2 and C % bd.blk2 == 0 else pick_kblk(C)
         bd_pipe = _k.canon_pipe(bd.pipe)
-        bd_thunk = lambda: _plain_fwd_padded(  # noqa: E731
-            g_pad, w_flip, d, bd.wblk or spec.wblk, kblk,
+        bd_wblk = bd.wblk or spec.wblk
+        bd_run = lambda: _plain_fwd_padded(  # noqa: E731
+            g_pad, w_flip, d, bd_wblk, kblk,
             spec.interpret, pass_="bwd_data",
             alg=bd.alg or "tap_loop", nblk=bd.nblk or 1, pipe=bd_pipe)
-        bd_attrs = dict(backend="pallas", wblk=bd.wblk or spec.wblk,
+        bd_attrs = dict(backend="pallas", wblk=bd_wblk,
                         kblk=kblk, alg=bd.alg or "tap_loop",
                         nblk=bd.nblk or 1,
                         **_pipe_attrs(bd_pipe, pass_="bwd_data", N=N, C=C,
                                       K=K, S=S, dilation=d, Q=Q,
                                       dtype=x.dtype, depthwise=False,
-                                      wblk=bd.wblk or spec.wblk, kblk=kblk,
+                                      wblk=bd_wblk, kblk=kblk,
                                       alg=bd.alg or "tap_loop",
                                       nblk=bd.nblk or 1))
+        Wp = _round_up(W, bd_wblk)
+        nw = Wp // bd_wblk
+        if spec.model_axes and spec.model_chunks > 1 and nw > 1:
+            # chunk boundaries in units of the pass's width tile, so every
+            # chunk keeps the kernel's tiling and stays bitwise equal to
+            # the single-psum path (disjoint columns, identical tap order)
+            gp2 = (jnp.pad(g_pad,
+                           ((0, 0), (0, 0),
+                            (0, Wp + span - g_pad.shape[-1])))
+                   if Wp + span > g_pad.shape[-1] else g_pad)
+            ranges = _chunk_ranges(nw, spec.model_chunks)
+            bd_thunk = lambda: _chunked_psum_bwd_data(  # noqa: E731
+                lambda a, b: _plain_fwd_padded(
+                    gp2[:, :, a * bd_wblk:b * bd_wblk + span], w_flip, d,
+                    bd_wblk, kblk, spec.interpret, pass_="bwd_data",
+                    alg=bd.alg or "tap_loop", nblk=bd.nblk or 1,
+                    pipe=bd_pipe),
+                ranges, spec.model_axes, cell=cell)[:, :, :W]
+            bd_attrs["model_chunks"] = len(ranges)
+        elif spec.model_axes:
+            bd_thunk = lambda: _model_psum(  # noqa: E731
+                bd_run(), spec.model_axes, cell=cell)
+        else:
+            bd_thunk = bd_run
+    if spec.model_axes:
+        bd_attrs["model_axes"] = ",".join(spec.model_axes)
     # bwd-data contracts over K and produces all W output columns
     dx = _obs_conv(
         "bwd_data", bd_thunk, args=(x, du), flops=2.0 * N * C * K * S * W,
-        attrs=dict(bd_attrs, N=N, C=C, K=K, S=S, dilation=d, Q=Q,
-                   dtype=jnp.dtype(x.dtype).name, depthwise=False))
+        attrs=dict(bd_attrs, **cell))
     dx = dx.astype(x.dtype)
     # --- Alg. 4: bwd-weight kernel (fp32 accumulation), with the bias
     # gradient fused into the same sequential-grid pass when bias exists —
@@ -616,6 +751,8 @@ def conv1d(
     bwd_weight_cfg=None,
     grad_reduce_axes=None,
     grad_reduce_chunks: int | None = None,
+    model_reduce_axes=None,
+    model_reduce_chunks: int | None = None,
 ) -> jax.Array:
     """1D dilated convolution with fused epilogue, paper semantics.
 
@@ -666,10 +803,24 @@ def conv1d(
     ``grad_reduce_chunks`` > 1 splits that fused all-reduce into width
     chunks psum'd as each bwd-weight partial completes, overlapping
     collective time with the remaining contraction (DESIGN.md §15).
+
+    ``model_reduce_axes`` marks the call as *filter-sharded* (tensor
+    parallelism, DESIGN.md §17): w/bias hold only this shard's K rows,
+    sharded over those mesh axes.  Forward and bwd-weight need no
+    collective (each shard owns its filter slice); bwd-data contracts
+    over the sharded K, so dx is finished with a ``lax.psum`` over the
+    model axes fused after the bwd-data pass.  ``model_reduce_chunks``
+    > 1 splits that psum across disjoint width chunks, overlapping chunk
+    i's all-reduce with chunk i+1's contraction (bitwise equal to the
+    single psum on the pallas path — disjoint columns, identical tap
+    order).  Use ``kernels.sharded.model_sharded_conv1d`` for the wrapped
+    spelling; composes with ``grad_reduce_axes`` on a 2D (data, model)
+    mesh.
     """
     backend = backend or default_backend()
     activation = _ep.canon(activation)
     grad_reduce_axes = _axes_tuple(grad_reduce_axes)
+    model_reduce_axes = _axes_tuple(model_reduce_axes)
     bwd_data_cfg = _as_pass_cfg(bwd_data_cfg)
     bwd_weight_cfg = _as_pass_cfg(bwd_weight_cfg)
     S, K, C = w.shape
@@ -700,6 +851,14 @@ def conv1d(
         w = _psum_cotangent(grad_reduce_axes, w)
         if bias is not None:
             bias = _psum_cotangent(grad_reduce_axes, bias)
+    if backend in ("ref", "xla") and model_reduce_axes:
+        # same trick for the K-sharded contraction: dx all-reduces over
+        # the model axes (single psum — the chunked overlap is a property
+        # of the custom-VJP pallas/xla PassConfig path)
+        cell = (("N", x.shape[0]), ("C", C), ("K", K), ("S", S),
+                ("dilation", dilation), ("Q", Q),
+                ("dtype", jnp.dtype(x.dtype).name), ("depthwise", False))
+        x = _model_psum_cotangent(model_reduce_axes, cell, x)
     N = x.shape[0]
     attrs = dict(backend=backend, N=N, C=C, K=K, S=S, dilation=dilation,
                  Q=Q, dtype=jnp.dtype(x.dtype).name, depthwise=False)
@@ -722,7 +881,10 @@ def conv1d(
                           alg or "tap_loop", _legal_nblk(nblk, x.shape[0]),
                           grad_reduce_axes, _k.canon_pipe(pipe),
                           int(grad_reduce_chunks or 1)
-                          if grad_reduce_axes else 1)
+                          if grad_reduce_axes else 1,
+                          model_axes=model_reduce_axes,
+                          model_chunks=int(model_reduce_chunks or 1)
+                          if model_reduce_axes else 1)
         attrs.update(alg=spec.alg, nblk=spec.nblk, wblk=wblk, kblk=kblk,
                      **_pipe_attrs(spec.pipe, pass_="fwd", N=N, C=C, K=K,
                                    S=S, dilation=dilation, Q=Q,
@@ -1033,6 +1195,7 @@ def depthwise_conv1d(
     bwd_weight_cfg=None,
     grad_reduce_axes=None,
     grad_reduce_chunks: int | None = None,
+    model_reduce_axes=None,
 ) -> jax.Array:
     """Depthwise 1D conv with fused epilogue.  x: (N, C, W), w: (S, C)
     -> (N, C, Q); bias (C,), residual (N, C, Q), same epilogue order as
@@ -1050,6 +1213,12 @@ def depthwise_conv1d(
     (DESIGN.md §15).  ``pipe`` pins the software-pipeline depth as in
     ``conv1d``.
 
+    ``model_reduce_axes`` is *rejected* here: a channel-group-sharded
+    depthwise conv (x and w both sharded on C over the model axis) has no
+    cross-shard contraction — each output channel reads only its own
+    input channel, so dx stays local and no model-axis collective exists
+    on any pass (DESIGN.md §17).
+
     Example (Mamba2-style causal conv, shapes only)::
 
         >>> import jax.numpy as jnp
@@ -1062,6 +1231,13 @@ def depthwise_conv1d(
         ...                      activation="silu").shape
         (2, 16, 64)
     """
+    if _axes_tuple(model_reduce_axes):
+        raise ValueError(
+            "depthwise_conv1d has no model-axis contraction to reduce: "
+            "under channel-group sharding every output channel depends "
+            "only on its own input channel, so dx/dw/dbias all stay local "
+            "to the shard — shard x and w on C over the model axis and "
+            "drop model_reduce_axes (DESIGN.md §17)")
     backend = backend or default_backend()
     activation = _ep.canon(activation)
     grad_reduce_axes = _axes_tuple(grad_reduce_axes)

@@ -26,6 +26,30 @@ data axes:
     directly after the bwd-weight pass in the custom VJP.  ``dx`` stays
     local either way.
 
+**Model-axis (tensor-parallel) spellings** (DESIGN.md §17) compose with
+the above on a 2D ``(data, model)`` mesh:
+
+  * ``model_sharded_conv1d`` K-shards the dense filter dimension: ``w``
+    partitions its K axis (``P(None, 'model', None)``), ``x`` replicates
+    across 'model', and the output is a **psum-free concat** along K —
+    each shard computes its own filter slice.  Differentiating through
+    it, shard_map's transpose inserts exactly the right collectives: dx
+    psums over 'model' (x was replicated there), dw/dbias psum over the
+    data axes only (w was replicated there) and stay K-local.
+  * ``model_sharded_depthwise_conv1d`` channel-group-shards: x and w both
+    partition C over 'model'; **no** model-axis collective exists on any
+    pass (each output channel reads only its own input channel).
+  * grads taken *inside* a shard body (the training path) get no help
+    from shard_map: compose ``shard_param`` (slice a replicated weight to
+    this shard's block; its VJP zero-pads and psums the block gradients
+    back to a full replicated gradient), ``shard_block`` (plain slice for
+    activations whose cotangent must stay shard-local, e.g. the
+    residual), ``ops.conv1d(model_reduce_axes=...)`` (fuses the dx psum —
+    chunked via ``model_reduce_chunks``), and ``model_concat`` (tiled
+    all_gather whose VJP takes this shard's block *without* a psum — see
+    its docstring for why jax's default reduce-scatter transpose would
+    double-count here).
+
 ``shard_map`` is used with ``check_rep=False`` (required for bodies
 containing custom_vjp calls on jax 0.4.x).
 
@@ -39,14 +63,21 @@ Example (single host; any device count divides the batch)::
     >>> w = jnp.ones((3, 4, 8))
     >>> sharded_conv1d(x, w, mesh=mesh, dilation=2, padding="SAME").shape
     (4, 4, 64)
+    >>> from repro.kernels.sharded import model_sharded_conv1d
+    >>> model_sharded_conv1d(x, w, mesh=mesh, dilation=2,
+    ...                      padding="SAME").shape
+    (4, 4, 64)
 """
 from __future__ import annotations
 
+import functools
+
 import jax
+import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.launch.mesh import dp_axis_names, dp_size
+from repro.launch.mesh import MP_AXIS, dp_axis_names, dp_size
 
 from . import ops
 
@@ -113,3 +144,169 @@ def sharded_depthwise_conv1d(x, w, *, mesh, bias=None, residual=None,
     ``sharded_conv1d``)."""
     return _sharded_call(ops.depthwise_conv1d, mesh, x, w, bias, residual,
                          kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Model-axis (tensor-parallel) sharding — DESIGN.md §17
+# ---------------------------------------------------------------------------
+
+
+def _check_model(mesh, *, K=None, C=None, depthwise=False) -> int:
+    """Validate the mesh has a 'model' axis and the sharded dimension
+    divides over it; returns mp (the model-axis size, possibly 1)."""
+    if MP_AXIS not in mesh.axis_names:
+        raise ValueError(
+            f"mesh {tuple(mesh.axis_names)} has no '{MP_AXIS}' axis to "
+            "shard filters/channels over (build one with "
+            "make_host_mesh(model=...) or runtime.elastic.plan_mesh)")
+    mp = mesh.shape[MP_AXIS]
+    if depthwise:
+        if C % mp:
+            raise ValueError(
+                f"channel count C={C} does not divide over mp={mp} model "
+                "shards (depthwise channel groups must split evenly); "
+                "pick C % mp == 0 or lower the model axis")
+    elif K % mp:
+        raise ValueError(
+            f"filter count K={K} does not divide over mp={mp} model "
+            "shards; pick K % mp == 0 or lower the model axis")
+    return mp
+
+
+def _shard_slice(a, dim: int, mp: int, axis: str):
+    """This shard's contiguous block of ``a`` along ``dim`` (size/mp)."""
+    size = a.shape[dim] // mp
+    i = jax.lax.axis_index(axis)
+    return jax.lax.dynamic_slice_in_dim(a, i * size, size, dim)
+
+
+def shard_block(a, dim: int, mp: int, axis: str):
+    """Slice a *sharded-activation* operand (e.g. the residual feeding a
+    K-sharded conv) to this shard's block.  Plain autodiff is already
+    right: the transpose zero-pads the block cotangent back — NO psum,
+    because each shard's block cotangent is a distinct piece of the full
+    activation's gradient, not a partial sum of it."""
+    return _shard_slice(a, dim, mp, axis)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def shard_param(a, dim: int, mp: int, axis: str):
+    """Slice a **replicated parameter** to this shard's block along
+    ``dim``.  The custom VJP zero-pads the block gradient into the full
+    shape and psums over the model axis, so every shard ends the backward
+    pass with the identical *full* parameter gradient — the optimizer
+    state stays mesh-agnostic (unsharded), exactly as in the
+    data-parallel path.  (Plain autodiff would stop at the local zero-pad
+    and leave each shard a different, mostly-zero gradient.)"""
+    return _shard_slice(a, dim, mp, axis)
+
+
+def _shard_param_fwd(a, dim, mp, axis):
+    return _shard_slice(a, dim, mp, axis), None
+
+
+def _shard_param_bwd(dim, mp, axis, _, g):
+    full = jnp.zeros(g.shape[:dim] + (g.shape[dim] * mp,) + g.shape[dim + 1:],
+                     g.dtype)
+    i = jax.lax.axis_index(axis)
+    full = jax.lax.dynamic_update_slice_in_dim(full, g, i * g.shape[dim], dim)
+    return (jax.lax.psum(full, axis),)
+
+
+shard_param.defvjp(_shard_param_fwd, _shard_param_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def model_concat(y, dim: int, mp: int, axis: str):
+    """Reassemble a K-sharded layer output: tiled ``all_gather`` along
+    ``dim`` (the psum-free concat — forward needs no reduction, each shard
+    owns its filter rows).
+
+    The custom VJP slices this shard's own block of the cotangent,
+    **without** a psum.  jax's default transpose of a tiled all_gather is
+    a reduce-scatter (psum_scatter) — correct when the per-shard
+    cotangents are arbitrary partial sums, but in this stack the conv
+    VJP's ``model_reduce_axes`` psum has *already* all-reduced the
+    gathered activation's gradient (it is replicated across model shards,
+    plus this shard's local residual-block cotangent); re-reducing would
+    multiply the replicated part by mp.  Pairing gather-bwd=own-slice
+    with the in-VJP chunked model psum is what lets the dx all-reduce
+    overlap the bwd-data contraction instead of serialising at the
+    gather."""
+    return jax.lax.all_gather(y, axis, axis=dim, tiled=True)
+
+
+def _model_concat_fwd(y, dim, mp, axis):
+    return jax.lax.all_gather(y, axis, axis=dim, tiled=True), None
+
+
+def _model_concat_bwd(dim, mp, axis, _, g):
+    return (_shard_slice(g, dim, mp, axis),)
+
+
+model_concat.defvjp(_model_concat_fwd, _model_concat_bwd)
+
+
+def _model_sharded_call(fn, mesh, x, w, bias, residual, kwargs, *,
+                        depthwise: bool):
+    """shard_map ``fn`` on a 2D (data, model) mesh: batch over the data
+    axes; filters (dense) or channel groups (depthwise) over 'model'.
+
+    Dense: x replicates across 'model', w/bias/output partition K — the
+    forward is a psum-free concat along K and shard_map's transpose
+    supplies the dx model-psum and the dw/dbias data-psums (the body must
+    set NO reduce axes; see the data-parallel note in ``_sharded_call``).
+    Depthwise: x, w, bias and output all partition C."""
+    dp_axes = _check_batch(x.shape[0], mesh)
+    if depthwise:
+        _check_model(mesh, C=w.shape[1], depthwise=True)
+        xspec = P(dp_axes, MP_AXIS, None)
+        wspec = P(None, MP_AXIS)
+    else:
+        _check_model(mesh, K=w.shape[1])
+        xspec = P(dp_axes)
+        wspec = P(None, MP_AXIS, None)
+    out = P(dp_axes, MP_AXIS, None)
+    args, specs = [x, w], [xspec, wspec]
+    has_bias, has_res = bias is not None, residual is not None
+    if has_bias:
+        args.append(bias)
+        specs.append(P(MP_AXIS))
+    if has_res:
+        args.append(residual)
+        specs.append(out)
+
+    def body(*a):
+        it = iter(a[2:])
+        b = next(it) if has_bias else None
+        r = next(it) if has_res else None
+        return fn(a[0], a[1], bias=b, residual=r, **kwargs)
+
+    return shard_map(body, mesh=mesh, in_specs=tuple(specs),
+                     out_specs=out, check_rep=False)(*args)
+
+
+def model_sharded_conv1d(x, w, *, mesh, bias=None, residual=None, **kwargs):
+    """Tensor-parallel ``ops.conv1d`` on a (data, model) mesh: the batch
+    shards over the data axes AND the filter dimension K shards over
+    'model' — each device computes its own filter slice at local shapes
+    (``backend='auto'`` resolves plans from local-K cache keys, see
+    ``ConvProblem.localized(model_shards=...)``).  The forward output is
+    a psum-free concat along K; differentiating *through* the wrapper,
+    shard_map's transpose inserts the dx model-psum and the dw/dbias
+    data-psums (do NOT pass ``grad_reduce_axes``/``model_reduce_axes``
+    here — those are for grads taken *inside* a shard body).  Requires
+    K % mp == 0 and batch % dp == 0."""
+    return _model_sharded_call(ops.conv1d, mesh, x, w, bias, residual,
+                               kwargs, depthwise=False)
+
+
+def model_sharded_depthwise_conv1d(x, w, *, mesh, bias=None, residual=None,
+                                   **kwargs):
+    """Tensor-parallel ``ops.depthwise_conv1d``: channel groups shard over
+    'model' (x and w both partition C), the batch over the data axes.  No
+    model-axis collective exists on any pass — forward, bwd-data and
+    bwd-weight are all channel-local (DESIGN.md §17).  Requires
+    C % mp == 0 and batch % dp == 0."""
+    return _model_sharded_call(ops.depthwise_conv1d, mesh, x, w, bias,
+                               residual, kwargs, depthwise=True)

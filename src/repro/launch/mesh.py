@@ -59,6 +59,23 @@ def make_data_mesh(n_data: int):
     return jax.sharding.Mesh(np.array(devs[:n_data]), ("data",))
 
 
+def make_grid_mesh(n_data: int, n_model: int = 1):
+    """A 2D ('data', 'model') mesh over the FIRST ``n_data * n_model`` host
+    devices — the (dp, mp) layout grid of the scaling benchmark, which
+    races several layouts inside one virtual-device process (same explicit
+    device-subset ``Mesh`` trick as ``make_data_mesh``)."""
+    import numpy as np
+
+    devs = jax.devices()
+    need = n_data * n_model
+    if need > len(devs):
+        raise ValueError(
+            f"asked for a {n_data}x{n_model} mesh ({need} devices), "
+            f"have {len(devs)}")
+    return jax.sharding.Mesh(
+        np.array(devs[:need]).reshape(n_data, n_model), ("data", "model"))
+
+
 def dp_size(mesh) -> int:
     n = 1
     for a in ("pod", "data"):
@@ -76,3 +93,14 @@ def dp_axis_names(mesh) -> tuple[str, ...]:
 
 def mp_size(mesh) -> int:
     return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
+MP_AXIS = "model"
+
+
+def mp_axis_name(mesh) -> str | None:
+    """The tensor-parallel axis name ('model') when the mesh has one, else
+    None.  Size-1 model axes still count — the model-sharded wrappers and
+    grad fns degenerate correctly (psum over a size-1 axis is identity),
+    which is what lets single-device tests exercise the sharded path."""
+    return MP_AXIS if MP_AXIS in mesh.axis_names else None

@@ -39,8 +39,9 @@ from repro import configs, obs
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.configs.base import reduced
 from repro.data.synthetic import SyntheticLoader
-from repro.launch.mesh import dp_size, make_host_mesh
+from repro.launch.mesh import compat_make_mesh, dp_size, mp_size
 from repro.models import get_model, sharding as shd
+from repro.runtime.elastic import plan_mesh
 from repro.runtime.health import HealthMonitor, PreemptionGuard
 from repro.runtime.straggler import ShardStragglerMonitor
 from repro.train.train_step import init_state, make_phase_probes, \
@@ -90,7 +91,17 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--lr", type=float, default=3e-4)
-    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1,
+                    help="tensor-parallel (model-axis) size: K-shards the "
+                         "conv filters over a (data, model) mesh planned "
+                         "by runtime.elastic.plan_mesh (DESIGN.md §17); "
+                         "requires n_devices %% N == 0 and "
+                         "conv_channels %% N == 0")
+    ap.add_argument("--model-reduce-chunks", type=int, default=None,
+                    help="with --model-parallel > 1: chunk each layer's "
+                         "bwd-data model-axis psum into this many width "
+                         "chunks so the all-reduce overlaps the remaining "
+                         "contraction (DESIGN.md §17)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -109,14 +120,45 @@ def main(argv=None):
     cfg = configs.get(args.arch)
     if args.smoke:
         cfg = reduced(cfg)
-    mesh = make_host_mesh(model=args.model_parallel)
-    dp = dp_size(mesh)
+    n_dev = len(jax.devices())
+    if args.model_parallel < 1 or n_dev % args.model_parallel:
+        raise SystemExit(
+            f"--model-parallel {args.model_parallel} does not divide the "
+            f"{n_dev} available device(s); runtime.elastic.plan_mesh only "
+            "plans whole (data, model) rows — pick a model-axis size with "
+            "n_devices % N == 0")
+    shape, axis_names = plan_mesh(n_dev, model_parallel=args.model_parallel)
+    mesh = compat_make_mesh(shape, axis_names)
+    dp, mp = dp_size(mesh), mp_size(mesh)
+    if mp > 1:
+        # the model axis shards filter/channel dims, not the batch — its
+        # divisibility constraints are the model's, not the loader's
+        if cfg.family != "conv":
+            raise SystemExit(
+                f"--model-parallel needs the conv family (arch {cfg.name} "
+                f"is family {cfg.family!r}): only the conv layers K-shard "
+                "over the model axis; other families shard via GSPMD "
+                "rules without this flag")
+        if args.no_shard_map:
+            raise SystemExit(
+                "--model-parallel requires the explicit shard_map path; "
+                "drop --no-shard-map")
+        C = cfg.conv_channels
+        if C % mp:
+            raise SystemExit(
+                f"--model-parallel {mp} does not divide this model's "
+                f"filter/channel counts: conv_channels={C} (every body "
+                f"layer has K=C={C} filters and depthwise channel groups "
+                "split on C), so C % mp must be 0 — use an arch/smoke "
+                "config with divisible channels or lower --model-parallel "
+                "(DESIGN.md §17)")
     if args.batch % args.accum:
         raise SystemExit(f"--batch {args.batch} must divide by --accum "
                          f"{args.accum}")
-    # conv family + multi-device data axis -> the explicit shard_map path;
-    # each microbatch must split evenly over the data shards
-    shard_step = cfg.family == "conv" and dp > 1 and not args.no_shard_map
+    # conv family + a multi-device data or model axis -> the explicit
+    # shard_map path; each microbatch must split evenly over the data shards
+    shard_step = (cfg.family == "conv" and (dp > 1 or mp > 1)
+                  and not args.no_shard_map)
     if shard_step and (args.batch // args.accum) % dp:
         raise SystemExit(
             f"microbatch {args.batch // args.accum} must divide over "
@@ -130,7 +172,9 @@ def main(argv=None):
     step_fn = make_train_step(cfg, accum_steps=args.accum, peak_lr=args.lr,
                               warmup_steps=max(2, args.steps // 10),
                               total_steps=args.steps,
-                              mesh=mesh if shard_step else None)
+                              mesh=mesh if shard_step else None,
+                              model_reduce_chunks=args.model_reduce_chunks
+                              if shard_step and mp > 1 else None)
 
     with mesh:
         params = model.init_params(jax.random.key(args.seed), cfg)

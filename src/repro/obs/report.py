@@ -21,6 +21,10 @@ Sections (keys of ``aggregate``'s result):
               plus streams/s and samples/s throughput (DESIGN.md §16)
   shards      per-shard step-time stats + straggler verdicts (the gauges
               drive ``runtime/straggler.py`` detection offline)
+  mesh        the (dp, mp) mesh shape of the run (``train.mesh`` event)
+  model_psum  per-cell model-axis bwd-data all-reduce records
+              (``conv.psum.model`` events: mp, chunk count, bytes —
+              tensor parallelism, DESIGN.md §17)
   counters    raw counter totals
 """
 from __future__ import annotations
@@ -67,6 +71,9 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
     phase_durs: dict[str, list[float]] = defaultdict(list)
     shard_steps: dict[int, list[tuple[int, float]]] = defaultdict(list)
     serve_spans: dict[str, list[tuple[float, dict]]] = defaultdict(list)
+    mesh: dict[str, Any] = {}
+    model_psums: dict[str, dict[str, Any]] = defaultdict(
+        lambda: {"count": 0, "chunks": [], "mp": [], "bytes": 0})
 
     for r in events:
         kind, name, attrs = r["kind"], r["name"], r.get("attrs", {})
@@ -93,6 +100,17 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
                 (int(attrs.get("step", -1)), r["value"]))
         elif kind == "event" and name == "tune.search.candidate":
             searches.append(attrs)
+        elif kind == "event" and name == "train.mesh":
+            mesh = dict(attrs)
+        elif kind == "event" and name == "conv.psum.model":
+            # one record per bwd-data model-axis all-reduce *trace* (the
+            # psum itself runs inside jit; the event is the static record
+            # of what was staged: shard count, chunking, moved bytes)
+            m = model_psums[_conv_cell_key(attrs)]
+            m["count"] += 1
+            m["chunks"].append(int(attrs.get("chunks", 1)))
+            m["mp"].append(int(attrs.get("mp", 0)))
+            m["bytes"] += int(attrs.get("bytes", 0))
         elif (kind == "event" and name.startswith("conv1d.")
                 and name.endswith(".trace")):
             # jitted dispatches emit zero-duration trace events instead of
@@ -176,6 +194,13 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
         "steps": steps,
         "serving": serving,
         "shards": {"per_shard": shards, "stragglers": stragglers},
+        "mesh": mesh,
+        "model_psum": {
+            cell: {"count": m["count"],
+                   "chunks_max": max(m["chunks"], default=0),
+                   "mp": max(m["mp"], default=0),
+                   "bytes_total": m["bytes"]}
+            for cell, m in sorted(model_psums.items())},
         "counters": dict(counters),
     }
 
@@ -222,9 +247,12 @@ def render_text(agg: dict[str, Any]) -> str:
             f"|log2 err| p50 {_fmt(cm['abs_log2_err_p50'])} "
             f"p90 {_fmt(cm['abs_log2_err_p90'])}"]
     st = agg["steps"]
+    mesh = agg.get("mesh") or {}
+    mesh_note = (f" mesh dp={mesh.get('dp')} mp={mesh.get('mp')} "
+                 f"[{mesh.get('axes', '')}]" if mesh else "")
     out += [f"-- train steps: n={st['count']} "
             f"p50 {_fmt(st['p50_s'] * 1e3, 'ms')} "
-            f"p99 {_fmt(st['p99_s'] * 1e3, 'ms')}"]
+            f"p99 {_fmt(st['p99_s'] * 1e3, 'ms')}{mesh_note}"]
     for ph, s in st.get("phases", {}).items():
         out.append(f"     phase {ph:10s} p50 {_fmt(s['p50_s'] * 1e3, 'ms')}")
     if agg.get("serving"):
@@ -237,6 +265,12 @@ def render_text(agg: dict[str, Any]) -> str:
                        f"p99 {_fmt(s['p99_s'] * 1e3, 'ms')} "
                        f"batch={s['batch']} "
                        f"{_fmt(s['streams_per_s'])} stream-chunks/s{thr}")
+    if agg.get("model_psum"):
+        out.append("-- model-axis psums (tensor parallelism, DESIGN.md §17)")
+        for cell, m in agg["model_psum"].items():
+            out.append(f"     {cell:54s} n={m['count']:<4d} "
+                       f"mp={m['mp']} chunks={m['chunks_max']} "
+                       f"{m['bytes_total'] / 1e6:.3g}MB staged")
     sh = agg["shards"]
     if sh["per_shard"]:
         out.append("-- shards")
@@ -275,6 +309,23 @@ def _zero_overlap_cells(agg: dict[str, Any]) -> list[str]:
            and not (c.get("overlap_frac_p50", 0.0) > 0.0)]
     return [f"pipelining (pipelined cell reports zero overlap_frac: {c})"
             for c in bad]
+
+
+def check_model_parallel(agg: dict[str, Any]) -> list[str]:
+    """The model-parallel CI gate: a run launched with a model axis must
+    have recorded its 2D mesh (``train.mesh`` with mp > 1) and traced at
+    least one bwd-data model-axis all-reduce (``conv.psum.model`` with
+    nonzero staged bytes) — a log without them means the K-sharded layers
+    never differentiated through the model psum (DESIGN.md §17)."""
+    missing = []
+    mesh = agg.get("mesh") or {}
+    if int(mesh.get("mp", 0) or 0) < 2:
+        missing.append("mesh (no train.mesh event with mp > 1)")
+    psums = agg.get("model_psum", {})
+    if not any(m["count"] and m["bytes_total"] > 0 for m in psums.values()):
+        missing.append(
+            "model_psum (no conv.psum.model events with nonzero bytes)")
+    return missing
 
 
 def check_serving(agg: dict[str, Any]) -> list[str]:
@@ -320,6 +371,11 @@ def main(argv: list[str] | None = None) -> int:
                     help="exit 1 unless streaming-serve per-chunk request "
                          "spans with nonzero throughput are present "
                          "(serve-smoke CI gate)")
+    ap.add_argument("--check-model-parallel", action="store_true",
+                    help="exit 1 unless a 2D (data, model) mesh was "
+                         "recorded and the K-sharded layers traced their "
+                         "bwd-data model-axis all-reduces "
+                         "(model-parallel CI gate, DESIGN.md §17)")
     args = ap.parse_args(argv)
     events = read_events(args.log)
     if not events:
@@ -330,8 +386,10 @@ def main(argv: list[str] | None = None) -> int:
           else render_text(agg))
     missing = (check(agg) if args.check else []) + (
         check_pipelining(agg) if args.check_pipelining else []) + (
-        check_serving(agg) if args.check_serving else [])
-    if args.check or args.check_pipelining or args.check_serving:
+        check_serving(agg) if args.check_serving else []) + (
+        check_model_parallel(agg) if args.check_model_parallel else [])
+    if (args.check or args.check_pipelining or args.check_serving
+            or args.check_model_parallel):
         if missing:
             print("\nSMOKE GATE FAILED — missing sections:")
             for m in missing:

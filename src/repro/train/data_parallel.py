@@ -27,6 +27,14 @@ MPI training loop, mesh-native (DESIGN.md §13).
 
 Gradients come back replicated (identical on every shard after the psum);
 the optimizer update downstream of this function is unchanged.
+
+On a 2D ``(data, model)`` mesh with mp > 1 (conv family only,
+DESIGN.md §17), the same shard body additionally K-shards every conv
+layer over the 'model' axis: params and grads stay replicated
+(``shard_param``'s VJP reassembles full gradients), the batch keeps
+sharding over the data axes only — devices along 'model' see the same
+data shard — and each layer's bwd-data dx psum fuses (and optionally
+chunks) inside its custom VJP.
 """
 from __future__ import annotations
 
@@ -34,11 +42,13 @@ import jax
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from repro.launch.mesh import dp_axis_names, dp_size
+from repro import obs
+from repro.launch.mesh import dp_axis_names, dp_size, mp_axis_name, mp_size
 from repro.train.losses import make_loss_fn
 
 
-def make_sharded_grad_fn(cfg, mesh, *, loss_fn=None, grad_reduce_chunks=None):
+def make_sharded_grad_fn(cfg, mesh, *, loss_fn=None, grad_reduce_chunks=None,
+                         model_reduce_chunks=None):
     """value_and_grad(loss, has_aux=True) over a data-parallel mesh.
 
     ``loss_fn(params, batch) -> (loss, aux)`` defaults to the family loss
@@ -54,6 +64,12 @@ def make_sharded_grad_fn(cfg, mesh, *, loss_fn=None, grad_reduce_chunks=None):
     XLA's async collectives overlap them — on top of the per-layer
     overlap the fused reduction already gives.  Same gradients up to fp32
     summation order.
+
+    A mesh with a 'model' axis of size mp > 1 turns on tensor parallelism
+    (conv family, default loss only): every shardable conv layer computes
+    its own K/mp filter slice, with ``model_reduce_chunks`` chunking each
+    layer's bwd-data model-axis psum (DESIGN.md §17).  Requires
+    cfg.conv_channels % mp == 0.
     """
     axes = dp_axis_names(mesh)
     if not axes:
@@ -61,11 +77,32 @@ def make_sharded_grad_fn(cfg, mesh, *, loss_fn=None, grad_reduce_chunks=None):
             f"mesh {tuple(mesh.axis_names)} has no data axis "
             "(expected 'data' and/or 'pod')")
     dp = dp_size(mesh)
+    mp = mp_size(mesh)
     fused_reduce = cfg.family == "conv"
+    if mp > 1:
+        if not fused_reduce:
+            raise ValueError(
+                f"model-parallel grad fn supports the conv family only "
+                f"(cfg family is {cfg.family!r}); other families shard "
+                "through the GSPMD rules in models/sharding.py")
+        if loss_fn is None and cfg.conv_channels % mp:
+            raise ValueError(
+                f"conv_channels={cfg.conv_channels} does not divide over "
+                f"mp={mp} model shards: every body layer has "
+                f"K=C={cfg.conv_channels} filters, so C % mp must be 0 — "
+                "pick a divisible channel count or lower the model axis "
+                "(DESIGN.md §17)")
     if loss_fn is None:
         loss_fn = make_loss_fn(
             cfg, grad_reduce_axes=axes if fused_reduce else None,
-            grad_reduce_chunks=grad_reduce_chunks if fused_reduce else None)
+            grad_reduce_chunks=grad_reduce_chunks if fused_reduce else None,
+            model_axis=mp_axis_name(mesh) if mp > 1 else None,
+            model_parallel=mp,
+            model_reduce_chunks=model_reduce_chunks if mp > 1 else None)
+    # host-side mesh-shape event: the report's mp=… column reads this (the
+    # shard body itself traces under jit, where no span can be timed)
+    obs.event("train.mesh", dp=dp, mp=mp,
+              axes=",".join(mesh.axis_names))
 
     def local_grad(params, batch):
         def scaled_loss(p, b):

@@ -60,7 +60,8 @@ def streamed_xent(params, hidden, labels, cfg):
     return total / (B * T)
 
 
-def make_loss_fn(cfg, *, grad_reduce_axes=None, grad_reduce_chunks=None):
+def make_loss_fn(cfg, *, grad_reduce_axes=None, grad_reduce_chunks=None,
+                 model_axis=None, model_parallel=1, model_reduce_chunks=None):
     """Per-family (loss, aux) function over (params, batch).
 
     ``grad_reduce_axes`` marks the loss as running inside a data-parallel
@@ -68,9 +69,12 @@ def make_loss_fn(cfg, *, grad_reduce_axes=None, grad_reduce_chunks=None):
     threads it down to every fused kernel call so weight/bias gradients
     all-reduce inside the custom VJPs (DESIGN.md §13).
     ``grad_reduce_chunks`` > 1 additionally chunks each layer's psum
-    across its bwd-weight width partials (DESIGN.md §15).  Other families
-    ignore both — their sharded grad fn reduces the whole gradient tree
-    instead."""
+    across its bwd-weight width partials (DESIGN.md §15).
+    ``model_axis``/``model_parallel`` K-shard the conv layers over that
+    mesh axis (tensor parallelism, DESIGN.md §17), with
+    ``model_reduce_chunks`` chunking each layer's bwd-data model psum.
+    Other families ignore all of these — their sharded grad fn reduces
+    the whole gradient tree instead (and has no model-axis path)."""
     model = get_model(cfg)
 
     if cfg.family == "conv":
@@ -79,7 +83,10 @@ def make_loss_fn(cfg, *, grad_reduce_axes=None, grad_reduce_chunks=None):
         def conv_loss(params, batch):
             return blocks.loss_fn(params, cfg, batch,
                                   grad_reduce_axes=grad_reduce_axes,
-                                  grad_reduce_chunks=grad_reduce_chunks)
+                                  grad_reduce_chunks=grad_reduce_chunks,
+                                  model_axis=model_axis,
+                                  model_parallel=model_parallel,
+                                  model_reduce_chunks=model_reduce_chunks)
         return conv_loss
 
     if cfg.family == "encdec":

@@ -44,15 +44,21 @@ def _mesh_dp(mesh) -> int:
     return dp_size(mesh)
 
 
-def _make_grad_fn(cfg, mesh=None):
+def _mesh_mp(mesh) -> int:
+    from repro.launch.mesh import mp_size
+    return mp_size(mesh)
+
+
+def _make_grad_fn(cfg, mesh=None, model_reduce_chunks=None):
     """The step's gradient engine — ``value_and_grad(loss, has_aux=True)``
-    semantics, routed through the explicit shard_map data-parallel path
-    when the mesh has >1 data shard.  Shared by ``make_train_step`` and the
-    telemetry phase probes (``make_phase_probes``) so both time/run the
-    identical computation."""
-    if mesh is not None and _mesh_dp(mesh) > 1:
+    semantics, routed through the explicit shard_map path when the mesh
+    has >1 data shard OR >1 model shard (tensor parallelism, §17).
+    Shared by ``make_train_step`` and the telemetry phase probes
+    (``make_phase_probes``) so both time/run the identical computation."""
+    if mesh is not None and (_mesh_dp(mesh) > 1 or _mesh_mp(mesh) > 1):
         from repro.train.data_parallel import make_sharded_grad_fn
-        return make_sharded_grad_fn(cfg, mesh)
+        return make_sharded_grad_fn(cfg, mesh,
+                                    model_reduce_chunks=model_reduce_chunks)
     return jax.value_and_grad(make_loss_fn(cfg), has_aux=True)
 
 
@@ -125,7 +131,8 @@ def make_train_step(cfg, *, accum_steps: int = 1, peak_lr: float = 3e-4,
                     grad_clip: float = 1.0, weight_decay: float = 0.1,
                     skip_nonfinite: bool = True, unroll_accum: bool = False,
                     grad_compression: bool = False,
-                    constrain_grads: bool = False, mesh=None):
+                    constrain_grads: bool = False, mesh=None,
+                    model_reduce_chunks: int | None = None):
     """``unroll_accum`` replaces the microbatch ``lax.scan`` with a python
     loop — used by the roofline probes only (HloCostAnalysis counts a while
     body once; see roofline/analysis.py).
@@ -144,9 +151,12 @@ def make_train_step(cfg, *, accum_steps: int = 1, peak_lr: float = 3e-4,
     already-reduced (replicated) gradients.  With ``mesh=None`` (or a
     1-device mesh) the historical single-program path runs; microbatch
     accumulation composes with either (each microbatch's grad is a
-    shard_map call inside the scan)."""
+    shard_map call inside the scan).  A mesh with a 'model' axis > 1
+    additionally K-shards the conv layers (tensor parallelism,
+    DESIGN.md §17); ``model_reduce_chunks`` chunks each layer's bwd-data
+    model-axis psum."""
     from repro.optim import compression
-    grad_fn = _make_grad_fn(cfg, mesh)
+    grad_fn = _make_grad_fn(cfg, mesh, model_reduce_chunks)
 
     def train_step(state: TrainState, batch):
         if accum_steps > 1:

@@ -164,7 +164,7 @@ def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
          epilogue: str = "none", pass_: str = "fwd",
          alg: str | None = None, nblk: int | None = None,
          pipe: int | None = None,
-         shards: int = 1,
+         shards: int = 1, model_shards: int = 1,
          cache: TuneCache | None = None, measure: bool = True,
          top_k: int = 4, iters: int = 5, warmup: int = 2,
          backends: tuple[str, ...] | None = None) -> TunedConfig:
@@ -176,6 +176,10 @@ def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
     batch data parallelism (``ConvProblem.localized``): N is the *global*
     batch, the searched/cached instance has N/shards — the shape a
     ``shard_map`` shard actually traces and looks up (DESIGN.md §13).
+    ``model_shards`` does the same along the model axis (DESIGN.md §17):
+    K/C are the *global* layer counts, the cached instance has the local
+    K/model_shards filters (dense) or C/model_shards channel group
+    (depthwise) each tensor-parallel shard traces.
 
     Example (cost-model-only search into an explicit cache; no
     measurement, deterministic)::
@@ -194,8 +198,8 @@ def tune(*, N: int, C: int, K: int, S: int, dilation: int, Q: int, dtype,
                          dtype=dtype, padding=padding, depthwise=depthwise,
                          epilogue=epilogue, pass_=pass_, alg=alg, nblk=nblk,
                          pipe=pipe)
-    if shards != 1:
-        prob = prob.localized(shards)
+    if shards != 1 or model_shards != 1:
+        prob = prob.localized(shards, model_shards=model_shards)
     return tune_problem(prob, cache=cache, measure=measure, top_k=top_k,
                         iters=iters, warmup=warmup, backends=backends)
 
@@ -252,7 +256,7 @@ def get_config(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
 
 def get_plan(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
              dtype, padding: str = "VALID", depthwise: bool = False,
-             epilogue: str = "none", shards: int = 1,
+             epilogue: str = "none", shards: int = 1, model_shards: int = 1,
              cache: TuneCache | None = None,
              allow_measure: bool | None = None) -> dict[str, TunedConfig]:
     """Resolve all three passes of one layer instance, each through its own
@@ -261,6 +265,8 @@ def get_plan(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
     ``shards`` resolves the **per-shard** instance under that much batch
     data parallelism (N is the global batch; keys use N/shards — exactly
     what each ``shard_map`` shard's ``backend='auto'`` call looks up).
+    ``model_shards`` localizes K (dense) / C (depthwise) the same way for
+    tensor-parallel shards (DESIGN.md §17).
 
     Example::
 
@@ -277,8 +283,8 @@ def get_plan(*, N: int, C: int, K: int, S: int, dilation: int, Q: int,
     base = _make_problem(N=N, C=C, K=K, S=S, dilation=dilation, Q=Q,
                          dtype=dtype, padding=padding, depthwise=depthwise,
                          epilogue=epilogue)
-    if shards != 1:
-        base = base.localized(shards)
+    if shards != 1 or model_shards != 1:
+        base = base.localized(shards, model_shards=model_shards)
     return {p: get_config_for(base.with_pass(p), cache=cache,
                               allow_measure=allow_measure)
             for p in PASSES}

@@ -83,6 +83,34 @@ def smoke_shapes():
     yield dict(SMOKE)
 
 
+def model_sharded_shapes(cells, mp: int):
+    """Local-shape views of ``cells`` under ``mp``-way tensor parallelism
+    (DESIGN.md §17), as ``(view, prob)`` pairs:
+
+      * ``'local-K'`` — K -> K/mp, C unchanged: the dense K-sharded layer
+        each model shard traces (fwd/bwd_weight read the full-C input and
+        produce the local filter slice; the bwd_data pass is the
+        local-K-contraction transposed GEMM the chunked model psum
+        finishes).
+      * ``'local-C'`` — C -> C/mp, K unchanged: the C-sharded-input view
+        (a layer consuming model-sharded activations; with K localized
+        alongside it is also the per-group shape depthwise channel-group
+        sharding traces).
+
+    A view whose dimension does not divide by ``mp`` is skipped, so
+    callers can detect fully-unshardable cells by an empty yield.  These
+    are the keys per-shard ``backend='auto'`` lookups build — a
+    global-shape entry never stands in for them (``scripts/tune.py
+    --mp``).
+    """
+    for p in cells:
+        p = dict(p)
+        if mp > 0 and p["K"] % mp == 0:
+            yield "local-K", dict(p, K=p["K"] // mp)
+        if mp > 0 and p["C"] % mp == 0:
+            yield "local-C", dict(p, C=p["C"] // mp)
+
+
 def figset_shapes(name: str, *, full: bool = False):
     """Yield one problem dict per (S, Q) cell of the named figure.
 

@@ -146,22 +146,48 @@ class ConvProblem:
     def with_pass(self, pass_: str) -> "ConvProblem":
         return dataclasses.replace(self, pass_=pass_)
 
-    def localized(self, shards: int) -> "ConvProblem":
+    def localized(self, shards: int = 1, *,
+                  model_shards: int = 1) -> "ConvProblem":
         """The per-shard view of this problem under ``shards``-way batch
-        data parallelism (DESIGN.md §13): same layer, local batch
-        ``N / shards`` — which is the shape a ``shard_map`` body traces,
-        and therefore the shape every per-shard ``backend='auto'`` lookup
-        keys on.  Local N changes the legal ``nblk`` folds and the
-        candidate space, so a global-shape key must never stand in for a
-        per-shard one; pre-tuning for sharded training goes through this
-        view (``scripts/tune.py --dp``).
+        data parallelism (DESIGN.md §13) and/or ``model_shards``-way
+        tensor parallelism (DESIGN.md §17): same layer, local batch
+        ``N / shards``, and — on the model axis — local filters
+        ``K / model_shards`` (dense: the input stays full-C, replicated
+        across model shards) or local channels ``C / model_shards``
+        (depthwise: channel-group sharding splits x and w together).
+        These are the shapes a 2D ``shard_map`` body traces, and
+        therefore the shapes every per-shard ``backend='auto'`` lookup
+        keys on.  Local N changes the legal ``nblk`` folds, local K/C
+        change the kblk/cblk ladders and the candidate space, so a
+        global-shape key must never stand in for a per-shard one;
+        pre-tuning for sharded training goes through this view
+        (``scripts/tune.py --dp`` / ``--mp``).
         """
         if shards < 1 or self.N % shards:
             raise ValueError(
                 f"cannot shard N={self.N} over {shards} data-parallel "
                 "shards (batch must divide evenly)")
+        kw = dict(N=self.N // shards)
+        if model_shards != 1:
+            if model_shards < 1:
+                raise ValueError(f"model_shards must be >= 1, got "
+                                 f"{model_shards}")
+            if self.depthwise:
+                if self.C % model_shards:
+                    raise ValueError(
+                        f"cannot shard C={self.C} over {model_shards} "
+                        "model shards (depthwise channel groups must "
+                        "divide evenly)")
+                # depthwise problems carry K == C by construction
+                kw.update(C=self.C // model_shards, K=self.K // model_shards)
+            else:
+                if self.K % model_shards:
+                    raise ValueError(
+                        f"cannot shard K={self.K} over {model_shards} "
+                        "model shards (filters must divide evenly)")
+                kw.update(K=self.K // model_shards)
         # replace() re-validates: an nblk constraint must divide local N
-        return dataclasses.replace(self, N=self.N // shards)
+        return dataclasses.replace(self, **kw)
 
     def key(self, device_kind: str) -> str:
         return cache_key(device_kind=device_kind, dtype=self.dtype, N=self.N,
