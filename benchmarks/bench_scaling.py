@@ -33,6 +33,16 @@ default smoke arch for layout runs is the paper's BF16 Cooper Lake
 variant (``atacworks-bf16``, C=K=16) because the fp32 AtacWorks body
 (C=K=15) does not divide over mp=2.
 
+A fourth axis (DESIGN.md §18): ``--drill`` measures ELASTICITY instead of
+steady-state scaling — it runs the real supervisor
+(``repro.launch.train.run``) on 8 virtual devices with an injected fault
+schedule and reports, per recovery: time-to-detect, time-to-restore, and
+``post_shrink_efficiency`` (per-device throughput retention across the
+dp-shrink at fixed global batch — can exceed 1 on an oversubscribed
+virtual-device host, where fewer shards mean less contention; reported
+as measured).  Drill rows land in the same ``BENCH_scaling.json`` under
+``|drill|`` keys.
+
 Runs in a SUBPROCESS so the virtual-device XLA_FLAGS never leak into the
 calling process (smoke tests and other benches must keep seeing 1 device).
 
@@ -42,6 +52,8 @@ calling process (smoke tests and other benches must keep seeing 1 device).
     PYTHONPATH=src:. python benchmarks/bench_scaling.py --weak --batch 2
     PYTHONPATH=src:. python benchmarks/bench_scaling.py \
         --arch atacworks-bf16 --layouts 1x1,4x1,4x2,2x4 --batch 8
+    PYTHONPATH=src:. python benchmarks/bench_scaling.py --smoke \
+        --drill device_loss@5:4
 """
 from __future__ import annotations
 
@@ -112,6 +124,64 @@ for dp, mp in args["layouts"]:
           f"{gbatch/sec:8.2f} samples/s{note}", flush=True)
 print("JSON:" + json.dumps(rows))
 """
+
+
+_DRILL_CHILD = r"""
+import json
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=%(ndev)d "
+                           + os.environ.get("XLA_FLAGS", ""))
+args = json.loads(%(args)r)
+from repro.launch.train import run
+summary = run(["--arch", args["arch"], "--smoke",
+               "--steps", str(args["steps"]),
+               "--batch", str(args["batch"]), "--seq", str(args["seq"]),
+               "--ckpt-dir", args["ckpt_dir"], "--ckpt-every", "2",
+               "--faults", args["faults"]])
+print("JSON:" + json.dumps(summary))
+"""
+
+
+def run_drill(*, spec: str, arch: str = "atacworks", batch: int = 8,
+              seq: int = 512, steps: int = 10, n_devices: int = 8):
+    """Run the elastic supervisor with fault schedule ``spec`` on
+    ``n_devices`` virtual devices; returns (drill rows, full summary)."""
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        child_args = dict(arch=arch, faults=spec, batch=batch, seq=seq,
+                          steps=steps, ckpt_dir=ckdir)
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src"
+        src = _DRILL_CHILD % {"ndev": n_devices,
+                              "args": json.dumps(child_args)}
+        proc = subprocess.run([sys.executable, "-c", src], env=env,
+                              capture_output=True, text=True, timeout=3000)
+        for line in proc.stdout.splitlines():
+            if line.startswith("JSON:"):
+                summary = json.loads(line[5:])
+                break
+        else:
+            raise RuntimeError(
+                f"drill child failed:\n{proc.stdout}\n{proc.stderr}")
+    rows = []
+    for rec in summary["recoveries"]:
+        rows.append(dict(
+            kind=rec["kind"], fault_step=rec["fault_step"],
+            restore_step=rec["restore_step"], dp_from=rec["dp_from"],
+            dp_to=rec["dp_to"], mp=rec["mp"], accum=rec["accum"],
+            time_to_detect_s=rec["time_to_detect_s"],
+            time_to_restore_s=rec["time_to_restore_s"],
+            pre_fault_step_s=rec.get("pre_fault_step_s"),
+            post_recovery_step_s=rec.get("post_recovery_step_s"),
+            post_shrink_efficiency=rec.get("post_shrink_efficiency")))
+        print(f"# drill {rec['kind']}@{rec['fault_step']}: "
+              f"dp {rec['dp_from']} -> {rec['dp_to']} "
+              f"detect {rec['time_to_detect_s']:.3f}s "
+              f"restore {rec['time_to_restore_s']:.3f}s "
+              f"post-shrink eff {rec.get('post_shrink_efficiency', 0):.3f}",
+              flush=True)
+    return rows, summary
 
 
 def run(*, arch: str, layouts: list[tuple[int, int]], batch: int, width: int,
@@ -187,6 +257,14 @@ def main(argv=None):
                     help="CI cell: dp-only layouts 1/2/8 plus the 4x2 "
                          "(data, model) grid, 8 virtual devices, small "
                          "width")
+    ap.add_argument("--drill", nargs="?", const="device_loss@5:4",
+                    default=None, metavar="SPEC",
+                    help="also run an elastic-recovery drill (the real "
+                         "supervisor with injected faults on 8 virtual "
+                         "devices; runtime/faults.py grammar, default "
+                         "'device_loss@5:4') and append time-to-detect/"
+                         "time-to-restore/post-shrink-efficiency rows "
+                         "(DESIGN.md §18)")
     ap.add_argument("--json", default="BENCH_scaling.json")
     args = ap.parse_args(argv)
 
@@ -239,6 +317,20 @@ def main(argv=None):
             dp=r["dp"], mp=r["mp"],
             source="shard_map" if r["devices"] > 1 else "single-device",
             **extra)
+    if args.drill:
+        drows, dsummary = run_drill(spec=args.drill, batch=args.batch)
+        for r in drows:
+            key = (f"{dsummary['arch']}|drill|{r['kind']}@{r['fault_step']}|"
+                   f"dp{r['dp_from']}->dp{r['dp_to']}")
+            entries[key] = bench_entry(
+                r["time_to_restore_s"],
+                time_to_detect_s=r["time_to_detect_s"],
+                pre_fault_step_s=r["pre_fault_step_s"],
+                post_recovery_step_s=r["post_recovery_step_s"],
+                post_shrink_efficiency=r["post_shrink_efficiency"],
+                restore_step=r["restore_step"], mp=r["mp"],
+                accum=r["accum"], source="elastic-drill")
+        rows = rows + drows
     write_bench_json(args.json, entries)
     return rows
 

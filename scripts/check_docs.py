@@ -31,6 +31,8 @@ DOCTEST_MODULES = [
     "repro.core.streaming",
     "repro.tune",
     "repro.obs",
+    "repro.runtime.elastic",
+    "repro.runtime.faults",
 ]
 
 MARKDOWN = ["README.md", "DESIGN.md", "CHANGES.md", "ROADMAP.md",

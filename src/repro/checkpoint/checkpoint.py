@@ -4,9 +4,15 @@ Design (scaled-down faithfully from the multi-host version):
 
   * **Atomic commit** — a checkpoint directory is staged as
     ``step_<n>.tmp`` and ``os.replace``d to ``step_<n>`` only after every
-    array and the manifest are fsync'd; a crash mid-write can never leave a
+    array, the manifest, and a ``COMMIT`` completeness marker are fsync'd
+    (the marker is written LAST, so a directory that somehow surfaces
+    without it is by definition torn); a crash mid-write can never leave a
     readable-but-corrupt checkpoint, and ``latest_step`` only ever sees
-    committed directories.
+    complete directories.
+  * **Torn-checkpoint fallback** — ``all_steps`` ignores incomplete
+    directories, ``restore(step=None)`` walks newest→oldest past any
+    checkpoint that fails to load (e.g. bytes corrupted after commit),
+    and ``_gc`` sweeps stale ``.tmp``/torn directories left by a crash.
   * **Async writer** — ``save_async`` snapshots the (device) state with
     ``jax.device_get`` on the caller thread (cheap, one copy) and hands
     serialization + fsync to a background thread, so the train loop resumes
@@ -23,6 +29,7 @@ Design (scaled-down faithfully from the multi-host version):
 Layout:
   <dir>/step_000100/manifest.json       tree structure, shapes, dtypes
   <dir>/step_000100/arrays.npz          leaf arrays keyed by flat path
+  <dir>/step_000100/COMMIT              completeness marker, written last
 """
 from __future__ import annotations
 
@@ -59,6 +66,18 @@ def _step_dir(directory: str, step: int) -> str:
     return os.path.join(directory, f"step_{step:08d}")
 
 
+COMMIT_MARKER = "COMMIT"
+_REQUIRED = ("manifest.json", "arrays.npz", COMMIT_MARKER)
+
+
+def _is_complete(path: str) -> bool:
+    """A checkpoint directory is complete iff every required file —
+    including the COMMIT marker written last — exists.  Anything else is
+    torn (a crash mid-write, or a pre-marker legacy dir) and must never be
+    offered to ``restore``."""
+    return all(os.path.exists(os.path.join(path, f)) for f in _REQUIRED)
+
+
 class Checkpointer:
     def __init__(self, directory: str, *, keep: int = 3):
         self.directory = directory
@@ -70,6 +89,7 @@ class Checkpointer:
 
     def save(self, state, step: int) -> str:
         """Synchronous atomic save; returns the committed path."""
+        self.wait()  # _gc sweeps *.tmp — never while an async write stages
         host_state = jax.device_get(state)
         return self._write(host_state, step)
 
@@ -107,6 +127,12 @@ class Checkpointer:
             json.dump(manifest, f)
             f.flush()
             os.fsync(f.fileno())
+        # completeness marker LAST: a crash between any of the writes above
+        # and here leaves a directory readers provably reject
+        with open(os.path.join(tmp, COMMIT_MARKER), "w") as f:
+            f.write(f"{step}\n")
+            f.flush()
+            os.fsync(f.fileno())
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)  # atomic commit
@@ -120,17 +146,30 @@ class Checkpointer:
             trash = victim + ".trash"
             os.replace(victim, trash)
             shutil.rmtree(trash, ignore_errors=True)
+        # sweep crash debris: stale staging dirs, half-deleted trash, and
+        # torn step dirs (no COMMIT marker — unreadable by construction)
+        for name in os.listdir(self.directory):
+            path = os.path.join(self.directory, name)
+            if name.endswith((".tmp", ".trash")):
+                shutil.rmtree(path, ignore_errors=True)
+            elif (name.startswith("step_") and os.path.isdir(path)
+                  and not _is_complete(path)):
+                shutil.rmtree(path, ignore_errors=True)
 
     # -- read -------------------------------------------------------------
 
     def all_steps(self) -> list[int]:
+        """Steps with COMPLETE checkpoints only — torn directories (crash
+        mid-write) are invisible to every reader."""
         out = []
         for name in os.listdir(self.directory):
             if name.startswith("step_") and not name.endswith((".tmp", ".trash")):
                 try:
-                    out.append(int(name[5:]))
+                    step = int(name[5:])
                 except ValueError:
                     continue
+                if _is_complete(os.path.join(self.directory, name)):
+                    out.append(step)
         return sorted(out)
 
     def latest_step(self) -> int | None:
@@ -142,26 +181,55 @@ class Checkpointer:
 
         ``template`` may hold concrete arrays or ShapeDtypeStructs carrying
         NamedShardings; each loaded array is ``device_put`` against the
-        template's sharding — this is the elastic-resharding path: the
-        stored arrays are mesh-agnostic, placement happens here.
+        template's NamedSharding — this is the elastic-resharding path: the
+        stored arrays are mesh-agnostic, placement happens here.  Leaves
+        whose template sharding is NOT mesh-aware (e.g. freshly-initialised
+        optimizer moments on the default device) come back *uncommitted*,
+        so jit is free to co-locate them with the mesh-placed params
+        instead of pinning them to one device.
+
+        With ``step=None`` the newest checkpoint is tried first and any
+        that fails to load (bytes corrupted after commit) is skipped with
+        a warning, falling back to the next-newest.  An explicit ``step``
+        raises ``FileNotFoundError`` if that checkpoint is missing, torn,
+        or unreadable.
         """
-        step = self.latest_step() if step is None else step
-        if step is None:
+        candidates = self.all_steps()[::-1] if step is None else [step]
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints under {self.directory}")
-        path = _step_dir(self.directory, step)
-        data = np.load(os.path.join(path, "arrays.npz"))
-        flat_t = _flatten(template)
+        last_err = None
+        for s in candidates:
+            path = _step_dir(self.directory, s)
+            if not _is_complete(path):
+                last_err = FileNotFoundError(
+                    f"checkpoint step {s} at {path} is missing or torn "
+                    "(no COMMIT marker)")
+                continue
+            try:
+                return self._load(template, path)
+            except Exception as e:  # torn past the marker: fall back
+                last_err = e
+                if step is None:
+                    print(f"checkpoint: step {s} unreadable ({e!r}); "
+                          "falling back to an older checkpoint")
+        raise FileNotFoundError(
+            f"no restorable checkpoint under {self.directory}: {last_err}")
 
-        def put(key, tmpl):
-            arr = data[key]
-            want_dtype = jnp.dtype(tmpl.dtype)
-            arr = arr.astype(want_dtype) if arr.dtype != want_dtype else arr
-            sharding = getattr(tmpl, "sharding", None)
-            if sharding is not None and not callable(sharding):
-                return jax.device_put(arr, sharding)
-            return jnp.asarray(arr)
+    def _load(self, template, path: str):
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            flat_t = _flatten(template)
 
-        restored_flat = {k: put(k, v) for k, v in flat_t.items()}
+            def put(key, tmpl):
+                arr = data[key]
+                want_dtype = jnp.dtype(tmpl.dtype)
+                arr = arr.astype(want_dtype) if arr.dtype != want_dtype \
+                    else arr
+                sharding = getattr(tmpl, "sharding", None)
+                if isinstance(sharding, jax.sharding.NamedSharding):
+                    return jax.device_put(arr, sharding)
+                return jnp.asarray(arr)
+
+            restored_flat = {k: put(k, v) for k, v in flat_t.items()}
         leaves_t, treedef = jax.tree_util.tree_flatten(template)
         keys = list(_flatten(template).keys())
         return jax.tree_util.tree_unflatten(

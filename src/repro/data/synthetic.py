@@ -99,14 +99,21 @@ def make_batch(cfg, batch: int, seq: int, seed: int = 0):
 class SyntheticLoader:
     """Host-side data pipeline: a producer thread synthesises + device-puts
     batches (optionally with a NamedSharding) while the step runs — the
-    paper's DataLoader()-worker-per-socket pattern, jax-style."""
+    paper's DataLoader()-worker-per-socket pattern, jax-style.
+
+    ``start`` keys batches by STEP index rather than production order:
+    batch *i* out of a loader started at ``start`` is seeded
+    ``seed + start + i`` — so a loader rebuilt at step *r* after an
+    elastic recovery (or a preemption resume) replays exactly the batches
+    steps ``r, r+1, ...`` saw the first time, which is what keeps the
+    training trajectory reproducible across restore events."""
 
     def __init__(self, cfg, batch: int, seq: int, *, sharding=None,
-                 prefetch: int = 2, seed: int = 0):
+                 prefetch: int = 2, seed: int = 0, start: int = 0):
         self.cfg, self.batch, self.seq = cfg, batch, seq
         self.sharding = sharding
         self._q: queue.Queue = queue.Queue(maxsize=prefetch)
-        self._seed = seed
+        self._seed = seed + start
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._produce, daemon=True)
         self._thread.start()

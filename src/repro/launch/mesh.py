@@ -76,6 +76,26 @@ def make_grid_mesh(n_data: int, n_model: int = 1):
         np.array(devs[:need]).reshape(n_data, n_model), ("data", "model"))
 
 
+def make_elastic_mesh(shape, axis_names, devices=None):
+    """A mesh of ``shape`` over an EXPLICIT device list — the elastic
+    supervisor's mesh constructor (DESIGN.md §18): after a device loss it
+    re-plans the layout with ``runtime.elastic.make_plan`` and rebuilds
+    the mesh over the *surviving* devices only, so the lost ids never
+    appear in any sharding.  Uses the first ``prod(shape)`` survivors
+    (the plan may round the data axis down further to keep the global
+    batch divisible)."""
+    import numpy as np
+
+    devs = list(devices) if devices is not None else jax.devices()
+    need = int(np.prod(shape))
+    if need > len(devs):
+        raise ValueError(
+            f"mesh shape {tuple(shape)} needs {need} devices, only "
+            f"{len(devs)} healthy")
+    return jax.sharding.Mesh(
+        np.array(devs[:need]).reshape(tuple(shape)), tuple(axis_names))
+
+
 def dp_size(mesh) -> int:
     n = 1
     for a in ("pod", "data"):

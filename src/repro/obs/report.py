@@ -25,6 +25,11 @@ Sections (keys of ``aggregate``'s result):
   model_psum  per-cell model-axis bwd-data all-reduce records
               (``conv.psum.model`` events: mp, chunk count, bytes —
               tensor parallelism, DESIGN.md §17)
+  elastic     fault-tolerance drill records (``elastic.fault`` events +
+              ``elastic.detect``/``elastic.recover`` spans): fault counts
+              by kind, time-to-detect stats, one record per recovery
+              (dp_from → dp_to, restore step, time-to-restore), and how
+              many train steps ran after the last recovery (DESIGN.md §18)
   counters    raw counter totals
 """
 from __future__ import annotations
@@ -74,11 +79,28 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
     mesh: dict[str, Any] = {}
     model_psums: dict[str, dict[str, Any]] = defaultdict(
         lambda: {"count": 0, "chunks": [], "mp": [], "bytes": 0})
+    faults: dict[str, int] = defaultdict(int)
+    detects: dict[str, list[float]] = defaultdict(list)
+    recoveries: list[dict] = []
+    step_ts: list[float] = []
 
     for r in events:
         kind, name, attrs = r["kind"], r["name"], r.get("attrs", {})
         if kind == "span":
             spans[name].append(r["dur"])
+            if name == "train.step":
+                step_ts.append(float(r.get("ts", 0.0)))
+            if name == "elastic.detect":
+                detects[str(attrs.get("kind", "?"))].append(r["dur"])
+            if name == "elastic.recover":
+                recoveries.append({
+                    "kind": attrs.get("kind"),
+                    "fault_step": attrs.get("step"),
+                    "restore_step": attrs.get("restore_step"),
+                    "dp_from": attrs.get("dp_from"),
+                    "dp_to": attrs.get("dp_to"), "mp": attrs.get("mp"),
+                    "time_to_restore_s": r["dur"],
+                    "ts": float(r.get("ts", 0.0)) + r["dur"]})
             if name.startswith("conv1d."):
                 c = cells[(_conv_cell_key(attrs), name[len("conv1d."):])]
                 c["dur"].append(r["dur"])
@@ -102,6 +124,8 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
             searches.append(attrs)
         elif kind == "event" and name == "train.mesh":
             mesh = dict(attrs)
+        elif kind == "event" and name == "elastic.fault":
+            faults[str(attrs.get("kind", "?"))] += 1
         elif kind == "event" and name == "conv.psum.model":
             # one record per bwd-data model-axis all-reduce *trace* (the
             # psum itself runs inside jit; the event is the static record
@@ -175,6 +199,20 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
             }
         stragglers = sorted(mon.stragglers())
 
+    # train steps whose start timestamp is later than the last recovery's
+    # completion — the observable proof that training actually resumed
+    last_recover_ts = max((rec["ts"] for rec in recoveries), default=None)
+    post_recovery_steps = (sum(1 for t in step_ts if t > last_recover_ts)
+                           if last_recover_ts is not None else 0)
+    elastic = {
+        "faults": dict(faults),
+        "detect": {k: {"count": len(d), "p50_s": _pct(d, 0.5),
+                       "max_s": max(d)} for k, d in sorted(detects.items())},
+        "recoveries": [{k: v for k, v in rec.items() if k != "ts"}
+                       for rec in recoveries],
+        "post_recovery_steps": post_recovery_steps,
+    }
+
     return {
         "provenance": provenance,
         "spans": {n: _span_stats(d) for n, d in sorted(spans.items())},
@@ -201,6 +239,7 @@ def aggregate(events: Iterable[dict[str, Any]]) -> dict[str, Any]:
                    "mp": max(m["mp"], default=0),
                    "bytes_total": m["bytes"]}
             for cell, m in sorted(model_psums.items())},
+        "elastic": elastic,
         "counters": dict(counters),
     }
 
@@ -271,6 +310,23 @@ def render_text(agg: dict[str, Any]) -> str:
             out.append(f"     {cell:54s} n={m['count']:<4d} "
                        f"mp={m['mp']} chunks={m['chunks_max']} "
                        f"{m['bytes_total'] / 1e6:.3g}MB staged")
+    el = agg.get("elastic") or {}
+    if el.get("faults"):
+        out.append("-- elastic drills (fault tolerance, DESIGN.md §18)")
+        out.append(f"     faults: {el['faults']}")
+        for k, d in el.get("detect", {}).items():
+            out.append(f"     detect {k:12s} n={d['count']} "
+                       f"p50 {_fmt(d['p50_s'], 's')} "
+                       f"max {_fmt(d['max_s'], 's')}")
+        for rec in el.get("recoveries", []):
+            out.append(f"     recover {rec.get('kind')}: "
+                       f"dp {rec.get('dp_from')} -> {rec.get('dp_to')} "
+                       f"(mp {rec.get('mp')}), fault step "
+                       f"{rec.get('fault_step')} restored to "
+                       f"{rec.get('restore_step')} in "
+                       f"{_fmt(rec.get('time_to_restore_s', float('nan')), 's')}")
+        out.append(f"     post-recovery steps: "
+                   f"{el.get('post_recovery_steps', 0)}")
     sh = agg["shards"]
     if sh["per_shard"]:
         out.append("-- shards")
@@ -341,6 +397,42 @@ def check_serving(agg: dict[str, Any]) -> list[str]:
     return []
 
 
+def check_elastic(agg: dict[str, Any]) -> list[str]:
+    """The elastic-drill CI gate: an instrumented drill run must show the
+    WHOLE recovery loop — a fault was injected (``elastic.fault``), its
+    detection was timed (``elastic.detect``), at least one recovery
+    re-planned the mesh to a SMALLER data axis at an UNCHANGED model axis
+    and restored a checkpoint (``elastic.recover``), and training visibly
+    resumed afterwards (train.step spans later than the recovery).  A log
+    missing any of these means the supervisor never exercised the elastic
+    path end to end (DESIGN.md §18)."""
+    el = agg.get("elastic") or {}
+    missing = []
+    if not el.get("faults"):
+        missing.append("elastic.faults (no elastic.fault events in the log)")
+    if not el.get("detect"):
+        missing.append("elastic.detect (no timed fault-detection spans)")
+    recs = el.get("recoveries", [])
+    if not recs:
+        missing.append("elastic.recoveries (no elastic.recover spans)")
+    else:
+        if not any((rec.get("dp_to") or 0) < (rec.get("dp_from") or 0)
+                   for rec in recs):
+            missing.append(
+                "elastic.recoveries (no recovery shrank the data axis: "
+                "dp_to < dp_from never holds)")
+        if not all((rec.get("time_to_restore_s") or 0) > 0
+                   and rec.get("restore_step") is not None for rec in recs):
+            missing.append(
+                "elastic.recoveries (a recovery lacks a positive "
+                "time_to_restore_s or a restore_step)")
+        if not el.get("post_recovery_steps"):
+            missing.append(
+                "elastic.post_recovery_steps (no train.step spans after "
+                "the last recovery — training never resumed)")
+    return missing
+
+
 def check_pipelining(agg: dict[str, Any]) -> list[str]:
     """The bench-smoke pipelining gate: unlike :func:`check` (a training
     log's sections), this requires that pipelined conv passes actually ran
@@ -376,6 +468,12 @@ def main(argv: list[str] | None = None) -> int:
                          "recorded and the K-sharded layers traced their "
                          "bwd-data model-axis all-reduces "
                          "(model-parallel CI gate, DESIGN.md §17)")
+    ap.add_argument("--check-elastic", action="store_true",
+                    help="exit 1 unless the full elastic-recovery loop is "
+                         "in the log: injected fault, timed detection, a "
+                         "data-axis-shrinking recovery with a checkpoint "
+                         "restore, and train steps after it "
+                         "(elastic-drill CI gate, DESIGN.md §18)")
     args = ap.parse_args(argv)
     events = read_events(args.log)
     if not events:
@@ -387,9 +485,10 @@ def main(argv: list[str] | None = None) -> int:
     missing = (check(agg) if args.check else []) + (
         check_pipelining(agg) if args.check_pipelining else []) + (
         check_serving(agg) if args.check_serving else []) + (
-        check_model_parallel(agg) if args.check_model_parallel else [])
+        check_model_parallel(agg) if args.check_model_parallel else []) + (
+        check_elastic(agg) if args.check_elastic else [])
     if (args.check or args.check_pipelining or args.check_serving
-            or args.check_model_parallel):
+            or args.check_model_parallel or args.check_elastic):
         if missing:
             print("\nSMOKE GATE FAILED — missing sections:")
             for m in missing:

@@ -13,6 +13,17 @@ is a *layout* problem, not a data problem:
      scale event,
   4. the launcher rebuilds the jitted step against the new mesh and
      restores the checkpoint with the new shardings.
+
+The invariants the supervisor (and the hypothesis suite in
+tests/test_elastic_plan.py) relies on:
+
+    >>> plan_mesh(8, model_parallel=2)
+    ((4, 2), ('data', 'model'))
+    >>> p = make_plan(4, model_parallel=1, global_batch=8)   # dp 8 -> 4
+    >>> (p.mesh_shape, p.accum_steps * p.microbatch)
+    ((4, 1), 8)
+    >>> plan_batch(24, 4, max_microbatch_per_shard=4)  # 4 does not divide 6
+    (2, 12)
 """
 from __future__ import annotations
 
@@ -50,7 +61,13 @@ def plan_batch(global_batch: int, dp_size: int, *,
     """
     assert global_batch % dp_size == 0, (global_batch, dp_size)
     per_shard = global_batch // dp_size
-    micro_per_shard = min(per_shard, max_microbatch_per_shard)
+    micro_per_shard = max(1, min(per_shard, max_microbatch_per_shard))
+    # the per-shard microbatch must DIVIDE the per-shard batch, or
+    # accum * microbatch under-counts the global batch (e.g. per_shard=6,
+    # cap=4 used to plan accum=1 x micro=4 -> 2/3 of the batch silently
+    # dropped); walk down to the largest divisor <= the cap instead
+    while per_shard % micro_per_shard:
+        micro_per_shard -= 1
     accum = per_shard // micro_per_shard
     return accum, micro_per_shard * dp_size
 

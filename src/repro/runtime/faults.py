@@ -1,0 +1,155 @@
+"""Fault injection for elastic-training drills (DESIGN.md §18).
+
+A fleet that serves real traffic loses devices mid-run; this module lets
+the 8-virtual-device harness *rehearse* that without real hardware dying.
+The injector is scripted — faults are scheduled against step indices, and
+the supervisor in ``launch/train.py`` consumes them at step boundaries —
+so every drill is deterministic and replayable:
+
+  * ``device_loss`` — n devices drop out of the healthy set.  The
+    supervisor's current step is tainted (a real loss surfaces as a
+    collective abort at the next sync point, i.e. roughly one step
+    later), the mesh is re-planned over the survivors, and state is
+    restored from the last committed checkpoint.
+  * ``straggle`` — one data shard runs ``factor``× slow from a given
+    step onward (simulated by per-shard step times fed to
+    ``ShardStragglerMonitor``); the supervisor rotates the shard's
+    devices out of the mesh once the monitor trips REPLACE.
+  * ``preempt`` — the scheduler reclaims the node: equivalent to the
+    SIGTERM the ``PreemptionGuard`` handles, so the run drains (flushes
+    a checkpoint and exits cleanly).
+
+Spec grammar (comma-separated)::
+
+    device_loss@STEP:N        lose N devices at step STEP
+    straggle@STEP:SHARDxF     shard SHARD runs F× slow from step STEP
+    preempt@STEP              deliver a preemption at step STEP
+
+    >>> [f.kind for f in parse_faults("device_loss@5:4,preempt@9")]
+    ['device_loss', 'preempt']
+    >>> parse_faults("straggle@4:1x3")[0].factor
+    3.0
+
+Each fault fires exactly once: after a recovery restores to an earlier
+step, re-running the fault's step index does NOT re-fire it (the device
+already died; the drill measures recovery, not a crash loop).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class DeviceLossError(RuntimeError):
+    """Raised by the supervisor's step path when an injected device loss
+    surfaces — the simulated analogue of a collective abort / NCCL-style
+    communicator error on real hardware."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    kind: str                 # 'device_loss' | 'straggle' | 'preempt'
+    step: int                 # fires at the start of this step
+    n_devices: int = 0        # device_loss: how many devices die
+    shard: int = 0            # straggle: which data shard slows down
+    factor: float = 1.0       # straggle: step-time multiplier
+
+
+def parse_faults(spec: str) -> list["Fault"]:
+    """Parse the CLI fault grammar; raises ValueError with the offending
+    token on malformed specs."""
+    faults = []
+    for tok in spec.split(","):
+        tok = tok.strip()
+        if not tok:
+            continue
+        try:
+            kind, _, rest = tok.partition("@")
+            if kind == "device_loss":
+                step, _, n = rest.partition(":")
+                faults.append(Fault("device_loss", int(step),
+                                    n_devices=int(n or 1)))
+            elif kind == "straggle":
+                step, _, sf = rest.partition(":")
+                shard, _, factor = sf.partition("x")
+                faults.append(Fault("straggle", int(step),
+                                    shard=int(shard or 0),
+                                    factor=float(factor or 2.0)))
+            elif kind == "preempt":
+                faults.append(Fault("preempt", int(rest)))
+            else:
+                raise ValueError(f"unknown fault kind {kind!r}")
+        except (ValueError, TypeError) as e:
+            raise ValueError(
+                f"bad fault spec {tok!r} (grammar: device_loss@STEP:N, "
+                f"straggle@STEP:SHARDxFACTOR, preempt@STEP): {e}") from None
+    return sorted(faults, key=lambda f: f.step)
+
+
+class FaultInjector:
+    """Deterministic fault scheduler over a fixed device set.
+
+    The supervisor polls once per step; a fault whose step has been
+    reached (and that hasn't fired yet) is returned exactly once.  Device
+    losses pick the HIGHEST surviving device ids (the mesh packs shards
+    from the front, so losing the tail ids exercises a clean shrink; a
+    front-id loss is the same drill — whole arrays restore onto whatever
+    survivors the new mesh names).
+    """
+
+    def __init__(self, faults, devices):
+        self.faults = sorted(faults, key=lambda f: f.step)
+        self._device_ids = [getattr(d, "id", d) for d in devices]
+        self._lost: set[int] = set()
+        self._fired: set[int] = set()
+        self._straggle: Fault | None = None
+        self._straggle_since: float | None = None
+
+    # -- supervisor interface ------------------------------------------------
+
+    def poll(self, step: int) -> Fault | None:
+        """The first not-yet-fired fault with fault.step <= step, or None.
+        Marks it fired: restored-and-replayed steps never re-fire it."""
+        for idx, f in enumerate(self.faults):
+            if idx in self._fired or f.step > step:
+                continue
+            self._fired.add(idx)
+            return f
+        return None
+
+    def commit_loss(self, fault: Fault) -> set[int]:
+        """Consume a device_loss fault: marks the victims lost and returns
+        their ids."""
+        survivors = [i for i in self._device_ids if i not in self._lost]
+        victims = set(survivors[-fault.n_devices:])
+        self._lost |= victims
+        return victims
+
+    def mark_lost(self, ids) -> None:
+        """Externally-decided rotation (e.g. straggler REPLACE): the
+        supervisor names the device ids leaving the mesh."""
+        self._lost |= set(ids)
+
+    def lost(self) -> set[int]:
+        return set(self._lost)
+
+    def healthy(self):
+        """Surviving device ids, in the original device order."""
+        return [i for i in self._device_ids if i not in self._lost]
+
+    # -- straggler simulation ------------------------------------------------
+
+    def begin_straggle(self, fault: Fault, now: float) -> None:
+        self._straggle = fault
+        self._straggle_since = now
+
+    def straggle_active(self) -> Fault | None:
+        return self._straggle
+
+    def straggle_onset(self) -> float | None:
+        """Monotonic time the active straggle began (time-to-detect runs
+        from here to the monitor's REPLACE verdict)."""
+        return self._straggle_since
+
+    def end_straggle(self) -> None:
+        self._straggle = None
+        self._straggle_since = None

@@ -1,0 +1,241 @@
+"""Chaos suite for the fault-tolerance substrate (DESIGN.md §18):
+
+  * ``FaultInjector`` / ``parse_faults`` — the drill scheduler: grammar,
+    fire-exactly-once across restore replays, loss bookkeeping;
+  * ``ShardStragglerMonitor.feed_gauges`` — offline detection replayed
+    from real telemetry JSONL records (the same ``train.shard.step_time``
+    gauges ``launch/train.py`` emits);
+  * ``HealthMonitor`` — skip-streak escalation, loss-spike warnings, and
+    the rollup the launcher exports;
+  * ``PreemptionGuard`` — a REAL ``SIGTERM`` delivered to this process
+    must surface as ``preempted()`` and drive the drain path (final
+    checkpoint flush), never a mid-write kill.
+"""
+import json
+import os
+import signal
+
+import numpy as np
+import pytest
+
+from repro.runtime.faults import Fault, FaultInjector, parse_faults
+from repro.runtime.health import HealthMonitor, PreemptionGuard
+from repro.runtime.straggler import ShardStragglerMonitor
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector
+# ---------------------------------------------------------------------------
+
+
+class TestParseFaults:
+    def test_grammar(self):
+        fs = parse_faults("preempt@9,device_loss@5:4,straggle@6:1x3.5")
+        assert [f.kind for f in fs] == ["device_loss", "straggle", "preempt"]
+        assert fs[0].step == 5 and fs[0].n_devices == 4
+        assert fs[1].shard == 1 and fs[1].factor == 3.5
+        assert fs[2].step == 9
+
+    def test_defaults(self):
+        assert parse_faults("device_loss@3")[0].n_devices == 1
+        s = parse_faults("straggle@3")[0]
+        assert s.shard == 0 and s.factor == 2.0
+
+    @pytest.mark.parametrize("bad", ["explode@3", "device_loss@x:2",
+                                     "straggle@1:ax2", "preempt@"])
+    def test_rejects_malformed(self, bad):
+        with pytest.raises(ValueError, match="bad fault spec|unknown"):
+            parse_faults(bad)
+
+    def test_empty_tokens_skipped(self):
+        assert parse_faults("preempt@2,,") == [Fault("preempt", 2)]
+
+
+class TestFaultInjector:
+    def test_fires_exactly_once_across_replay(self):
+        inj = FaultInjector(parse_faults("device_loss@5:2"), range(8))
+        assert inj.poll(4) is None
+        f = inj.poll(5)
+        assert f is not None and f.kind == "device_loss"
+        inj.commit_loss(f)
+        # recovery restores to step 4 and replays 4, 5, 6... — the same
+        # fault must NOT re-fire (the device already died once)
+        assert all(inj.poll(s) is None for s in (4, 5, 6))
+
+    def test_late_poll_still_fires(self):
+        inj = FaultInjector(parse_faults("preempt@3"), range(4))
+        assert inj.poll(7).kind == "preempt"  # step index already passed
+
+    def test_commit_loss_takes_highest_ids(self):
+        inj = FaultInjector(parse_faults("device_loss@1:3"), range(8))
+        victims = inj.commit_loss(inj.poll(1))
+        assert victims == {5, 6, 7}
+        assert inj.healthy() == [0, 1, 2, 3, 4]
+        assert inj.lost() == {5, 6, 7}
+
+    def test_sequential_losses_accumulate(self):
+        inj = FaultInjector(parse_faults("device_loss@1:2,device_loss@5:2"),
+                            range(8))
+        inj.commit_loss(inj.poll(1))
+        inj.commit_loss(inj.poll(5))
+        assert inj.healthy() == [0, 1, 2, 3]
+
+    def test_mark_lost_rotation(self):
+        inj = FaultInjector([], range(4))
+        inj.mark_lost({1})
+        assert inj.healthy() == [0, 2, 3]
+
+    def test_straggle_lifecycle(self):
+        f = parse_faults("straggle@2:1x4")[0]
+        inj = FaultInjector([f], range(4))
+        assert inj.straggle_active() is None
+        inj.begin_straggle(inj.poll(2), 123.0)
+        assert inj.straggle_active() is f
+        assert inj.straggle_onset() == 123.0
+        inj.end_straggle()
+        assert inj.straggle_active() is None and inj.straggle_onset() is None
+
+
+# ---------------------------------------------------------------------------
+# ShardStragglerMonitor: offline replay from telemetry JSONL
+# ---------------------------------------------------------------------------
+
+
+def _gauge(shard, step, dt, pid=0):
+    return {"kind": "gauge", "name": "train.shard.step_time", "ts": 0.0,
+            "value": dt, "pid": pid, "attrs": {"shard": shard, "step": step}}
+
+
+class TestFeedGauges:
+    def _telemetry(self, tmp_path, records):
+        """Round-trip through a real JSONL file — the offline path the
+        report tooling uses."""
+        path = tmp_path / "telemetry.jsonl"
+        path.write_text("".join(json.dumps(r) + "\n" for r in records))
+        return [json.loads(line) for line in path.read_text().splitlines()]
+
+    def test_slow_shard_trips_replace(self, tmp_path):
+        rng = np.random.default_rng(0)
+        recs = []
+        for step in range(40):
+            for shard in range(4):
+                dt = 0.1 + 1e-3 * rng.random()
+                if shard == 2 and step >= 20:
+                    dt *= 5.0  # shard 2 degrades mid-run
+                recs.append(_gauge(shard, step, dt))
+        mon = ShardStragglerMonitor()
+        last = mon.feed_gauges(self._telemetry(tmp_path, recs))
+        assert mon.stragglers() == {2}
+        assert last[2] == "replace"
+        assert all(last[s] == "ok" for s in (0, 1, 3))
+        roll = mon.rollup()
+        assert roll["stragglers"] == [2] and roll["shards"] == 4
+        assert roll["flagged"]["2"] > 0
+
+    def test_healthy_fleet_all_ok(self, tmp_path):
+        recs = [_gauge(s, i, 0.1 + 1e-4 * ((i + s) % 5))
+                for i in range(30) for s in range(4)]
+        mon = ShardStragglerMonitor()
+        last = mon.feed_gauges(self._telemetry(tmp_path, recs))
+        assert mon.stragglers() == set()
+        assert set(last.values()) == {"ok"}
+
+    def test_non_gauge_records_ignored(self):
+        mon = ShardStragglerMonitor()
+        events = [{"kind": "span", "name": "train.step", "dur": 0.1,
+                   "ts": 0.0, "pid": 0, "attrs": {}},
+                  {"kind": "event", "name": "elastic.fault", "ts": 0.0,
+                   "pid": 0, "attrs": {"kind": "device_loss"}}]
+        assert mon.feed_gauges(events) == {}
+
+    def test_missing_shard_attr_falls_back_to_pid(self):
+        mon = ShardStragglerMonitor()
+        recs = [{"kind": "gauge", "name": "train.shard.step_time",
+                 "ts": 0.0, "value": 0.1, "pid": 3,
+                 "attrs": {"step": i}} for i in range(10)]
+        last = mon.feed_gauges(recs)
+        assert list(last) == [3]
+
+
+# ---------------------------------------------------------------------------
+# HealthMonitor
+# ---------------------------------------------------------------------------
+
+
+class TestHealthVerdicts:
+    def test_skip_streak_escalates_then_resets(self):
+        h = HealthMonitor(max_consecutive_skips=3)
+        assert h.record(0, 1.0, skipped=True) == "warn"
+        assert h.record(1, 1.0, skipped=True) == "warn"
+        assert h.record(2, 1.0, skipped=True) == "restore"
+        assert h.record(3, 1.0, skipped=False) == "ok"  # streak reset
+        assert h.record(4, 1.0, skipped=True) == "warn"
+
+    def test_loss_spike_warns_without_poisoning_ema(self):
+        h = HealthMonitor(loss_spike_factor=10.0)
+        for i in range(20):
+            assert h.record(i, 1.0, skipped=False) == "ok"
+        assert h.record(20, 50.0, skipped=False) == "warn"
+        # the spike is folded in damped, so a normal step is ok again
+        assert h.record(21, 1.0, skipped=False) == "ok"
+
+    def test_rollup_schema(self):
+        h = HealthMonitor(max_consecutive_skips=2)
+        h.record(0, 1.0, skipped=False)
+        h.record(1, 1.0, skipped=True)
+        h.record(2, 1.0, skipped=True)
+        roll = h.rollup()
+        assert roll["events"] == 3  # two skips + the restore escalation
+        assert roll["by_kind"]["skip"] == 2
+        assert roll["by_kind"]["restore"] == 1
+        assert roll["consecutive_skips"] == 2
+        assert roll["loss_ema"] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# PreemptionGuard: a real SIGTERM drives the drain path
+# ---------------------------------------------------------------------------
+
+
+class TestPreemption:
+    def test_real_sigterm_sets_preempted(self):
+        prev = signal.getsignal(signal.SIGTERM)
+        try:
+            guard = PreemptionGuard()  # installs its SIGTERM handler
+            assert not guard.preempted()
+            os.kill(os.getpid(), signal.SIGTERM)  # the scheduler's notice
+            assert guard.preempted()
+        finally:
+            signal.signal(signal.SIGTERM, prev)
+
+    def test_drain_flow_flushes_checkpoint(self, tmp_path):
+        """The launcher's drain contract: once preempted() turns true the
+        loop saves a final checkpoint and exits cleanly."""
+        from repro.checkpoint.checkpoint import Checkpointer
+
+        prev = signal.getsignal(signal.SIGTERM)
+        try:
+            guard = PreemptionGuard()
+            ckpt = Checkpointer(str(tmp_path / "ck"))
+            state = {"w": np.arange(4.0, dtype=np.float32)}
+            drained_at = None
+            for step in range(10):
+                if step == 4:
+                    os.kill(os.getpid(), signal.SIGTERM)
+                if guard.preempted():
+                    ckpt.save(state, step)
+                    drained_at = step
+                    break
+            assert drained_at == 4
+            assert ckpt.latest_step() == 4
+            restored = ckpt.restore({"w": np.zeros(4, np.float32)})
+            np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                          state["w"])
+        finally:
+            signal.signal(signal.SIGTERM, prev)
+
+    def test_manual_request(self):
+        guard = PreemptionGuard(install=False)
+        assert not guard.preempted()
+        guard.request()
+        assert guard.preempted()

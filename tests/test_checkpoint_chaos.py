@@ -1,0 +1,206 @@
+"""Crash-consistency chaos tests for the checkpointer (DESIGN.md §18).
+
+A checkpoint is the ONLY thing standing between a device loss and a dead
+run, so its failure modes get their own suite: every test kills or
+corrupts a write at a specific point and asserts readers provably never
+see the damage —
+
+  * a writer killed BEFORE the atomic rename leaves only ``step_N.tmp``:
+    invisible to ``all_steps``/``latest_step``, swept by ``_gc``;
+  * a step directory missing its ``COMMIT`` marker (crash between file
+    writes and rename on a filesystem that reordered them, or a
+    half-copied backup) is torn: excluded everywhere, swept by ``_gc``;
+  * bytes corrupted AFTER commit: ``restore(step=None)`` skips the
+    unreadable checkpoint and falls back to the next-newest;
+  * an explicit-step restore of a torn/corrupt checkpoint raises a clear
+    error instead of returning garbage.
+
+The mid-write kill uses a real subprocess + ``os._exit`` so no python
+cleanup (atexit, buffered flush) can accidentally "finish" the write.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (COMMIT_MARKER, Checkpointer,
+                                         _is_complete, _step_dir)
+
+
+def _state(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.standard_normal((8, 4)).astype(np.float32),
+            "b": rng.standard_normal(4).astype(np.float32)}
+
+
+def _tree_equal(a, b):
+    np.testing.assert_array_equal(np.asarray(a["w"]), np.asarray(b["w"]))
+    np.testing.assert_array_equal(np.asarray(a["b"]), np.asarray(b["b"]))
+
+
+# ---------------------------------------------------------------------------
+# torn directories are invisible and swept
+# ---------------------------------------------------------------------------
+
+
+def test_commit_marker_written(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    path = ck.save(_state(), 3)
+    assert os.path.exists(os.path.join(path, COMMIT_MARKER))
+    assert _is_complete(path)
+
+
+def test_missing_marker_is_torn(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(_state(1), 1)
+    ck.save(_state(2), 2)
+    os.remove(os.path.join(_step_dir(str(tmp_path), 2), COMMIT_MARKER))
+    assert ck.all_steps() == [1]
+    assert ck.latest_step() == 1
+    _tree_equal(ck.restore(_state()), _state(1))
+
+
+def test_explicit_restore_of_torn_step_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(_state(), 4)
+    os.remove(os.path.join(_step_dir(str(tmp_path), 4), COMMIT_MARKER))
+    with pytest.raises(FileNotFoundError, match="torn"):
+        ck.restore(_state(), step=4)
+
+
+def test_gc_sweeps_torn_and_stale_dirs(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=3)
+    ck.save(_state(1), 1)
+    # fabricate crash debris: a stale staging dir and a torn step dir
+    os.makedirs(tmp_path / "step_00000007.tmp")
+    os.makedirs(tmp_path / "step_00000005")
+    (tmp_path / "step_00000005" / "manifest.json").write_text("{}")
+    ck.save(_state(2), 2)  # save triggers _gc
+    names = set(os.listdir(tmp_path))
+    assert "step_00000007.tmp" not in names
+    assert "step_00000005" not in names
+    assert ck.all_steps() == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# writer killed mid-write (real subprocess, os._exit — no cleanup runs)
+# ---------------------------------------------------------------------------
+
+_KILL_CHILD = textwrap.dedent("""
+    import os, sys
+    import numpy as np
+    sys.path.insert(0, %(src)r)
+    from repro.checkpoint import checkpoint as cp
+
+    ck = cp.Checkpointer(%(dir)r)
+    state = {"w": np.ones((8, 4), np.float32)}
+    ck.save(state, 1)                      # a good checkpoint to fall back to
+
+    die_in = os.environ["DIE_IN"]
+    if die_in == "npz":                    # die while arrays.npz streams out
+        real_savez = np.savez
+        def savez(f, **arrs):
+            real_savez(f, **arrs)
+            f.flush()
+            os._exit(1)
+        np.savez = savez
+    elif die_in == "manifest":             # die before the COMMIT marker
+        import json
+        real_dump = json.dump
+        def dump(obj, f, **kw):
+            real_dump(obj, f, **kw)
+            f.flush()
+            os._exit(1)
+        json.dump = dump
+    ck.save(state, 2)                      # killed mid-write
+    os._exit(0)                            # never reached
+""")
+
+
+@pytest.mark.parametrize("die_in", ["npz", "manifest"])
+def test_kill_mid_save_leaves_no_visible_checkpoint(tmp_path, die_in):
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         _KILL_CHILD % {"src": src, "dir": str(tmp_path)}],
+        env={**os.environ, "DIE_IN": die_in}, timeout=120)
+    assert proc.returncode == 1  # the os._exit fired mid-write
+
+    ck = Checkpointer(str(tmp_path))
+    # the torn write is invisible: step 2 never surfaces anywhere
+    assert ck.all_steps() == [1]
+    assert ck.latest_step() == 1
+    restored = ck.restore({"w": np.zeros((8, 4), np.float32)})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.ones((8, 4), np.float32))
+    # debris (step_2.tmp) exists until gc, then is swept
+    assert any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+    ck.save({"w": np.zeros((8, 4), np.float32)}, 3)
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_kill_mid_async_save(tmp_path):
+    """save_async's background writer dying mid-write must behave
+    identically — simulated by making the manifest serializer raise, so
+    the thread dies after arrays.npz but before the COMMIT marker."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(_state(7), 1)
+    orig = json.dump
+    json.dump = lambda *a, **k: (_ for _ in ()).throw(OSError("disk gone"))
+    try:
+        ck.save_async(_state(8), 2)
+        ck.wait()  # the writer thread died mid-write; join just returns
+    finally:
+        json.dump = orig
+    # the torn step-2 write never surfaces to any reader
+    assert ck.all_steps() == [1]
+    assert ck.latest_step() == 1
+    _tree_equal(ck.restore(_state()), _state(7))
+
+
+# ---------------------------------------------------------------------------
+# corruption AFTER commit: restore falls back
+# ---------------------------------------------------------------------------
+
+
+def test_restore_falls_back_past_corrupt_newest(tmp_path, capsys):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(_state(1), 1)
+    ck.save(_state(2), 2)
+    # corrupt the newest checkpoint's arrays AFTER its commit: truncate
+    npz = os.path.join(_step_dir(str(tmp_path), 2), "arrays.npz")
+    with open(npz, "r+b") as f:
+        f.truncate(os.path.getsize(npz) // 2)
+    restored = ck.restore(_state())
+    _tree_equal(restored, _state(1))  # fell back to step 1
+    assert "falling back" in capsys.readouterr().out
+
+
+def test_restore_explicit_corrupt_step_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(_state(1), 1)
+    ck.save(_state(2), 2)
+    npz = os.path.join(_step_dir(str(tmp_path), 2), "arrays.npz")
+    with open(npz, "wb") as f:
+        f.write(b"not an npz")
+    with pytest.raises(FileNotFoundError, match="no restorable checkpoint"):
+        ck.restore(_state(), step=2)
+    # the non-corrupt sibling is still explicitly restorable
+    _tree_equal(ck.restore(_state(), step=1), _state(1))
+
+
+def test_all_checkpoints_corrupt_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(_state(), 1)
+    npz = os.path.join(_step_dir(str(tmp_path), 1), "arrays.npz")
+    with open(npz, "wb") as f:
+        f.write(b"garbage")
+    with pytest.raises(FileNotFoundError, match="no restorable checkpoint"):
+        ck.restore(_state())

@@ -1,0 +1,154 @@
+"""Property tests on the elastic planner (runtime/elastic.py) — the
+invariants the fault-tolerant supervisor stakes correctness on:
+
+  * ``plan_mesh`` never plans more devices than exist, and always plans
+    WHOLE (data, model) rows;
+  * ``plan_batch``: accum_steps × microbatch == global_batch EXACTLY (the
+    training trajectory is preserved across any scale event) — this pins
+    the regression where a non-divisor ``max_microbatch_per_shard`` made
+    the planner silently drop part of the batch;
+  * ``make_plan``: the model axis NEVER changes across re-plans, the
+    planned device count never exceeds the healthy count, and the derived
+    (accum, microbatch) reproduces the global batch.
+
+Hypothesis fuzzes the space where dev deps are installed (CI); the
+exhaustive small-space sweep below covers the same invariants everywhere.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.runtime.elastic import make_plan, plan_batch, plan_mesh
+
+try:  # hypothesis where installed; the exhaustive sweep always runs
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def _check_mesh_plan(n_devices, mp, pod_size):
+    shape, names = plan_mesh(n_devices, model_parallel=mp,
+                             pod_size=pod_size)
+    assert len(shape) == len(names)
+    assert names[-1] == "model" and shape[-1] == mp
+    used = int(np.prod(shape))
+    assert used <= n_devices                      # never over-subscribes
+    assert used % mp == 0                         # whole (data, model) rows
+    assert all(s >= 1 for s in shape)
+    return shape, names
+
+
+def _check_batch_plan(global_batch, dp, cap):
+    accum, micro = plan_batch(global_batch, dp,
+                              max_microbatch_per_shard=cap)
+    assert accum >= 1 and micro >= 1
+    assert accum * micro == global_batch          # EXACT, never approximate
+    assert micro % dp == 0                        # whole per-shard slices
+    assert micro // dp <= max(1, cap)             # respects the memory cap
+    return accum, micro
+
+
+def _check_full_plan(n_devices, mp, global_batch, cap):
+    p = make_plan(n_devices, model_parallel=mp, global_batch=global_batch,
+                  max_microbatch_per_shard=cap)
+    assert p.n_devices <= n_devices
+    assert p.mesh_shape[-1] == mp                 # model axis NEVER changes
+    assert p.accum_steps * p.microbatch == global_batch
+    dp = p.n_devices // mp
+    assert global_batch % dp == 0                 # planner rounded dp down
+    assert p.microbatch % dp == 0
+    return p
+
+
+# ---------------------------------------------------------------------------
+# exhaustive small-space sweep (always runs)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_mesh_sweep():
+    for n in range(1, 65):
+        for mp in (1, 2, 4, 8):
+            if n < mp:
+                continue
+            for pod in (None, 2, 4, 16):
+                _check_mesh_plan(n, mp, pod)
+
+
+def test_plan_batch_sweep():
+    for batch in range(1, 49):
+        for dp in range(1, batch + 1):
+            if batch % dp:
+                continue
+            for cap in (1, 2, 3, 4, 7, 64):
+                _check_batch_plan(batch, dp, cap)
+
+
+def test_make_plan_sweep():
+    for n, mp, batch, cap in itertools.product(
+            range(1, 33), (1, 2, 4), (1, 4, 6, 8, 24, 36), (1, 2, 4, 8)):
+        if n < mp:
+            continue
+        _check_full_plan(n, mp, batch, cap)
+
+
+def test_plan_batch_non_divisor_cap_regression():
+    """per_shard=6 with cap=4 must NOT plan accum=1 × micro=4·dp (that
+    silently dropped 2/3 of the global batch); the planner walks the cap
+    down to the largest divisor."""
+    assert plan_batch(24, 4, max_microbatch_per_shard=4) == (2, 12)
+    assert plan_batch(24, 4, max_microbatch_per_shard=6) == (1, 24)
+    assert plan_batch(14, 2, max_microbatch_per_shard=4) == (7, 2)
+
+
+def test_shrink_preserves_global_batch_exactly():
+    """The drill scenario: dp=8 → dp=4 at fixed mp, global batch 8 — the
+    re-plan must double accumulation, not halve the batch."""
+    before = make_plan(8, model_parallel=1, global_batch=8,
+                       max_microbatch_per_shard=1)
+    after = make_plan(4, model_parallel=1, global_batch=8,
+                      max_microbatch_per_shard=1)
+    assert before.accum_steps * before.microbatch == 8
+    assert after.accum_steps * after.microbatch == 8
+    assert after.mesh_shape == (4, 1)
+    assert after.accum_steps == 2 * before.accum_steps
+
+
+def test_model_axis_fixed_across_shrinks():
+    for mp in (1, 2, 4):
+        plans = [make_plan(n, model_parallel=mp, global_batch=16,
+                           max_microbatch_per_shard=2)
+                 for n in range(mp, 33) if n >= mp]
+        assert {p.mesh_shape[-1] for p in plans} == {mp}
+        assert {p.axis_names[-1] for p in plans} == {"model"}
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzz (runs where dev deps are installed)
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(1, 4096), st.sampled_from([1, 2, 4, 8, 16]),
+           st.sampled_from([None, 2, 4, 16, 256]))
+    def test_plan_mesh_fuzz(n, mp, pod):
+        if n < mp:
+            n = mp
+        _check_mesh_plan(n, mp, pod)
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(1, 4096), st.integers(1, 64), st.integers(1, 128))
+    def test_plan_batch_fuzz(batch, dp, cap):
+        if batch % dp:
+            batch = dp * max(1, batch // dp)
+        _check_batch_plan(batch, dp, cap)
+
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(1, 512), st.sampled_from([1, 2, 4, 8]),
+           st.integers(1, 512), st.integers(1, 64))
+    def test_make_plan_fuzz(n, mp, batch, cap):
+        if n < mp:
+            n = mp
+        _check_full_plan(n, mp, batch, cap)
